@@ -1,0 +1,29 @@
+"""Figure 1 / Figure 4 reproduction: accuracy vs expensive-call budget Q for
+Bi-metric (ours) / Bi-metric-baseline (re-rank) / Single-metric."""
+from __future__ import annotations
+
+from benchmarks.common import Setup, emit
+
+QUOTAS = (32, 64, 128, 256, 512, 1024)
+METHODS = ("bimetric", "rerank", "single")
+
+
+def run(setup: Setup | None = None, quotas=QUOTAS) -> dict:
+    setup = setup or Setup()
+    out = {}
+    for method in METHODS:
+        for q in quotas:
+            rec, ndcg, wall, calls = setup.run(method, q)
+            us = wall * 1e6 / max(calls, 1) / setup.data.queries_d.shape[0]
+            emit(f"fig1/{method}/Q={q}", us,
+                 f"ndcg@10={ndcg:.4f};recall@10={rec:.4f};D_calls={calls}")
+            out[(method, q)] = (rec, ndcg)
+    # headline check (paper: ours dominates re-rank on nearly all budgets)
+    wins = sum(out[("bimetric", q)][1] >= out[("rerank", q)][1] - 1e-9
+               for q in quotas)
+    emit("fig1/bimetric_wins_frac", 0.0, f"{wins}/{len(quotas)}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

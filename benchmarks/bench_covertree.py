@@ -1,0 +1,39 @@
+"""Theorem B.3 instantiation: Cover Tree built on d (T=C), searched with D —
+expensive-call counts vs accuracy, next to the DiskANN instantiation."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Setup, emit
+from repro.core import covertree
+
+
+def run() -> None:
+    setup = Setup(n=2048, n_queries=32)
+    x_d = np.asarray(setup.data.corpus_d, np.float64)
+    x_D = np.asarray(setup.data.corpus_D, np.float64)
+    C = min(setup.data.c_estimate, 8.0)
+    tree = covertree.build(x_d, T=C)
+    emit("covertree/build", 0.0, f"levels={tree.depth};T={C:.2f}")
+    qs = np.asarray(setup.data.queries_D, np.float64)
+    true = np.asarray(setup.true_ids)
+    for eps in (1.0, 0.5, 0.25):
+        recalls, calls_all = [], []
+        for qi in range(qs.shape[0]):
+            ids, dists, calls = covertree.search(
+                tree, lambda i, q=qs[qi]: np.linalg.norm(x_D[i] - q, axis=-1),
+                eps=eps, k=10)
+            recalls.append(len(set(ids.tolist()) & set(true[qi].tolist())) / 10)
+            calls_all.append(calls)
+        emit(f"covertree/eps={eps}", 0.0,
+             f"recall@10={np.mean(recalls):.4f};"
+             f"mean_D_calls={np.mean(calls_all):.0f};n={setup.n}")
+    # DiskANN bi-metric at the cover tree's budget, for comparison
+    budget = int(np.mean(calls_all))
+    rec, ndcg, _, _ = setup.run("bimetric", budget)
+    emit(f"covertree/diskann_at_same_budget/Q={budget}", 0.0,
+         f"recall@10={rec:.4f}")
+
+
+if __name__ == "__main__":
+    run()

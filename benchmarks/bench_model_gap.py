@@ -1,0 +1,26 @@
+"""Figure 2 / Table 1 reproduction: the bi-metric advantage as a function of
+the proxy model's quality (bge-micro / gte-small / bge-base analogues with
+measured empirical C)."""
+from __future__ import annotations
+
+from benchmarks.common import Setup, emit
+
+QUOTAS = (64, 256)
+TIERS = ("bge-micro-like", "gte-small-like", "bge-base-like")
+
+
+def run() -> None:
+    for tier in TIERS:
+        setup = Setup(quality=tier, n=4096, n_queries=48)
+        emit(f"fig2/{tier}/empirical_C", 0.0,
+             f"C={setup.data.c_estimate:.2f};index_build_s={setup.build_s:.1f}")
+        for q in QUOTAS:
+            rb, nb, wb, _ = setup.run("bimetric", q)
+            rr, nr, wr, _ = setup.run("rerank", q)
+            emit(f"fig2/{tier}/Q={q}", wb * 1e6 / q,
+                 f"bimetric_ndcg={nb:.4f};rerank_ndcg={nr:.4f};"
+                 f"advantage={nb - nr:+.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Search-engine efficiency: µs per beam step / per query (jitted, CPU), and
+kernel-vs-oracle microbenches (interpret mode measures correctness path; on
+TPU the Pallas kernels replace the XLA fallbacks)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Setup, emit
+from repro.core import distances
+from repro.core.beam import greedy_search
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> None:
+    setup = Setup(n=4096, n_queries=32)
+    em = distances.EmbeddingMetric(setup.data.corpus_d)
+
+    def search_batch(queries):
+        def one(q):
+            r = greedy_search(
+                lambda ids: em.dists(q, ids), setup.index_d.adjacency,
+                jnp.array([setup.index_d.medoid], jnp.int32),
+                n_points=setup.n, beam_width=32, pool_size=32, max_steps=128)
+            return r.pool_ids[:10], r.n_calls
+
+        return jax.vmap(one)(queries)
+
+    jfn = jax.jit(search_batch)
+    wall = _time(jfn, setup.data.queries_d)
+    ids, calls = jfn(setup.data.queries_d)
+    per_q = wall / setup.data.queries_d.shape[0]
+    per_call = wall / float(np.asarray(calls).sum())
+    emit("perf/query_latency", per_q * 1e6, f"us_per_query;beam=32")
+    emit("perf/distance_call", per_call * 1e6,
+         f"us_per_d_call;mean_calls={float(np.asarray(calls).mean()):.0f}")
+
+    # kernel micro-benches (XLA path = production CPU path; pallas path is
+    # interpret-mode, correctness-only on CPU)
+    corpus = setup.data.corpus_d
+    qs = setup.data.queries_d
+    idsb = jax.random.randint(jax.random.PRNGKey(0), (32, 24), 0, setup.n)
+    f_x = jax.jit(lambda c, q, i: ops.gather_l2(c, q, i))
+    emit("perf/gather_l2_xla", _time(f_x, corpus, qs, idsb) * 1e6 / 32,
+         "us_per_query_row")
+    bi = jax.random.randint(jax.random.PRNGKey(1), (32, 32), 0, setup.n)
+    bd = jax.random.uniform(jax.random.PRNGKey(2), (32, 32))
+    cd = jax.random.uniform(jax.random.PRNGKey(3), (32, 24))
+    f_m = jax.jit(lambda a, b, c, d: ops.beam_merge_topk(a, b, c, d))
+    emit("perf/beam_merge_xla", _time(f_m, bi, bd, idsb, cd) * 1e6 / 32,
+         "us_per_query_row")
+
+
+if __name__ == "__main__":
+    run()

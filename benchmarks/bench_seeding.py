@@ -1,0 +1,26 @@
+"""Figure 3 reproduction: stage-2 seeding ablation — default entry point
+vs top-1 vs top-100 vs top-Q/2 stage-1 seeds."""
+from __future__ import annotations
+
+from benchmarks.common import Setup, emit
+
+QUOTAS = (128, 512)
+
+
+def run(setup: Setup | None = None) -> None:
+    setup = setup or Setup(n=4096, n_queries=48)
+    for q in QUOTAS:
+        variants = {
+            "default": dict(use_stage1=False),
+            "top1": dict(n_seeds=1),
+            "top100": dict(n_seeds=min(100, q)),
+            "topQ/2": dict(n_seeds=max(1, q // 2)),
+        }
+        for name, kw in variants.items():
+            rec, ndcg, wall, calls = setup.run("bimetric", q, **kw)
+            emit(f"fig3/seed={name}/Q={q}", wall * 1e6 / max(calls, 1),
+                 f"ndcg@10={ndcg:.4f};recall@10={rec:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Table 1 analogue: the tower pairs available to the bi-metric system, with
+parameter counts and embedding dims (computed from the actual configs)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import ARCHS, EXTRA_ARCHS, get_arch
+
+
+def _count(spec) -> tuple[int, int]:
+    cfg = spec.make_config(False)
+    abstract = jax.eval_shape(
+        lambda k: spec.init_params(k, cfg), jax.random.PRNGKey(0))
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(abstract))
+    return n, getattr(cfg, "embed_dim", 0)
+
+
+def run() -> None:
+    for name in ["qwen3-0.6b", "granite-20b", "deepseek-coder-33b",
+                 "granite-moe-3b-a800m", "deepseek-v3-671b",
+                 "sfr-mistral-7b"]:
+        n, ed = _count(get_arch(name))
+        emit(f"table1/{name}", 0.0, f"params={n/1e9:.3f}B;embed_dim={ed}")
+
+
+if __name__ == "__main__":
+    run()

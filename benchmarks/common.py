@@ -1,0 +1,82 @@
+"""Shared benchmark setup: synthetic bi-metric corpora at paper-like regimes.
+
+All benchmarks print ``name,us_per_call,derived`` CSV rows (harness contract):
+``us_per_call`` is wall-µs per expensive-metric call (or per op for kernel
+benches); ``derived`` carries the figure's metric (NDCG/recall/etc.).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import bimetric, distances, metrics, vamana  # noqa: E402
+from repro.data.synthetic import make_dataset, proxy_quality_sweep  # noqa: E402
+
+INDEX_CFG = vamana.VamanaConfig(
+    max_degree=24, l_build=32, alpha=1.2, pool_size=64, rev_candidates=24,
+    build_batch=1024, n_rounds=2,
+)
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+class Setup:
+    def __init__(self, *, n=8192, n_queries=64, dim_D=96, quality="bge-micro-like",
+                 seed=0, index_cfg=INDEX_CFG):
+        kw = proxy_quality_sweep(quality)
+        self.data = make_dataset(n=n, n_queries=n_queries, dim_D=dim_D,
+                                 seed=seed, **kw)
+        self.n = n
+        self.quality = quality
+        t0 = time.time()
+        self.index_d = vamana.build(self.data.corpus_d, index_cfg)
+        self.build_s = time.time() - t0
+        self.em_d = distances.EmbeddingMetric(self.data.corpus_d)
+        self.em_D = distances.EmbeddingMetric(self.data.corpus_D)
+        self.true_ids, _ = self.em_D.brute_force(self.data.queries_D, 10)
+        self._index_D = None
+
+    @property
+    def index_D(self):
+        """Single-metric baseline index (built with D; build calls ignored
+        per the paper's accounting)."""
+        if self._index_D is None:
+            self._index_D = vamana.build(self.data.corpus_D, INDEX_CFG)
+        return self._index_D
+
+    def run(self, method: str, quota: int, **kw):
+        """-> (recall@10, ndcg@10, wall seconds, max D calls)."""
+        t0 = time.time()
+        if method == "bimetric":
+            res = bimetric.bimetric_search(
+                lambda q, i: self.em_d.dists(q, i),
+                lambda q, i: self.em_D.dists(q, i),
+                self.index_d, self.data.queries_d, self.data.queries_D,
+                n_points=self.n, quota=quota, k=10, **kw)
+            ids, calls = res.ids, res.D_calls
+        elif method == "rerank":
+            res = bimetric.rerank_search(
+                lambda q, i: self.em_d.dists(q, i),
+                lambda q, i: self.em_D.dists(q, i),
+                self.index_d, self.data.queries_d, self.data.queries_D,
+                n_points=self.n, quota=quota, k=10)
+            ids, calls = res.ids, res.D_calls
+        elif method == "single":
+            ids, _, calls = vamana.search(
+                self.index_D, self.data.corpus_D, self.data.queries_D,
+                k=10, beam_width=max(16, min(quota, 128)), quota=quota)
+        else:
+            raise ValueError(method)
+        jax.block_until_ready(ids)
+        wall = time.time() - t0
+        rec = float(metrics.recall_at_k(ids, self.true_ids).mean())
+        ndcg = float(metrics.ndcg_at_k(ids, self.true_ids).mean())
+        return rec, ndcg, wall, int(np.asarray(calls).max())

@@ -1,0 +1,43 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Each row: ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    from benchmarks import (bench_bimetric, bench_covertree, bench_model_gap,
+                            bench_search_perf, bench_seeding, bench_table1)
+
+    benches = [
+        ("table1", bench_table1.run),
+        ("fig1", bench_bimetric.run),
+        ("fig2", bench_model_gap.run),
+        ("fig3", bench_seeding.run),
+        ("covertree", bench_covertree.run),
+        ("perf", bench_search_perf.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in benches:
+        t0 = time.time()
+        try:
+            fn()
+            print(f"{name}/_wall,{(time.time()-t0)*1e6:.0f},seconds="
+                  f"{time.time()-t0:.1f}")
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

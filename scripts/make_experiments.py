@@ -1,0 +1,128 @@
+"""Generate EXPERIMENTS.md §Dry-run + §Roofline from the dryrun JSONs.
+
+MODEL_FLOPS convention: train = 6·N·D (dense) or 6·N_active·D (MoE),
+serve/prefill = 2·N(_active)·D, with D = cell.tokens; decode cells process
+one token per sequence, so their MODEL_FLOPS is parameter-bound while the
+compiled FLOPs are cache-attention-bound — the ratio column makes that
+visible rather than hiding it.
+"""
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_arch
+
+PEAK = dict(flops=197e12, hbm=819e9, link=50e9)
+
+
+def n_params(arch: str) -> tuple[float, float]:
+    spec = get_arch(arch)
+    cfg = spec.make_config(False)
+    abstract = jax.eval_shape(lambda k: spec.init_params(k, cfg),
+                              jax.random.PRNGKey(0))
+    total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(abstract))
+    active = total
+    if getattr(cfg, "moe", False):
+        n_moe_layers = cfg.n_layers - cfg.first_dense
+        expert_p = n_moe_layers * cfg.n_experts * 3 * cfg.d_model * cfg.moe_d_ff
+        active = total - expert_p * (1 - cfg.top_k / cfg.n_experts)
+    return float(total), float(active)
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return {}
+
+
+def fmt(x, digits=3):
+    if x == 0:
+        return "0"
+    if x < 1e-3 or x >= 1e5:
+        return f"{x:.2e}"
+    return f"{x:.{digits}g}"
+
+
+def main(single_path, multi_path, out_path):
+    single = load(single_path)
+    multi = load(multi_path)
+    counts = {a: n_params(a) for a in ARCHS}
+
+    lines = []
+    lines.append("## §Dry-run\n")
+    lines.append(
+        "Every (architecture × shape) cell lowered **and compiled** with "
+        "`jax.jit(step).lower(...).compile()` on the single-pod mesh "
+        "(16×16 = 256 chips, axes data×model) and the multi-pod mesh "
+        "(2×16×16 = 512 chips, axes pod×data×model). Memory columns are "
+        "per-device from `compiled.memory_analysis()`; `fits` compares "
+        "args+temp against 16 GB HBM (TPU v5e).\n")
+    for mesh_name, data in (("single-pod 16×16", single),
+                            ("multi-pod 2×16×16", multi)):
+        lines.append(f"\n### {mesh_name}\n")
+        lines.append("| cell | entry | args GB | temp GB | fits | compile s |"
+                     " collectives GB/dev |")
+        lines.append("|---|---|---|---|---|---|---|")
+        for key in sorted(data):
+            v = data[key]
+            if not v.get("ok"):
+                lines.append(f"| {v['cell']} | — | — | — | FAILED | — | — |")
+                continue
+            m = v["memory"]
+            args = m["argument_bytes"] / 1e9
+            temp = m["temp_bytes"] / 1e9
+            fits = "yes" if args + temp <= 16.0 else "**no**"
+            coll = v["hlo_analysis"]["collective_bytes_per_device"] / 1e9
+            lines.append(
+                f"| {v['cell']} | {v['entry']} | {args:.2f} | {temp:.2f} | "
+                f"{fits} | {v['t_compile_s']:.0f} | {coll:.1f} |")
+
+    lines.append("\n## §Roofline\n")
+    lines.append(
+        "Per-chip roofline terms from the trip-count-corrected HLO analysis "
+        "(launch/hlo_analysis.py) of the **single-pod** compile: "
+        "compute = dot-FLOPs / 197 TFLOP/s bf16; memory = bytes at fusion "
+        "boundaries / 819 GB/s (two models: `mem⁺` = CPU-HLO fusion-boundary "
+        "upper bound, `mem` = TPU-like every-buffer-once lower bound — the "
+        "bottleneck/fraction columns use `mem`); collective = collective op "
+        "output bytes / 50 GB/s per ICI link. MODEL_FLOPS = 6·N(_active)·D "
+        "(train) or 2·N(_active)·D (serve), per chip. `useful` = "
+        "MODEL_FLOPS / compiled dot-FLOPs (catches remat/redundant "
+        "compute; decode cells are attention-dominated so the ratio is "
+        "structurally small there).\n")
+    lines.append("| cell | compute s | mem s | mem⁺ s | coll s | bottleneck |"
+                 " roofline frac | useful |")
+    lines.append("|---|---|---|---|---|---|---|---|")
+    notes = []
+    for key in sorted(single):
+        v = single[key]
+        if not v.get("ok"):
+            continue
+        r = v["roofline"]
+        an = v["hlo_analysis"]
+        total, active = counts[v["arch"]]
+        n = active
+        mult = 6.0 if v["entry"] == "train" else 2.0
+        chips = v["n_chips"]
+        model_flops = mult * n * v["tokens"] / chips
+        useful = model_flops / max(an["dot_flops_per_device"], 1.0)
+        lines.append(
+            f"| {v['cell']} | {fmt(r['compute_s'])} | "
+            f"{fmt(r['memory_fused_s'])} | {fmt(r['memory_s'])} | "
+            f"{fmt(r['collective_s'])} | {r['bottleneck']} | "
+            f"{r['roofline_fraction']:.3f} | {useful:.2f} |")
+    text = "\n".join(lines) + "\n"
+    with open(out_path, "w") as f:
+        f.write(text)
+    print(f"wrote {out_path} ({len(lines)} lines)")
+
+
+if __name__ == "__main__":
+    main("results/dryrun_single.json", "results/dryrun_multi.json",
+         "results/experiments_tables.md")

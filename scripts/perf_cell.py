@@ -1,0 +1,108 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Perf-iteration harness: compile one cell with knob overrides, print the
+roofline terms. Used by the §Perf hypothesis→change→measure loop.
+
+  python scripts/perf_cell.py --arch granite-20b --shape train_4k \
+      [--multi-pod] [--zero1] [--no-sp] [--ce-chunk N] [--block-kv N]
+      [--capacity-factor F] [--moe-groups N] [--cand-pad]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--no-sp", action="store_true")
+    ap.add_argument("--ce-chunk", type=int, default=None)
+    ap.add_argument("--block-kv", type=int, default=None)
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--moe-groups", type=int, default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--log", default="results/perf_log.json")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_arch
+    from repro.distributed import sharding as shr
+    from repro.launch import hlo_analysis as H
+    from repro.launch.mesh import make_production_mesh
+
+    if args.zero1:
+        shr.ZERO_STAGE = 1
+
+    spec = get_arch(args.arch)
+    cfg = spec.make_config(False)
+    overrides = {}
+    if args.no_sp:
+        overrides["seq_parallel"] = False
+    if args.ce_chunk is not None:
+        overrides["ce_chunk"] = args.ce_chunk
+    if args.block_kv is not None:
+        overrides["block_kv"] = args.block_kv
+    if args.capacity_factor is not None:
+        overrides["capacity_factor"] = args.capacity_factor
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    if args.moe_groups is not None:
+        import repro.models.moe as moe_mod
+        # thread through MoEConfig default by monkeypatching the cfg builder
+        orig = cfg.moe_cfg
+        cfg = dataclasses.replace(cfg)
+        object.__setattr__(cfg, "_moe_groups", args.moe_groups)
+        # MoEConfig n_groups flows from TransformerConfig.moe_cfg — patch:
+        import repro.models.transformer as T
+        old_moe_cfg = T.TransformerConfig.moe_cfg
+        def moe_cfg(self):
+            c = old_moe_cfg(self)
+            return c._replace(n_groups=args.moe_groups)
+        T.TransformerConfig.moe_cfg = moe_cfg
+
+    cell = spec.build_cell(cfg, args.shape)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    t0 = time.time()
+    cell_args = cell.abstract_args(mesh)
+    dp = (shr.all_axes(mesh) if getattr(cell, "act_axes", "dp") == "all"
+          else shr.batch_axes(mesh))
+    out_sh = cell.out_shardings(cell_args) if cell.out_shardings else None
+    with mesh, shr.activation_mesh(mesh, dp):
+        compiled = jax.jit(cell.fn, donate_argnums=cell.donate,
+                           out_shardings=out_sh).lower(*cell_args).compile()
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+    an = H.analyze(hlo)
+    terms = H.roofline_terms(an)
+    rec = {
+        "cell": f"{args.arch}/{args.shape}",
+        "mesh": "multi" if args.multi_pod else "single",
+        "tag": args.tag or "baseline",
+        "knobs": {k: v for k, v in vars(args).items()
+                  if k not in ("arch", "shape", "tag", "log") and v},
+        "temp_gb": mem.temp_size_in_bytes / 1e9,
+        "args_gb": mem.argument_size_in_bytes / 1e9,
+        "compile_s": round(time.time() - t0, 1),
+        **{k: v for k, v in an.items() if isinstance(v, float)},
+        **terms,
+    }
+    print(json.dumps(rec, indent=1))
+    try:
+        data = json.load(open(args.log))
+    except (FileNotFoundError, json.JSONDecodeError):
+        data = []
+    data.append(rec)
+    json.dump(data, open(args.log, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

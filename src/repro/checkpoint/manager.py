@@ -1,0 +1,172 @@
+"""Fault-tolerant checkpointing: atomic, async, elastic-reshard on restore.
+
+Layout (one directory per step):
+
+    <dir>/step_000042.tmp/   — written first
+        manifest.json        — step, config hash, mesh shape, leaf index
+        arrays.npz           — all leaves, keyed by flattened tree path
+    <dir>/step_000042/       — atomic rename after fsync (crash-safe commit)
+
+Restore is *mesh-agnostic*: leaves are loaded as host arrays and re-placed
+with whatever shardings the (possibly different) current mesh dictates —
+this is the elastic-scaling path: a job checkpointed on N pods restarts on
+M pods by re-sharding the same logical arrays. Async saves run on a worker
+thread so the step loop never blocks on I/O.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def config_hash(obj: Any) -> str:
+    return hashlib.sha256(repr(obj).encode()).hexdigest()[:16]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 config: Any = None):
+        self.directory = directory
+        self.keep = keep
+        self.config_hash = config_hash(config) if config is not None else None
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    # ------------------------------------------------------------------ save
+    def _write(self, step: int, host_leaves: dict[str, np.ndarray],
+               extra: dict) -> None:
+        try:
+            name = f"step_{step:08d}"
+            tmp = os.path.join(self.directory, name + ".tmp")
+            final = os.path.join(self.directory, name)
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            np.savez(os.path.join(tmp, "arrays.npz"), **host_leaves)
+            manifest = {
+                "step": step,
+                "config_hash": self.config_hash,
+                "leaves": sorted(host_leaves.keys()),
+                **extra,
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # atomic commit
+            self._gc()
+        except BaseException as e:  # surfaced on next wait()
+            self._error = e
+
+    def save(self, step: int, tree: Pytree, *, extra: dict | None = None,
+             async_: bool = True) -> None:
+        self.wait()
+        leaves_p = jax.tree_util.tree_flatten_with_path(tree)[0]
+        host = {}
+        for path, leaf in leaves_p:
+            arr = np.asarray(jax.device_get(leaf))
+            if arr.dtype.name in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
+                arr = arr.astype(np.float32)  # lossless widening for npz
+            host[_path_str(path)] = arr
+        if async_:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, extra or {}), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, host, extra or {})
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.directory, d, "manifest.json")):
+                    out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like: Pytree, *, step: int | None = None,
+                sharding_for: Callable[[str, np.ndarray], Any] | None = None,
+                strict_config: bool = True) -> tuple[Pytree, dict]:
+        """Restore into the structure of ``like`` (a pytree of arrays or
+        ShapeDtypeStructs). ``sharding_for(path, array)`` may return a
+        Sharding to place each leaf on the *current* mesh (elastic reshard);
+        default is plain device_put.
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        if strict_config and self.config_hash and manifest.get("config_hash"):
+            if manifest["config_hash"] != self.config_hash:
+                raise ValueError(
+                    "checkpoint config hash mismatch: "
+                    f"{manifest['config_hash']} != {self.config_hash}"
+                )
+        data = np.load(os.path.join(d, "arrays.npz"))
+        leaves_p, treedef = jax.tree_util.tree_flatten_with_path(like)
+        out = []
+        for path, leaf in leaves_p:
+            key = _path_str(path)
+            if key not in data:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            arr = data[key]
+            want_dtype = leaf.dtype
+            if arr.shape != tuple(leaf.shape):
+                raise ValueError(
+                    f"{key}: checkpoint shape {arr.shape} != expected {leaf.shape}"
+                )
+            arr = jnp.asarray(arr).astype(want_dtype)
+            if sharding_for is not None:
+                out.append(jax.device_put(arr, sharding_for(key, arr)))
+            else:
+                out.append(jnp.asarray(arr))
+        return treedef.unflatten(out), manifest

@@ -1,0 +1,82 @@
+"""bert4rec [arXiv:1904.06690] — bidirectional sequence model, embed 64,
+2 blocks × 2 heads, seq 200, masked-item training (40 masked positions),
+item vocab 65,536 (ML-25M scale, 16-divisible).
+
+Encoder-only: no decode shapes exist in the recsys shape set (nothing to
+skip). Retrieval is factorizable (last-hidden · item embedding), so bert4rec
+doubles as the *cheap* proxy d for the recsys bi-metric demo."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import common
+from repro.configs.recsys_common import cand_ids_abs, make_recsys_arch
+from repro.models import recsys as R
+
+
+def full() -> R.Bert4RecConfig:
+    return R.Bert4RecConfig(name="bert4rec", vocab=65_536, embed_dim=64,
+                            seq_len=200, n_blocks=2, n_heads=2, n_masked=40)
+
+
+def smoke() -> R.Bert4RecConfig:
+    return R.Bert4RecConfig(name="bert4rec-smoke", vocab=512, embed_dim=16,
+                            seq_len=16, n_blocks=2, n_heads=2, n_masked=4)
+
+
+def _batch_abs(cfg, batch, mesh, bspec):
+    return {
+        "items": common.sds((batch, cfg.seq_len), jnp.int32, mesh,
+                            P(bspec[0], None)),
+        "mask_pos": common.sds((batch, cfg.n_masked), jnp.int32, mesh,
+                               P(bspec[0], None)),
+        "mask_labels": common.sds((batch, cfg.n_masked), jnp.int32, mesh,
+                                  P(bspec[0], None)),
+    }
+
+
+def _serve(params, batch, cfg, chunk: int = 8192):
+    """Next-item top-10 over the catalogue for a batch of users.
+
+    Two-stage top-k: per-vocab-shard top-10 (runs sharded over "model"),
+    then a tiny global re-top-k — the full (B, V) logits never exist on one
+    device. Bulk batches additionally stream in row chunks so the live
+    logits block is bounded."""
+    from repro.distributed.sharding import constrain_axis, constrain_batch
+
+    def score_rows(items):
+        h = R.bert4rec_encode(params, items, cfg)[:, -1]  # (b, D)
+        b = h.shape[0]
+        v = params["item_emb"].shape[0]
+        n_shard = 16 if v % 16 == 0 else 1
+        shard_v = v // n_shard
+        l3 = (h @ params["item_emb"].T).reshape(b, n_shard, shard_v)
+        l3 = constrain_axis(l3, 1)  # catalogue shards stay on "model"
+        vals, idx = jax.lax.top_k(l3, 10)  # (b, n_shard, 10) — sharded top-k
+        idx = idx + (jnp.arange(n_shard) * shard_v)[None, :, None]
+        vals2, pos = jax.lax.top_k(vals.reshape(b, -1), 10)
+        return vals2, jnp.take_along_axis(idx.reshape(b, -1), pos, axis=1)
+
+    items = batch["items"]
+    n = items.shape[0]
+    if n <= chunk or n % chunk:
+        return score_rows(items)
+    ic = items.reshape(n // chunk, chunk, items.shape[1])
+    vals, ids = jax.lax.map(
+        lambda it: score_rows(constrain_batch(it)), ic)
+    return vals.reshape(n, 10), ids.reshape(n, 10)
+
+SPEC = make_recsys_arch(
+    "bert4rec",
+    full_cfg_fn=full, smoke_cfg_fn=smoke,
+    init_fn=lambda key, cfg: R.bert4rec_init(key, cfg),
+    loss_fn=lambda params, batch, cfg: R.bert4rec_loss(params, batch, cfg),
+    serve_fn=_serve,
+    retrieval_fn=lambda params, user, cand, cfg: R.bert4rec_score_candidates(
+        params, user["items"], cand, cfg),
+    batch_abs_fn=_batch_abs,
+    user_abs_fn=lambda cfg, mesh: {
+        "items": common.sds((1, cfg.seq_len), jnp.int32, mesh, P(None, None))
+    },
+    cand_abs_fn=cand_ids_abs,
+)

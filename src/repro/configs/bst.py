@@ -1,0 +1,55 @@
+"""bst [arXiv:1905.06874] — Behavior Sequence Transformer (Alibaba).
+embed 32, seq 20, 1 block × 8 heads, MLP 1024-512-256, item vocab 2^20.
+
+Role: expensive pair scorer D (target is attended jointly with the history —
+non-factorizable, so retrieval under a budget is the paper's exact regime)."""
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import common
+from repro.configs.recsys_common import cand_ids_abs, make_recsys_arch
+from repro.models import recsys as R
+
+
+def full() -> R.BSTConfig:
+    return R.BSTConfig(name="bst", vocab=1_048_576, embed_dim=32, seq_len=20,
+                       n_blocks=1, n_heads=8, mlp_dims=(1024, 512, 256))
+
+
+def smoke() -> R.BSTConfig:
+    return R.BSTConfig(name="bst-smoke", vocab=512, embed_dim=16, seq_len=8,
+                       n_blocks=1, n_heads=4, mlp_dims=(64, 32))
+
+
+def _batch_abs(cfg, batch, mesh, bspec):
+    return {
+        "hist": common.sds((batch, cfg.seq_len), jnp.int32, mesh,
+                           P(bspec[0], None)),
+        "target": common.sds((batch,), jnp.int32, mesh, bspec),
+        "label": common.sds((batch,), jnp.float32, mesh, bspec),
+    }
+
+
+def _loss(params, batch, cfg):
+    return R.bst_loss(params, batch, cfg)
+
+
+def _serve(params, batch, cfg):
+    return R.bst_forward(params, batch["hist"], batch["target"], cfg)
+
+
+def _retrieval(params, user, cand, cfg):
+    return R.bst_score_candidates(params, user["hist"], cand, cfg)
+
+
+SPEC = make_recsys_arch(
+    "bst",
+    full_cfg_fn=full, smoke_cfg_fn=smoke,
+    init_fn=lambda key, cfg: R.bst_init(key, cfg),
+    loss_fn=_loss, serve_fn=_serve, retrieval_fn=_retrieval,
+    batch_abs_fn=_batch_abs,
+    user_abs_fn=lambda cfg, mesh: {
+        "hist": common.sds((1, cfg.seq_len), jnp.int32, mesh, P(None, None))
+    },
+    cand_abs_fn=cand_ids_abs,
+)

@@ -1,0 +1,133 @@
+"""Shared machinery for architecture configs: cells, step builders, specs.
+
+An *arch* module exposes ``SPEC: ArchSpec``. Each of its shapes defines one
+dry-run **cell**: a jittable step function plus allocation-free abstract
+arguments (ShapeDtypeStructs) and their NamedShardings for a given mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shr
+from repro.train.optimizer import AdamWConfig, make_adamw
+
+Pytree = Any
+
+
+def sds(shape, dtype, mesh: Mesh | None = None, spec: P | None = None):
+    if mesh is not None and spec is not None:
+        return jax.ShapeDtypeStruct(shape, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def with_shardings(abstract: Pytree, specs: Pytree, mesh: Mesh) -> Pytree:
+    """Attach NamedShardings to a ShapeDtypeStruct pytree."""
+
+    def one(a, s):
+        return jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                    sharding=NamedSharding(mesh, s))
+
+    return jax.tree.map(one, abstract, specs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+@dataclasses.dataclass
+class CellSpec:
+    """One (arch × shape) dry-run target."""
+
+    name: str  # f"{arch}/{shape}"
+    entry: str  # train | prefill | decode | serve
+    fn: Callable  # jittable step
+    # mesh -> (args pytree of ShapeDtypeStructs WITH shardings, donate_argnums)
+    abstract_args: Callable[[Mesh], tuple]
+    donate: tuple[int, ...] = ()
+    # batch-like dims for MODEL_FLOPS accounting
+    tokens: int = 0  # tokens processed per step (LM) / items scored (recsys)
+    # mesh axes for activation batch constraints ("dp" = pod+data,
+    # "all" = pod+data+model — GNN node/edge data)
+    act_axes: str = "dp"
+    # output shardings: maps abstract args -> out_shardings pytree (None
+    # entries = let XLA choose). Critical for train cells: without it XLA
+    # may materialize the updated optimizer state replicated (f32 grad
+    # all-reduce instead of reduce-scatter).
+    out_shardings: Any = None  # Callable[args_tuple] -> pytree | None
+
+
+def arg_shardings(tree):
+    return jax.tree.map(
+        lambda s: s.sharding, tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+@dataclasses.dataclass
+class ArchSpec:
+    name: str
+    family: str  # lm | gnn | recsys
+    make_config: Callable[[bool], Any]  # smoke -> config
+    shapes: dict[str, dict]  # shape name -> shape kwargs
+    build_cell: Callable[[Any, str], CellSpec]  # (config, shape) -> cell
+    init_params: Callable[[jax.Array, Any], Pytree]
+    n_params: Callable[[Any], int] | None = None
+    n_active_params: Callable[[Any], int] | None = None
+
+    def cells(self, smoke: bool = False):
+        cfg = self.make_config(smoke)
+        return {s: self.build_cell(cfg, s) for s in self.shapes}
+
+    def cell(self, shape: str, smoke: bool = False) -> CellSpec:
+        cfg = self.make_config(smoke)
+        return self.build_cell(cfg, shape)
+
+
+def count_params(abstract: Pytree) -> int:
+    return sum(
+        int(jnp.prod(jnp.array(l.shape))) for l in jax.tree.leaves(abstract)
+    )
+
+
+def abstract_params(init_fn: Callable, cfg) -> Pytree:
+    return jax.eval_shape(partial(init_fn, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: AdamWConfig,
+                    grad_specs_holder: dict | None = None):
+    """Generic fused forward+backward+AdamW step: (params, opt, batch) ->
+    (params, opt, metrics).
+
+    ``grad_specs_holder`` (populated by the cell's abstract_args with
+    {"mesh": Mesh, "specs": param-spec pytree}) pins each gradient, cast to
+    the param dtype, to the *optimizer-shard* layout — which turns XLA's
+    default f32 gradient all-reduce into a bf16 reduce-scatter (ZeRO grad
+    sharding). See EXPERIMENTS.md §Perf.
+    """
+    _, opt_update = make_adamw(opt_cfg)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        if grad_specs_holder and grad_specs_holder.get("mesh") is not None:
+            from jax.sharding import NamedSharding
+
+            mesh = grad_specs_holder["mesh"]
+            specs = grad_specs_holder["specs"]
+            grads = jax.tree.map(
+                lambda g, p, s: jax.lax.with_sharding_constraint(
+                    g.astype(p.dtype), NamedSharding(mesh, s)),
+                grads, params, specs)
+        params, opt_state, stats = opt_update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **stats}
+
+    return train_step
+
+
+def abstract_opt_state(opt_cfg: AdamWConfig, params_abs: Pytree) -> Pytree:
+    opt_init, _ = make_adamw(opt_cfg)
+    return jax.eval_shape(opt_init, params_abs)

@@ -1,0 +1,46 @@
+"""din [arXiv:1706.06978] — Deep Interest Network. embed 18, seq 100,
+attention MLP 80-40, head MLP 200-80, item vocab 2^20.
+
+Role: expensive pair scorer D (target attention over the user history)."""
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import common
+from repro.configs.recsys_common import cand_ids_abs, make_recsys_arch
+from repro.models import recsys as R
+
+
+def full() -> R.DINConfig:
+    return R.DINConfig(name="din", vocab=1_048_576, embed_dim=18, seq_len=100,
+                       attn_mlp=(80, 40), mlp_dims=(200, 80))
+
+
+def smoke() -> R.DINConfig:
+    return R.DINConfig(name="din-smoke", vocab=512, embed_dim=8, seq_len=16,
+                       attn_mlp=(16, 8), mlp_dims=(32, 16))
+
+
+def _batch_abs(cfg, batch, mesh, bspec):
+    return {
+        "hist": common.sds((batch, cfg.seq_len), jnp.int32, mesh,
+                           P(bspec[0], None)),
+        "target": common.sds((batch,), jnp.int32, mesh, bspec),
+        "label": common.sds((batch,), jnp.float32, mesh, bspec),
+    }
+
+
+SPEC = make_recsys_arch(
+    "din",
+    full_cfg_fn=full, smoke_cfg_fn=smoke,
+    init_fn=lambda key, cfg: R.din_init(key, cfg),
+    loss_fn=lambda params, batch, cfg: R.din_loss(params, batch, cfg),
+    serve_fn=lambda params, batch, cfg: R.din_forward(
+        params, batch["hist"], batch["target"], cfg),
+    retrieval_fn=lambda params, user, cand, cfg: R.din_score_candidates(
+        params, user["hist"], cand, cfg),
+    batch_abs_fn=_batch_abs,
+    user_abs_fn=lambda cfg, mesh: {
+        "hist": common.sds((1, cfg.seq_len), jnp.int32, mesh, P(None, None))
+    },
+    cand_abs_fn=cand_ids_abs,
+)

@@ -1,0 +1,137 @@
+"""gat-cora [arXiv:1710.10903] — 2L, d_hidden=8, 8 heads, attn aggregator.
+
+Four graph regimes (padded to 512-divisible sizes for even sharding on both
+production meshes; padding edges are -1 and padded nodes are masked):
+
+  full_graph_sm — Cora: 2,708 nodes / 10,556 edges / 1,433 feats (pad 3072/10752)
+  minibatch_lg  — Reddit-scale sampled block: 1,024 seeds × fanout 15·10
+                  -> 169,984-node block (exactly 512-divisible), 602 feats
+  ogb_products  — 2,449,029 nodes / 61,859,140 edges / 100 feats
+                  (pad 2,449,408 / 61,859,840)
+  molecule      — 128 disjoint graphs × 30 nodes / 64 edges, graph-level
+                  classification via segment-mean readout (pad N to 4096)
+
+Weights are tiny -> replicated; node/edge data sharded over every mesh axis.
+The paper's technique does not live *inside* the GNN (see DESIGN.md
+§Arch-applicability): GAT is an embedding producer whose outputs feed the
+bi-metric index (examples/gnn_corpus_search.py)."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import common
+from repro.distributed import sharding as shr
+from repro.models import gnn
+from repro.train.optimizer import AdamWConfig
+
+GNN_SHAPES = {
+    "full_graph_sm": dict(n_nodes=3072, n_edges=10752, d_feat=1433,
+                          n_classes=7, task="node",
+                          true_nodes=2708, true_edges=10556),
+    "minibatch_lg": dict(n_nodes=169984, n_edges=169984, d_feat=602,
+                         n_classes=41, task="node",
+                         true_nodes=232965, true_edges=114615892),
+    "ogb_products": dict(n_nodes=2449408, n_edges=61859840, d_feat=100,
+                         n_classes=47, task="node",
+                         true_nodes=2449029, true_edges=61859140),
+    "molecule": dict(n_nodes=4096, n_edges=8192, d_feat=16, n_classes=2,
+                     task="graph", n_graphs=128,
+                     true_nodes=3840, true_edges=8192),
+}
+
+SMOKE_SHAPES = {
+    k: dict(v, n_nodes=min(v["n_nodes"], 256), n_edges=min(v["n_edges"], 512),
+            d_feat=min(v["d_feat"], 32),
+            n_graphs=min(v.get("n_graphs", 0), 8) or v.get("n_graphs"))
+    for k, v in GNN_SHAPES.items()
+}
+
+
+def graph_loss(params, batch, cfg: gnn.GATConfig, *, task: str,
+               n_graphs: int = 0):
+    if task == "node":
+        return gnn.loss_fn(params, batch, cfg)
+    # graph classification: per-node logits -> segment-mean readout per graph
+    logits = gnn.forward(params, batch["feats"], batch["src"], batch["dst"], cfg)
+    g = jax.ops.segment_sum(logits.astype(jnp.float32), batch["graph_ids"],
+                            num_segments=n_graphs)
+    cnt = jax.ops.segment_sum(jnp.ones(logits.shape[0], jnp.float32),
+                              batch["graph_ids"], num_segments=n_graphs)
+    g = g / jnp.maximum(cnt, 1.0)[:, None]
+    lse = jax.nn.logsumexp(g, axis=-1)
+    gold = jnp.take_along_axis(g, batch["graph_labels"][:, None], axis=-1)[:, 0]
+    loss = (lse - gold).mean()
+    return loss, {"loss": loss}
+
+
+def build_gnn_cell(cfg_dummy, shape_name: str, *, smoke: bool = False,
+                   opt_cfg: AdamWConfig | None = None) -> common.CellSpec:
+    shapes = SMOKE_SHAPES if smoke else GNN_SHAPES
+    info = shapes[shape_name]
+    opt_cfg = opt_cfg or AdamWConfig(weight_decay=0.0)
+    cfg = gnn.GATConfig(
+        name="gat", n_layers=2, d_hidden=8, n_heads=8,
+        d_in=info["d_feat"], n_classes=info["n_classes"],
+    )
+    task = info["task"]
+    n_graphs = info.get("n_graphs") or 0
+    loss = partial(graph_loss, cfg=cfg, task=task, n_graphs=n_graphs)
+    step = common.make_train_step(loss, opt_cfg)
+
+    def abstract_args(mesh: Mesh):
+        p_abs = jax.eval_shape(partial(gnn.init_params, cfg=cfg),
+                               jax.random.PRNGKey(0))
+        p_specs = shr.replicated_specs(p_abs)
+        o_abs = common.abstract_opt_state(opt_cfg, p_abs)
+        o_specs = shr.opt_state_specs(p_specs, o_abs, p_abs)
+        ax = shr.all_axes(mesh)
+        n, e, f = info["n_nodes"], info["n_edges"], info["d_feat"]
+        nspec = P(ax if n % _axprod(mesh, ax) == 0 else None, None)
+        espec = P(ax if e % _axprod(mesh, ax) == 0 else None)
+        b = {
+            "feats": common.sds((n, f), jnp.float32, mesh, nspec),
+            "src": common.sds((e,), jnp.int32, mesh, espec),
+            "dst": common.sds((e,), jnp.int32, mesh, espec),
+            "labels": common.sds((n,), jnp.int32, mesh, P(nspec[0])),
+            "mask": common.sds((n,), jnp.float32, mesh, P(nspec[0])),
+        }
+        if task == "graph":
+            b["graph_ids"] = common.sds((n,), jnp.int32, mesh, P(nspec[0]))
+            b["graph_labels"] = common.sds((n_graphs,), jnp.int32, mesh, P())
+            del b["labels"], b["mask"]
+        return (
+            common.with_shardings(p_abs, p_specs, mesh),
+            common.with_shardings(o_abs, o_specs, mesh),
+            b,
+        )
+
+    return common.CellSpec(
+        name=f"gat-cora/{shape_name}", entry="train", fn=step,
+        abstract_args=abstract_args, donate=(0, 1), tokens=info["n_nodes"],
+        act_axes="all",
+        out_shardings=lambda args: (
+            common.arg_shardings(args[0]), common.arg_shardings(args[1]),
+            None),
+    )
+
+
+def _axprod(mesh, axes):
+    t = 1
+    for a in axes:
+        t *= mesh.shape[a]
+    return t
+
+
+SPEC = common.ArchSpec(
+    name="gat-cora",
+    family="gnn",
+    make_config=lambda smoke=False: gnn.GATConfig(),
+    shapes=GNN_SHAPES,
+    build_cell=lambda cfg, shape: build_gnn_cell(cfg, shape, smoke=False),
+    init_params=lambda key, cfg: gnn.init_params(key, cfg),
+)

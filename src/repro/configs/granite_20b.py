@@ -1,0 +1,27 @@
+"""granite-20b [arXiv:2405.04324; dense code model] — 52L d6144 48H (MQA,
+kv=1) d_ff=24576 vocab=49152, llama-style blocks.
+
+Role: mid-tier expensive tower D."""
+import jax.numpy as jnp
+
+from repro.configs.lm_common import make_lm_arch
+from repro.models.transformer import TransformerConfig
+from repro.train.optimizer import AdamWConfig
+
+
+def full() -> TransformerConfig:
+    return TransformerConfig(
+        name="granite-20b", n_layers=52, d_model=6144, n_heads=48,
+        n_kv_heads=1, head_dim=128, d_ff=24576, vocab=49152,
+        dtype=jnp.bfloat16, remat="full", embed_dim=1024, block_kv=1024,
+    )
+
+
+def smoke() -> TransformerConfig:
+    return TransformerConfig(
+        name="granite-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=1,
+        head_dim=16, d_ff=256, vocab=512, embed_dim=32,
+    )
+
+
+SPEC = make_lm_arch("granite-20b", full, smoke, AdamWConfig())

@@ -1,0 +1,186 @@
+"""LM-family cells: train_4k / prefill_32k / decode_32k / long_500k.
+
+Shape semantics (per assignment):
+  train_4k    — train_step, seq 4096, global batch 256
+  prefill_32k — serve_prefill, seq 32768, global batch 32
+  decode_32k  — serve_step: ONE new token, KV cache of 32768, batch 128
+  long_500k   — serve_step: ONE token, 524288-entry KV cache, batch 1.
+                All five assigned LM archs are full-attention; the decode
+                entry is O(cache), and the cache is sequence-sharded over
+                ("data","model") with a distributed softmax merge — the
+                sub-quadratic path (see DESIGN.md §Arch-applicability).
+
+Sharding: params FSDP×TP (ZeRO-3-equivalent), activations batch-sharded over
+(pod, data); decode caches sharded (batch → dp, seq → model), except
+long_500k where batch=1 → seq over (data, model).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import common
+from repro.distributed import sharding as shr
+from repro.models import transformer as T
+from repro.train.optimizer import AdamWConfig
+
+LM_SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, entry="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, entry="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, entry="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, entry="decode"),
+}
+
+SMOKE_SHAPES = {
+    "train_4k": dict(seq_len=64, global_batch=4, entry="train"),
+    "prefill_32k": dict(seq_len=128, global_batch=2, entry="prefill"),
+    "decode_32k": dict(seq_len=128, global_batch=4, entry="decode"),
+    "long_500k": dict(seq_len=256, global_batch=1, entry="decode"),
+}
+
+
+def _dp(mesh: Mesh):
+    return shr.batch_axes(mesh)
+
+
+def _params_shardings(cfg, mesh):
+    p_abs = common.abstract_params(T.init_params, cfg)
+    fsdp = _dp(mesh) if shr.ZERO_STAGE >= 3 else ()
+    specs = shr.lm_param_specs(p_abs, mesh, fsdp=fsdp)
+    return p_abs, specs
+
+
+def _opt_base_shardings(cfg, mesh, p_abs):
+    """Optimizer states are always fully sharded (ZeRO-1 keeps master/m/v
+    on the fsdp axes even when the working params are TP-only)."""
+    return shr.lm_param_specs(p_abs, mesh, fsdp=_dp(mesh))
+
+
+def _batch_spec(mesh, batch: int):
+    dp = _dp(mesh)
+    total = 1
+    for a in dp:
+        total *= mesh.shape[a]
+    return P(dp if batch % total == 0 else None, None)
+
+
+def _cache_specs(cfg: T.TransformerConfig, mesh: Mesh, batch: int):
+    """KVCache sharding: batch -> dp, seq -> model; if batch==1, seq ->
+    (data, model) so a 512k cache fits (the SP decode path)."""
+    dp = _dp(mesh)
+    total_dp = 1
+    for a in dp:
+        total_dp *= mesh.shape[a]
+    if batch == 1 or batch % total_dp:
+        bspec, sspec = None, ("data", "model")
+    else:
+        bspec, sspec = dp, "model"
+    if cfg.mla:
+        kv = P(None, bspec, sspec, None)
+    else:
+        kv = P(None, bspec, sspec, None, None)
+    return T.KVCache(k=kv, v=kv, length=P())
+
+
+def build_lm_cell(cfg: T.TransformerConfig, shape_name: str,
+                  opt_cfg: AdamWConfig, shapes=None,
+                  arch_name: str = "lm") -> common.CellSpec:
+    info = (shapes or LM_SHAPES)[shape_name]
+    seq, batch, entry = info["seq_len"], info["global_batch"], info["entry"]
+
+    if entry == "train":
+        loss = partial(_lm_loss, cfg=cfg)
+        holder: dict = {}
+        step = common.make_train_step(loss, opt_cfg, grad_specs_holder=holder)
+
+        def abstract_args(mesh):
+            p_abs, p_specs = _params_shardings(cfg, mesh)
+            o_abs = common.abstract_opt_state(opt_cfg, p_abs)
+            opt_base = _opt_base_shardings(cfg, mesh, p_abs)
+            o_specs = shr.opt_state_specs(opt_base, o_abs, p_abs)
+            holder["mesh"] = mesh
+            holder["specs"] = opt_base  # grads live where the opt shards live
+            bspec = _batch_spec(mesh, batch)
+            b_abs = {
+                "tokens": common.sds((batch, seq), jnp.int32, mesh, bspec),
+                "labels": common.sds((batch, seq), jnp.int32, mesh, bspec),
+            }
+            return (
+                common.with_shardings(p_abs, p_specs, mesh),
+                common.with_shardings(o_abs, o_specs, mesh),
+                b_abs,
+            )
+
+        return common.CellSpec(
+            name=f"{arch_name}/{shape_name}", entry="train", fn=step,
+            abstract_args=abstract_args, donate=(0, 1), tokens=batch * seq,
+            out_shardings=lambda args: (
+                common.arg_shardings(args[0]), common.arg_shardings(args[1]),
+                None),
+        )
+
+    if entry == "prefill":
+        def prefill_fn(params, tokens):
+            return T.prefill(params, tokens, cfg)
+
+        def abstract_args(mesh):
+            p_abs, p_specs = _params_shardings(cfg, mesh)
+            bspec = _batch_spec(mesh, batch)
+            toks = common.sds((batch, seq), jnp.int32, mesh, bspec)
+            return (common.with_shardings(p_abs, p_specs, mesh), toks)
+
+        return common.CellSpec(
+            name=f"{arch_name}/{shape_name}", entry="prefill", fn=prefill_fn,
+            abstract_args=abstract_args, tokens=batch * seq,
+        )
+
+    # decode: one token against a `seq`-deep cache
+    def decode_fn(params, tokens, cache):
+        logits, cache = T.decode_step(params, tokens, cache, cfg)
+        return logits, cache
+
+    def abstract_args(mesh):
+        p_abs, p_specs = _params_shardings(cfg, mesh)
+        bspec = _batch_spec(mesh, batch)
+        toks = common.sds((batch, 1), jnp.int32, mesh, bspec)
+        cache_abs = jax.eval_shape(
+            partial(T.init_cache, cfg, batch, seq, length=seq - 1)
+        )
+        c_specs = _cache_specs(cfg, mesh, batch)
+        cache = T.KVCache(
+            k=common.with_shardings(cache_abs.k, c_specs.k, mesh),
+            v=common.with_shardings(cache_abs.v, c_specs.v, mesh),
+            length=common.sds((), jnp.int32, mesh, P()),
+        )
+        return (common.with_shardings(p_abs, p_specs, mesh), toks, cache)
+
+    return common.CellSpec(
+        name=f"{arch_name}/{shape_name}", entry="decode", fn=decode_fn,
+        abstract_args=abstract_args, donate=(2,), tokens=batch,
+        out_shardings=lambda args: (None, common.arg_shardings(args[2])),
+    )
+
+
+def _lm_loss(params, batch, cfg):
+    return T.loss_fn(params, batch, cfg)
+
+
+def make_lm_arch(name: str, full_cfg_fn, smoke_cfg_fn,
+                 opt_cfg: AdamWConfig | None = None) -> common.ArchSpec:
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def build(cfg, shape):
+        shapes = LM_SHAPES if cfg.vocab > 4096 else SMOKE_SHAPES
+        return build_lm_cell(cfg, shape, opt_cfg, shapes=shapes, arch_name=name)
+
+    return common.ArchSpec(
+        name=name,
+        family="lm",
+        make_config=lambda smoke=False: smoke_cfg_fn() if smoke else full_cfg_fn(),
+        shapes=LM_SHAPES,
+        build_cell=build,
+        init_params=lambda key, cfg: T.init_params(key, cfg),
+    )

@@ -1,0 +1,162 @@
+"""RecSys-family cells: train_batch / serve_p99 / serve_bulk / retrieval_cand.
+
+  train_batch    — train_step, batch 65,536
+  serve_p99      — pointwise scoring, batch 512 (online)
+  serve_bulk     — pointwise scoring, batch 262,144 (offline)
+  retrieval_cand — ONE user vs 1,000,000 candidates: batched broadcast
+                   scoring (no loops); candidates sharded over "model"
+                   (1e6 / 16 = 62,500 per shard, exact).
+
+Embedding tables row-sharded over "model" (they are the memory); MLP heads
+small enough to FSDP or replicate; activations batch-sharded over (pod,data).
+
+This family is where the bi-metric framework bites hardest: BST/DIN/xDeepFM
+are non-factorizable pair scorers (the expensive D), and ``retrieval_cand``
+under a D-call budget is exactly the paper's query model — see
+repro/serve/engine.py for the budgeted two-stage integration.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import common
+from repro.distributed import sharding as shr
+from repro.train.optimizer import AdamWConfig
+
+RS_SHAPES = {
+    "train_batch": dict(batch=65536, entry="train"),
+    "serve_p99": dict(batch=512, entry="serve"),
+    "serve_bulk": dict(batch=262144, entry="serve"),
+    "retrieval_cand": dict(batch=1, n_candidates=1_000_000, entry="retrieval"),
+}
+
+SMOKE_SHAPES = {
+    "train_batch": dict(batch=32, entry="train"),
+    "serve_p99": dict(batch=16, entry="serve"),
+    "serve_bulk": dict(batch=64, entry="serve"),
+    "retrieval_cand": dict(batch=1, n_candidates=256, entry="retrieval"),
+}
+
+
+def _dp_spec(mesh: Mesh, batch: int):
+    dp = shr.batch_axes(mesh)
+    total = 1
+    for a in dp:
+        total *= mesh.shape[a]
+    return P(dp if batch % total == 0 else None)
+
+
+def make_recsys_arch(
+    name: str,
+    *,
+    full_cfg_fn,
+    smoke_cfg_fn,
+    init_fn,                      # (key, cfg) -> params
+    loss_fn,                      # (params, batch, cfg) -> (loss, metrics)
+    serve_fn,                     # (params, batch, cfg) -> scores
+    retrieval_fn,                 # (params, user_batch, cand, cfg) -> scores
+    batch_abs_fn,                 # (cfg, batch, mesh, bspec) -> batch SDS dict
+    user_abs_fn,                  # (cfg, mesh) -> user-side SDS dict (B=1)
+    cand_abs_fn,                  # (cfg, n_cand, mesh) -> candidate SDS
+    opt_cfg: AdamWConfig | None = None,
+) -> common.ArchSpec:
+    opt_cfg = opt_cfg or AdamWConfig(weight_decay=0.0)
+
+    def build(cfg, shape_name, smoke=False):
+        shapes = SMOKE_SHAPES if "smoke" in cfg.name else RS_SHAPES
+        info = shapes[shape_name]
+        entry = info["entry"]
+
+        def params_shardings(mesh):
+            p_abs = jax.eval_shape(partial(init_fn, cfg=cfg),
+                                   jax.random.PRNGKey(0))
+            specs = shr.lm_param_specs(p_abs, mesh, fsdp=shr.batch_axes(mesh))
+            return p_abs, specs
+
+        if entry == "train":
+            batch = info["batch"]
+            step = common.make_train_step(partial(loss_fn, cfg=cfg), opt_cfg)
+
+            def abstract_args(mesh):
+                p_abs, p_specs = params_shardings(mesh)
+                o_abs = common.abstract_opt_state(opt_cfg, p_abs)
+                o_specs = shr.opt_state_specs(p_specs, o_abs, p_abs)
+                b = batch_abs_fn(cfg, batch, mesh, _dp_spec(mesh, batch))
+                return (
+                    common.with_shardings(p_abs, p_specs, mesh),
+                    common.with_shardings(o_abs, o_specs, mesh),
+                    b,
+                )
+
+            return common.CellSpec(
+                name=f"{name}/{shape_name}", entry="train", fn=step,
+                abstract_args=abstract_args, donate=(0, 1), tokens=batch,
+                out_shardings=lambda args: (
+                    common.arg_shardings(args[0]),
+                    common.arg_shardings(args[1]), None),
+            )
+
+        if entry == "serve":
+            batch = info["batch"]
+
+            def serve_step(params, batch_):
+                return serve_fn(params, batch_, cfg)
+
+            def abstract_args(mesh):
+                p_abs, p_specs = params_shardings(mesh)
+                b = batch_abs_fn(cfg, batch, mesh, _dp_spec(mesh, batch))
+                b.pop("label", None)
+                b.pop("mask_labels", None)
+                return (common.with_shardings(p_abs, p_specs, mesh), b)
+
+            return common.CellSpec(
+                name=f"{name}/{shape_name}", entry="serve", fn=serve_step,
+                abstract_args=abstract_args, tokens=batch,
+            )
+
+        # retrieval
+        n_cand = info["n_candidates"]
+
+        def retrieval_step(params, user, cand):
+            # pad the candidate sweep to a 512-divisible length so it shards
+            # over every mesh axis (1e6 alone only divides "model"=16 — that
+            # left 16/32× of the mesh idle; see EXPERIMENTS.md §Perf).
+            n = cand.shape[0]
+            pad = (-n) % 512
+            if pad:
+                cand = jnp.concatenate(
+                    [cand, jnp.zeros((pad,) + cand.shape[1:], cand.dtype)])
+            cand = shr.constrain_axis(cand, 0, axes=("data", "model"))
+            scores = retrieval_fn(params, user, cand, cfg)
+            return scores[:n]
+
+        def abstract_args(mesh):
+            p_abs, p_specs = params_shardings(mesh)
+            user = user_abs_fn(cfg, mesh)
+            cand = cand_abs_fn(cfg, n_cand, mesh)
+            return (common.with_shardings(p_abs, p_specs, mesh), user, cand)
+
+        return common.CellSpec(
+            name=f"{name}/{shape_name}", entry="retrieval", fn=retrieval_step,
+            abstract_args=abstract_args, tokens=n_cand, act_axes="all",
+        )
+
+    return common.ArchSpec(
+        name=name,
+        family="recsys",
+        make_config=lambda smoke=False: smoke_cfg_fn() if smoke else full_cfg_fn(),
+        shapes=RS_SHAPES,
+        build_cell=build,
+        init_params=init_fn,
+    )
+
+
+def cand_ids_abs(cfg, n_cand: int, mesh: Mesh):
+    """1-D candidate id vector sharded over 'model' (divides 1e6 exactly)."""
+    spec = P("model" if n_cand % mesh.shape["model"] == 0 else None)
+    return common.sds((n_cand,), jnp.int32, mesh, spec)

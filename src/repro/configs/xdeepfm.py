@@ -1,0 +1,53 @@
+"""xdeepfm [arXiv:1803.05170] — 39 fields × embed 10, CIN 200-200-200,
+DNN 400-400, per-field vocab 2^20 (one stacked 39×2^20-row table).
+
+Role: expensive pointwise ranker D (CIN crosses candidate × user fields)."""
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import common
+from repro.configs.recsys_common import make_recsys_arch
+from repro.models import recsys as R
+
+
+def full() -> R.XDeepFMConfig:
+    return R.XDeepFMConfig(name="xdeepfm", n_fields=39, field_vocab=1_048_576,
+                           embed_dim=10, cin_layers=(200, 200, 200),
+                           mlp_dims=(400, 400), n_item_fields=13)
+
+
+def smoke() -> R.XDeepFMConfig:
+    return R.XDeepFMConfig(name="xdeepfm-smoke", n_fields=39, field_vocab=256,
+                           embed_dim=4, cin_layers=(16, 16),
+                           mlp_dims=(32, 32), n_item_fields=13)
+
+
+def _batch_abs(cfg, batch, mesh, bspec):
+    return {
+        "fields": common.sds((batch, cfg.n_fields), jnp.int32, mesh,
+                             P(bspec[0], None)),
+        "label": common.sds((batch,), jnp.float32, mesh, bspec),
+    }
+
+
+def _cand_abs(cfg, n_cand, mesh):
+    spec = P("model" if n_cand % mesh.shape["model"] == 0 else None, None)
+    return common.sds((n_cand, cfg.n_item_fields), jnp.int32, mesh, spec)
+
+
+SPEC = make_recsys_arch(
+    "xdeepfm",
+    full_cfg_fn=full, smoke_cfg_fn=smoke,
+    init_fn=lambda key, cfg: R.xdeepfm_init(key, cfg),
+    loss_fn=lambda params, batch, cfg: R.xdeepfm_loss(params, batch, cfg),
+    serve_fn=lambda params, batch, cfg: R.xdeepfm_forward(
+        params, batch["fields"], cfg),
+    retrieval_fn=lambda params, user, cand, cfg: R.xdeepfm_score_candidates(
+        params, user["fields"], cand, cfg),
+    batch_abs_fn=_batch_abs,
+    user_abs_fn=lambda cfg, mesh: {
+        "fields": common.sds((1, cfg.n_fields - cfg.n_item_fields), jnp.int32,
+                             mesh, P(None, None))
+    },
+    cand_abs_fn=_cand_abs,
+)

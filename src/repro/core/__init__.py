@@ -1,0 +1,2 @@
+"""Core bi-metric similarity-search library (the paper's contribution)."""
+from repro.core import beam, bimetric, covertree, distances, metrics, vamana  # noqa: F401

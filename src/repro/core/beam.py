@@ -1,0 +1,200 @@
+"""Greedy graph search (paper Algorithm 1) as a fixed-shape JAX while_loop.
+
+TPU adaptation of DiskANN's pointer-chasing greedy search:
+
+* the search frontier is a fixed-size *pool* of the best ``pool_size`` scored
+  vertices (sorted by distance); the classic beam is its length-``L`` prefix;
+* one step = expand the best unexpanded vertex in the beam prefix, gather its
+  ``R`` graph neighbors, score the not-yet-scored ones, merge into the pool;
+* a per-query bitmap of scored vertices provides exact dedup — a vertex's
+  distance is computed at most once, so counting scored vertices counts
+  distance-function *calls* exactly (the paper's cost model);
+* an explicit ``quota`` bounds the number of distance calls: candidates that
+  would exceed the quota are masked out (never scored, never used), so the
+  search is *exactly* budget-feasible per query, not just in expectation.
+
+The same routine serves index construction (metric d), stage-1 search (d),
+stage-2 search (D), and the single-metric baseline — they differ only in the
+``dist_fn`` closure and the quota.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+NO_QUOTA = jnp.iinfo(jnp.int32).max // 2
+
+
+class SearchState(NamedTuple):
+    pool_ids: Array  # (P,) int32, sorted by dist; -1 pad
+    pool_dists: Array  # (P,) f32; +inf pad
+    expanded: Array  # (P,) bool
+    scored: Array  # (N,) bool bitmap — dedup + exact call counting
+    n_calls: Array  # () int32
+    step: Array  # () int32
+
+
+class SearchResult(NamedTuple):
+    pool_ids: Array
+    pool_dists: Array
+    scored: Array
+    n_calls: Array
+    n_steps: Array
+
+
+def _merge_pool(
+    pool_ids: Array,
+    pool_dists: Array,
+    expanded: Array,
+    new_ids: Array,
+    new_dists: Array,
+) -> tuple[Array, Array, Array]:
+    """Merge new scored candidates into the sorted pool, keep best P."""
+    p = pool_ids.shape[0]
+    ids = jnp.concatenate([pool_ids, new_ids])
+    dists = jnp.concatenate([pool_dists, new_dists])
+    exp = jnp.concatenate([expanded, jnp.zeros(new_ids.shape, dtype=bool)])
+    order = jnp.argsort(dists, stable=True)
+    return ids[order][:p], dists[order][:p], exp[order][:p]
+
+
+def greedy_search(
+    dist_fn: Callable[[Array], Array],
+    adjacency: Array,
+    entry_ids: Array,
+    *,
+    n_points: int,
+    beam_width: int,
+    pool_size: int | None = None,
+    quota: int | Array = NO_QUOTA,
+    max_steps: int | None = None,
+    scored_init: Array | None = None,
+    calls_init: Array | int = 0,
+) -> SearchResult:
+    """Greedy beam search over ``adjacency`` for a single query.
+
+    Args:
+      dist_fn: maps (k,) int32 vertex ids -> (k,) f32 distances to the query.
+        Ids < 0 must map to +inf. Every *finite* evaluation is one metric call.
+      adjacency: (N, R) int32 out-neighbors, -1 padded.
+      entry_ids: (E,) int32 starting vertices (deduped here; -1 pads allowed).
+      n_points: N (for the scored bitmap).
+      beam_width: L — expansion happens within the best-L prefix.
+      pool_size: P >= L — how many best-scored vertices to retain (the
+        candidate pool used by index construction / result reporting).
+      quota: max number of distance calls (incl. entry scoring).
+      max_steps: cap on expansions (defaults to a safe bound).
+      scored_init / calls_init: continue an earlier search's accounting — used
+        by the bi-metric stage-2 search to share the scored bitmap shape (the
+        D-metric bitmap starts fresh; see bimetric.py).
+
+    Returns SearchResult with the pool sorted ascending by distance.
+    """
+    adjacency = adjacency.astype(jnp.int32)
+    n, r = adjacency.shape
+    assert n == n_points
+    L = beam_width
+    P = pool_size or max(L, entry_ids.shape[0])
+    P = max(P, L, entry_ids.shape[0])
+    if max_steps is None:
+        max_steps = 4 * L + 16
+    quota = jnp.asarray(quota, jnp.int32)
+
+    # --- score entries (respecting the quota) -----------------------------
+    e = entry_ids.shape[0]
+    entry_ids = entry_ids.astype(jnp.int32)
+    # dedup entries positionally: an id equal to an earlier id becomes -1.
+    dup = (entry_ids[:, None] == entry_ids[None, :]) & (
+        jnp.arange(e)[:, None] > jnp.arange(e)[None, :]
+    )
+    entry_ids = jnp.where(dup.any(axis=1), -1, entry_ids)
+    valid = entry_ids >= 0
+    order_idx = jnp.cumsum(valid.astype(jnp.int32)) - 1  # call index per entry
+    budget0 = quota - jnp.asarray(calls_init, jnp.int32)
+    keep = valid & (order_idx < budget0)
+    safe_entries = jnp.where(keep, entry_ids, -1)
+    entry_dists = jnp.where(keep, dist_fn(safe_entries), jnp.inf)
+    n_calls0 = jnp.asarray(calls_init, jnp.int32) + keep.sum(dtype=jnp.int32)
+
+    scored0 = (
+        jnp.zeros((n,), dtype=bool) if scored_init is None else scored_init
+    )
+    # scatter-OR (max): padding ids all alias index 0, so a plain set() races
+    scored0 = scored0.at[jnp.maximum(safe_entries, 0)].max(keep)
+
+    pool_ids = jnp.full((P,), -1, jnp.int32)
+    pool_dists = jnp.full((P,), jnp.inf, jnp.float32)
+    expanded = jnp.zeros((P,), dtype=bool)
+    pool_ids, pool_dists, expanded = _merge_pool(
+        pool_ids, pool_dists, expanded, safe_entries, entry_dists
+    )
+
+    state = SearchState(
+        pool_ids, pool_dists, expanded, scored0, n_calls0, jnp.int32(0)
+    )
+
+    def frontier_open(s: SearchState) -> Array:
+        frontier = (~s.expanded[:L]) & jnp.isfinite(s.pool_dists[:L])
+        return frontier.any()
+
+    def cond(s: SearchState) -> Array:
+        return frontier_open(s) & (s.step < max_steps) & (s.n_calls < quota)
+
+    def body(s: SearchState) -> SearchState:
+        frontier = (~s.expanded[:L]) & jnp.isfinite(s.pool_dists[:L])
+        # best unexpanded in the beam prefix (pool is sorted -> first open slot)
+        idx = jnp.argmax(frontier)  # first True
+        v = s.pool_ids[idx]
+        expanded = s.expanded.at[idx].set(True)
+
+        nbrs = adjacency[jnp.maximum(v, 0)]  # (R,)
+        fresh = (nbrs >= 0) & ~s.scored[jnp.maximum(nbrs, 0)]
+        # exact quota masking: only the first `remaining` fresh ids get scored
+        call_idx = jnp.cumsum(fresh.astype(jnp.int32)) - 1
+        remaining = quota - s.n_calls
+        keep = fresh & (call_idx < remaining)
+        safe = jnp.where(keep, nbrs, -1)
+        d = jnp.where(keep, dist_fn(safe), jnp.inf)
+        n_calls = s.n_calls + keep.sum(dtype=jnp.int32)
+        scored = s.scored.at[jnp.maximum(safe, 0)].max(keep)
+
+        pool_ids, pool_dists, expanded = _merge_pool(
+            s.pool_ids, s.pool_dists, expanded, safe, d
+        )
+        return SearchState(
+            pool_ids, pool_dists, expanded, scored, n_calls, s.step + 1
+        )
+
+    final = lax.while_loop(cond, body, state)
+    return SearchResult(
+        final.pool_ids, final.pool_dists, final.scored, final.n_calls, final.step
+    )
+
+
+def greedy_search_batch(
+    dist_fn_batch: Callable[[Array, Array], Array],
+    adjacency: Array,
+    query_ctx: Array,
+    entry_ids: Array,
+    **kw,
+) -> SearchResult:
+    """vmap of ``greedy_search`` over a batch of queries.
+
+    ``dist_fn_batch(q_ctx, ids)`` scores (k,) ids against one query context
+    (usually the query's embedding under the metric in play).
+    ``query_ctx``: (B, ...) per-query context; ``entry_ids``: (B, E) or (E,).
+    """
+    if entry_ids.ndim == 1:
+        entry_ids = jnp.broadcast_to(
+            entry_ids, (query_ctx.shape[0], entry_ids.shape[0])
+        )
+
+    def one(q, ent):
+        return greedy_search(lambda ids: dist_fn_batch(q, ids), adjacency, ent, **kw)
+
+    return jax.vmap(one)(query_ctx, entry_ids)

@@ -1,0 +1,175 @@
+"""The paper's contribution: bi-metric two-stage search (§4, "Bi-metric (our method)").
+
+Given a graph index built *only* with the cheap metric d (vamana.build):
+
+  stage 1 — greedy search with d; zero D calls; returns the top-K seeds
+            (paper default K = Q/2, ablations: 1, 100, Q/2, or none);
+  stage 2 — greedy search *on the same graph* with the expensive metric D,
+            beam initialized with the stage-1 seeds; every D evaluation
+            (including scoring the seeds) counts against the quota Q; the
+            scored-bitmap guarantees no pair is ever paid for twice.
+
+Report the top-k vertices by D among everything scored — by construction the
+pool holds exactly those.
+
+Also includes the two baselines evaluated in the paper:
+  * ``rerank``        — "Bi-metric (baseline)": top-Q by d, score all with D;
+  * single-metric     — vamana.search on a D-built graph (see benchmarks).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.beam import NO_QUOTA, greedy_search
+from repro.core.vamana import VamanaIndex
+
+Array = jax.Array
+
+DistFn = Callable[[Array], Array]  # ids (k,) -> dists (k,) for one query
+
+
+class BiMetricResult(NamedTuple):
+    ids: Array  # (B, k) best by D
+    dists: Array  # (B, k) D-distances
+    d_calls: Array  # (B,) cheap-metric calls (stage 1)
+    D_calls: Array  # (B,) expensive-metric calls (stage 2) — the paper's cost
+
+
+def _stage1(
+    cheap_fn: DistFn,
+    index: VamanaIndex,
+    *,
+    n_points: int,
+    n_seeds: int,
+    l_search: int,
+) -> tuple[Array, Array]:
+    """Cheap-metric greedy search; returns (seed ids (n_seeds,), n_d_calls)."""
+    res = greedy_search(
+        cheap_fn,
+        index.adjacency,
+        jnp.array([index.medoid], jnp.int32),
+        n_points=n_points,
+        beam_width=l_search,
+        pool_size=max(l_search, n_seeds),
+        quota=NO_QUOTA,
+        max_steps=4 * l_search,
+    )
+    return res.pool_ids[:n_seeds], res.n_calls
+
+
+def bimetric_search_single(
+    cheap_fn: DistFn,
+    expensive_fn: DistFn,
+    index: VamanaIndex,
+    *,
+    n_points: int,
+    quota: int,
+    k: int = 10,
+    n_seeds: int | None = None,
+    l_search_d: int | None = None,
+    beam_width_D: int | None = None,
+    use_stage1: bool = True,
+) -> tuple[Array, Array, Array, Array]:
+    """One query. Returns (ids (k,), D_dists (k,), d_calls, D_calls)."""
+    if n_seeds is None:
+        n_seeds = max(1, quota // 2)  # paper default: top-Q/2
+    l1 = l_search_d or max(index.config.l_build, n_seeds)
+    if use_stage1:
+        seeds, d_calls = _stage1(
+            cheap_fn, index, n_points=n_points, n_seeds=n_seeds, l_search=l1
+        )
+    else:  # "Default" ablation: start from the graph entry point only
+        seeds = jnp.full((max(n_seeds, 1),), -1, jnp.int32)
+        seeds = seeds.at[0].set(index.medoid)
+        d_calls = jnp.int32(0)
+
+    bw = beam_width_D or max(k, min(quota, 2 * n_seeds + 8))
+    res = greedy_search(
+        expensive_fn,
+        index.adjacency,
+        seeds,
+        n_points=n_points,
+        beam_width=bw,
+        pool_size=max(bw, k),
+        quota=quota,
+        max_steps=4 * quota,  # quota is the real stop; steps are a safety cap
+    )
+    return res.pool_ids[:k], res.pool_dists[:k], d_calls, res.n_calls
+
+
+def bimetric_search(
+    cheap_fn_batch: Callable[[Array, Array], Array],
+    expensive_fn_batch: Callable[[Array, Array], Array],
+    index: VamanaIndex,
+    q_cheap: Array,
+    q_expensive: Array,
+    *,
+    n_points: int,
+    quota: int,
+    k: int = 10,
+    n_seeds: int | None = None,
+    l_search_d: int | None = None,
+    use_stage1: bool = True,
+) -> BiMetricResult:
+    """Batched bi-metric search.
+
+    ``cheap_fn_batch(q_ctx, ids)`` / ``expensive_fn_batch(q_ctx, ids)`` score
+    ids against one query's context under d / D respectively; ``q_cheap`` and
+    ``q_expensive`` are the per-query contexts (e.g. the two embeddings).
+    """
+
+    def one(qc, qe):
+        return bimetric_search_single(
+            lambda ids: cheap_fn_batch(qc, ids),
+            lambda ids: expensive_fn_batch(qe, ids),
+            index,
+            n_points=n_points,
+            quota=quota,
+            k=k,
+            n_seeds=n_seeds,
+            l_search_d=l_search_d,
+            use_stage1=use_stage1,
+        )
+
+    ids, dd, dc, Dc = jax.vmap(one)(q_cheap, q_expensive)
+    return BiMetricResult(ids=ids, dists=dd, d_calls=dc, D_calls=Dc)
+
+
+def rerank_search(
+    cheap_fn_batch: Callable[[Array, Array], Array],
+    expensive_fn_batch: Callable[[Array, Array], Array],
+    index: VamanaIndex,
+    q_cheap: Array,
+    q_expensive: Array,
+    *,
+    n_points: int,
+    quota: int,
+    k: int = 10,
+    l_search_d: int | None = None,
+) -> BiMetricResult:
+    """"Bi-metric (baseline)" — retrieve top-``quota`` by d, re-rank all by D.
+
+    Exactly ``quota`` D calls per query (the re-ranking scan is unavoidable —
+    the paper's issue (2) with re-ranking).
+    """
+    l1 = l_search_d or max(index.config.l_build, quota)
+
+    def one(qc, qe):
+        cand, d_calls = _stage1(
+            lambda ids: cheap_fn_batch(qc, ids),
+            index,
+            n_points=n_points,
+            n_seeds=quota,
+            l_search=max(l1, quota),
+        )
+        dd = expensive_fn_batch(qe, cand)
+        dd = jnp.where(cand >= 0, dd, jnp.inf)
+        order = jnp.argsort(dd, stable=True)
+        n_D = (cand >= 0).sum(dtype=jnp.int32)
+        return cand[order][:k], dd[order][:k], d_calls, n_D
+
+    ids, dd, dc, Dc = jax.vmap(one)(q_cheap, q_expensive)
+    return BiMetricResult(ids=ids, dists=dd, d_calls=dc, D_calls=Dc)

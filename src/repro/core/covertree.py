@@ -1,0 +1,171 @@
+"""Cover Tree under the bi-metric framework (paper Appendix B).
+
+Algorithm 2 builds a cover tree with the *cheap* metric d and slack parameter
+``T = C``; Algorithm 3 answers queries with the *expensive* metric D, counting
+D evaluations (memoized per query — a vertex is paid for once even if it
+appears at many levels, since C_i ⊆ C_{i-1}).
+
+Index construction is an offline, data-dependent recursion (greedy covers),
+so it runs in NumPy; the per-level distance evaluations during queries are
+delegated to a user distance function, which in the framework is backed by a
+jitted JAX scorer. This matches the paper's deployment: the tree is built
+once on the proxy, queries stream against the expensive model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+DistToMany = Callable[[np.ndarray], np.ndarray]  # ids -> D(q, ids)
+
+
+@dataclasses.dataclass
+class CoverTree:
+    levels: list[np.ndarray]  # levels[j] = ids in cover C_{i_j}; j=0 is root level
+    children: list[dict[int, np.ndarray]]  # children[j][p] = ids in next level covered by p
+    level_scales: list[float]  # 2^i (scaled d units) per level
+    scale: float  # multiplier applied to raw distances
+    T: float  # the paper's T (set to C at build time)
+    n: int
+
+    @property
+    def depth(self) -> int:
+        return len(self.levels)
+
+
+def build(
+    x: np.ndarray,
+    *,
+    T: float = 1.0,
+    metric: str = "l2",
+    seed: int = 0,
+    max_levels: int = 64,
+) -> CoverTree:
+    """Algorithm 2: nested greedy covers C_i (2^i/T-covers of C_{i-1}), built on d."""
+    assert metric == "l2", "cover tree reference implementation uses l2"
+    rng = np.random.default_rng(seed)
+    n = x.shape[0]
+    x = np.asarray(x, np.float64)
+
+    def dist(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        return np.sqrt(np.maximum(((a[:, None, :] - b[None, :, :]) ** 2).sum(-1), 0))
+
+    # Scale so all pairwise distances are > 1 (WLOG step of Algorithm 2).
+    # Estimate the closest-pair distance from a sample (exact for small n).
+    if n <= 4096:
+        dmat = dist(x, x)
+    else:
+        idx = rng.choice(n, size=4096, replace=False)
+        dmat = dist(x[idx], x[idx])
+    np.fill_diagonal(dmat, np.inf)
+    dmin = float(dmat.min())
+    dmax = float(np.where(np.isfinite(dmat), dmat, 0).max())
+    dmin = max(dmin, 1e-12)
+    scale = 1.001 / dmin
+
+    def sdist_rows(p: int, ids: np.ndarray) -> np.ndarray:
+        return np.sqrt(np.maximum(((x[p][None] - x[ids]) ** 2).sum(-1), 0)) * scale
+
+    # levels bottom-up: C_0 = all points; C_i is a 2^i/T cover of C_{i-1}.
+    covers = [np.arange(n, dtype=np.int64)]
+    parent_maps: list[dict[int, int]] = []  # parent of each member of C_{i-1} in C_i
+    i = 0
+    while len(covers[-1]) > 1 and i < max_levels:
+        i += 1
+        r = (2.0**i) / T
+        prev = covers[-1]
+        remaining = prev.copy()
+        rng.shuffle(remaining)
+        members: list[int] = []
+        parent: dict[int, int] = {}
+        rem_mask = np.ones(len(prev), bool)
+        pos = {int(v): j for j, v in enumerate(prev)}
+        for v in remaining:
+            j = pos[int(v)]
+            if not rem_mask[j]:
+                continue
+            members.append(int(v))
+            alive = prev[rem_mask]
+            d_va = sdist_rows(int(v), alive)
+            covered = alive[d_va <= r]
+            for c in covered:
+                parent[int(c)] = int(v)
+                rem_mask[pos[int(c)]] = False
+        covers.append(np.asarray(sorted(members), np.int64))
+        parent_maps.append(parent)
+
+    # top-down ordering for the query recursion
+    covers = covers[::-1]
+    parent_maps = parent_maps[::-1]
+    top_i = len(covers) - 1
+    children: list[dict[int, np.ndarray]] = []
+    for j in range(len(covers) - 1):
+        pm = parent_maps[j]
+        ch: dict[int, list[int]] = {int(p): [] for p in covers[j]}
+        for c, p in pm.items():
+            ch[int(p)].append(int(c))
+        children.append({p: np.asarray(v, np.int64) for p, v in ch.items()})
+    level_scales = [2.0 ** (top_i - j) for j in range(len(covers))]
+    return CoverTree(
+        levels=covers,
+        children=children,
+        level_scales=level_scales,
+        scale=scale,
+        T=T,
+        n=n,
+    )
+
+
+def search(
+    tree: CoverTree,
+    expensive_fn: DistToMany,
+    *,
+    eps: float = 0.5,
+    k: int = 10,
+    quota: int | None = None,
+) -> tuple[np.ndarray, np.ndarray, int]:
+    """Algorithm 3 with metric D. Returns (top-k ids, D dists, n_D_calls).
+
+    ``expensive_fn(ids)`` returns *raw* D distances; thresholds are applied in
+    the scaled units used at build time (Lemma B.4 alignment).
+    """
+    memo: dict[int, float] = {}
+    calls = 0
+
+    def D(ids: np.ndarray) -> np.ndarray:
+        nonlocal calls
+        new = [int(i) for i in ids if int(i) not in memo]
+        if new:
+            if quota is not None and calls + len(new) > quota:
+                new = new[: max(0, quota - calls)]
+            if new:
+                vals = np.asarray(expensive_fn(np.asarray(new, np.int64)), np.float64)
+                for i, v in zip(new, vals * tree.scale):
+                    memo[int(i)] = float(v)
+                calls += len(new)
+        return np.asarray([memo.get(int(i), np.inf) for i in ids], np.float64)
+
+    Q_i = tree.levels[0]
+    _ = D(Q_i)
+    for j in range(len(tree.levels) - 1):
+        two_i = tree.level_scales[j]
+        ch = tree.children[j]
+        q_next = set()
+        for p in Q_i:
+            q_next.update(ch.get(int(p), np.empty(0, np.int64)).tolist())
+            q_next.add(int(p))  # self-child: C_i ⊆ C_{i-1}
+        Q = np.asarray(sorted(q_next), np.int64)
+        dq = D(Q)
+        keep = dq <= dq.min() + two_i
+        Q_i = Q[keep]
+        if dq[keep].min() >= two_i * (1.0 + 1.0 / eps):
+            break
+        if quota is not None and calls >= quota:
+            break
+
+    scored = np.asarray(sorted(memo), np.int64)
+    vals = np.asarray([memo[int(i)] for i in scored])
+    order = np.argsort(vals, kind="stable")[:k]
+    return scored[order], vals[order] / tree.scale, calls

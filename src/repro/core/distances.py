@@ -1,0 +1,125 @@
+"""Distance functions for the bi-metric framework.
+
+A *metric source* in this framework is anything that can score (query, doc-id)
+pairs. The two canonical instantiations are
+
+* ``EmbeddingMetric`` — distances induced by a fixed embedding matrix (the
+  paper's setting: both d and D are Euclidean distances between model
+  embeddings), and
+* model-backed metrics (see ``repro.serve.engine``) where scoring a pair runs
+  a forward pass of an expensive tower.
+
+All functions are pure jnp and jit/vmap-friendly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+VALID_METRICS = ("l2", "sqeuclidean", "ip", "cosine")
+
+
+def _check(metric: str) -> None:
+    if metric not in VALID_METRICS:
+        raise ValueError(f"metric must be one of {VALID_METRICS}, got {metric!r}")
+
+
+def pairwise(x: Array, y: Array, metric: str = "l2") -> Array:
+    """Pairwise dissimilarity between rows of ``x`` (n, dim) and ``y`` (m, dim).
+
+    Returns an (n, m) array. For "ip"/"cosine" we return a *dissimilarity*
+    (negated / one-minus) so that smaller is always better.
+    """
+    _check(metric)
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    if metric in ("l2", "sqeuclidean"):
+        # ||x-y||^2 = ||x||^2 + ||y||^2 - 2 x.y  — one matmul, MXU friendly.
+        x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+        y2 = jnp.sum(y * y, axis=-1, keepdims=True)
+        sq = x2 + y2.T - 2.0 * (x @ y.T)
+        sq = jnp.maximum(sq, 0.0)
+        return sq if metric == "sqeuclidean" else jnp.sqrt(sq)
+    if metric == "ip":
+        return -(x @ y.T)
+    # cosine
+    xn = x * jax.lax.rsqrt(jnp.sum(x * x, -1, keepdims=True) + 1e-12)
+    yn = y * jax.lax.rsqrt(jnp.sum(y * y, -1, keepdims=True) + 1e-12)
+    return 1.0 - xn @ yn.T
+
+
+def point_to_points(q: Array, xs: Array, metric: str = "l2") -> Array:
+    """Distance from one query (dim,) to rows of ``xs`` (m, dim) -> (m,)."""
+    return pairwise(q[None, :], xs, metric)[0]
+
+
+class EmbeddingMetric:
+    """A dissimilarity function backed by a fixed embedding matrix.
+
+    ``dists(q_emb, ids)`` gathers corpus rows by id and scores them against a
+    query embedding. This is the plug-in point for both the cheap proxy d and
+    the expensive ground truth D in benchmarks (where both are precomputed,
+    exactly as in the paper's evaluation, with D *calls counted*).
+    """
+
+    def __init__(self, embeddings: Array, metric: str = "l2"):
+        _check(metric)
+        self.embeddings = embeddings
+        self.metric = metric
+
+    @property
+    def n(self) -> int:
+        return self.embeddings.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.embeddings.shape[1]
+
+    def embed_query(self, q: Array) -> Array:
+        return q  # already an embedding in the precomputed setting
+
+    def dists(self, q_emb: Array, ids: Array) -> Array:
+        """(dim,), (k,) int -> (k,) distances. Invalid ids (<0) -> +inf."""
+        valid = ids >= 0
+        rows = self.embeddings[jnp.maximum(ids, 0)]
+        d = point_to_points(q_emb, rows, self.metric)
+        return jnp.where(valid, d, jnp.inf)
+
+    def dists_batch(self, q_embs: Array, ids: Array) -> Array:
+        """(B, dim), (B, k) -> (B, k)."""
+        return jax.vmap(self.dists)(q_embs, ids)
+
+    def brute_force(self, q_embs: Array, k: int) -> tuple[Array, Array]:
+        """Exact top-k ids/dists for each query row. (B, dim) -> (B, k) x2."""
+        d = pairwise(q_embs, self.embeddings, self.metric)
+        dists, ids = jax.lax.top_k(-d, k)
+        return ids, -dists
+
+
+def measure_capproximation(d_dists: Array, D_dists: Array) -> tuple[float, float]:
+    """Empirical C for Definition 2.1 after optimal rescaling of d.
+
+    Returns (scale, C): with d' = scale * d we have d' <= D <= C * d' for all
+    sampled pairs (up to numerical floor). The paper's Eq. (1) is scale
+    invariant in this sense; we report the tightest C.
+    """
+    eps = 1e-9
+    ratio = D_dists / jnp.maximum(d_dists, eps)
+    lo = jnp.min(ratio)  # need scale <= lo so that d' <= D
+    hi = jnp.max(ratio)
+    scale = float(lo)
+    c = float(hi / jnp.maximum(lo, eps))
+    return scale, c
+
+
+def dist_fn_from_embeddings(
+    embeddings: Array, metric: str = "l2"
+) -> Callable[[Array, Array], Array]:
+    """Returns dist(q_emb, ids) -> dists closure (for functional call sites)."""
+    em = EmbeddingMetric(embeddings, metric)
+    return em.dists

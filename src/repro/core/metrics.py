@@ -1,0 +1,42 @@
+"""Retrieval quality metrics: Recall@k and NDCG@k (paper §4.1 "Metric")."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def recall_at_k(pred_ids: Array, true_ids: Array) -> Array:
+    """Recall@k of predicted ids vs ground-truth ids. (B,k),(B,k) -> (B,)."""
+    hits = (pred_ids[:, :, None] == true_ids[:, None, :]) & (
+        pred_ids[:, :, None] >= 0
+    )
+    return hits.any(axis=2).sum(axis=1) / true_ids.shape[1]
+
+
+def dcg(gains: Array) -> Array:
+    """(B, k) gains in rank order -> (B,) discounted cumulative gain."""
+    ranks = jnp.arange(gains.shape[1], dtype=jnp.float32)
+    disc = 1.0 / jnp.log2(ranks + 2.0)
+    return (gains * disc[None, :]).sum(axis=1)
+
+
+def ndcg_at_k(pred_ids: Array, true_ids: Array, true_gains: Array | None = None) -> Array:
+    """NDCG@k against graded ground truth.
+
+    ``true_ids`` (B, k) are the ideal top-k; ``true_gains`` their relevance
+    grades (defaults to descending 2^(k-rank)-style linear grades, which makes
+    NDCG sensitive to rank order as in MTEB-style evaluation).
+    """
+    b, k = true_ids.shape
+    if true_gains is None:
+        true_gains = jnp.broadcast_to(
+            jnp.arange(k, 0, -1, dtype=jnp.float32)[None, :], (b, k)
+        )
+    match = (pred_ids[:, :, None] == true_ids[:, None, :]) & (
+        pred_ids[:, :, None] >= 0
+    )
+    pred_gain = (match * true_gains[:, None, :]).sum(axis=2)  # (B, k_pred)
+    ideal = dcg(true_gains)
+    return dcg(pred_gain[:, :k]) / jnp.maximum(ideal, 1e-9)

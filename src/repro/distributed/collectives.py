@@ -1,0 +1,80 @@
+"""Overlapped collective-matmul primitives (compute/comm overlap).
+
+Ring algorithms via ``ppermute`` that interleave one chunk of matmul with one
+chunk of neighbor exchange per step — the "collective matmul" transformation
+(Wang et al., ASPLOS'23) that XLA applies automatically in favorable cases
+and that we provide explicitly for the TP layers:
+
+* ``allgather_matmul``:  computes  all_gather(x, axis) @ w  without ever
+  materializing the gathered x: each ring step multiplies the resident chunk
+  while the next chunk is in flight.
+* ``matmul_reducescatter``: computes reduce_scatter(x @ w) chunk-by-chunk,
+  sending partial sums around the ring.
+
+Used inside shard_map with a named axis; verified numerically against the
+dense reference on an 8-device host mesh in tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+
+def allgather_matmul(x: Array, w: Array, axis_name: str) -> Array:
+    """x: (m_local, k) shard of a row-sharded M×K; w: (k, n) local weight.
+
+    Returns (m_local * n_dev, n) — the full all_gather(x) @ w, computed by
+    rotating shards around the ring and filling the output block that each
+    incoming shard corresponds to. One send/recv overlaps one block matmul.
+    """
+    n_dev = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    m_local = x.shape[0]
+    out = jnp.zeros((m_local * n_dev, w.shape[1]), w.dtype)
+    perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+
+    def body(i, carry):
+        out, chunk = carry
+        src = (idx - i) % n_dev  # whose shard we currently hold
+        block = chunk @ w
+        out = lax.dynamic_update_slice(out, block.astype(out.dtype),
+                                       (src * m_local, 0))
+        chunk = lax.ppermute(chunk, axis_name, perm)
+        return out, chunk
+
+    out, _ = lax.fori_loop(0, n_dev, body, (out, x))
+    return out
+
+
+def matmul_reducescatter(x: Array, w: Array, axis_name: str) -> Array:
+    """x: (m, k_local) shard of a col-sharded M×K; w: (k_local, n) local shard
+    of a row-sharded K×N. Returns the (m/n_dev, n) reduce-scattered product of
+    the full x @ w, accumulating partial sums as they travel the ring.
+    """
+    n_dev = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    m = x.shape[0]
+    assert m % n_dev == 0, "row count must divide the axis size"
+    m_local = m // n_dev
+    perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+
+    def block(i):
+        # chunk held by this device at ring step i: the accumulator for
+        # output chunk c visits device (c + 1 + i) mod n at step i, so the
+        # resident chunk here is c = (idx - i - 1) mod n. After n-1 hops the
+        # accumulator for chunk idx lands home.
+        row = ((idx - i - 1) % n_dev) * m_local
+        return lax.dynamic_slice(x, (row, 0), (m_local, x.shape[1])) @ w
+
+    def body(i, acc):
+        acc = acc + block(i)
+        return lax.ppermute(acc, axis_name, perm)
+
+    # n_dev-1 hops with accumulation, final block added without a hop
+    acc = jnp.zeros((m_local, w.shape[1]), jnp.result_type(x.dtype, w.dtype))
+    acc = lax.fori_loop(0, n_dev - 1, body, acc)
+    acc = acc + block(n_dev - 1)
+    return acc

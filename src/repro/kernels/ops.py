@@ -1,0 +1,57 @@
+"""Jitted dispatch layer for the Pallas kernels.
+
+``use_pallas`` selects the TPU kernel; the default (False) runs the ref.py
+oracle through XLA — that path is used on CPU (tests, dry-run lowering) and is
+mathematically identical. Kernel tests run the Pallas bodies with
+``interpret=True`` and assert allclose against the same refs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels import embedding_bag as _bag
+from repro.kernels import flash_attention as _fa
+from repro.kernels import l2_topk as _lt
+
+Array = jax.Array
+
+
+def flash_attention(q, k, v, *, causal=True, sm_scale=None,
+                    use_pallas=False, interpret=False, block_q=128, block_k=128):
+    if use_pallas:
+        return _fa.flash_attention(q, k, v, causal=causal, sm_scale=sm_scale,
+                                   block_q=block_q, block_k=block_k,
+                                   interpret=interpret)
+    return ref.flash_attention_ref(q, k, v, causal=causal, sm_scale=sm_scale)
+
+
+def flash_decode(q, k, v, *, length, sm_scale=None, use_pallas=False,
+                 interpret=False, block_k=512):
+    if use_pallas:
+        return _fa.flash_decode(q, k, v, length=length, sm_scale=sm_scale,
+                                block_k=block_k, interpret=interpret)
+    return ref.flash_decode_ref(q, k, v, length=length, sm_scale=sm_scale)
+
+
+def gather_l2(corpus, queries, ids, *, use_pallas=False, interpret=False):
+    if use_pallas:
+        return _lt.gather_l2(corpus, queries, ids, interpret=interpret)
+    return ref.l2_gather_dists_ref(corpus, queries, ids)
+
+
+def beam_merge_topk(beam_ids, beam_dists, cand_ids, cand_dists, *,
+                    use_pallas=False, interpret=False):
+    if use_pallas:
+        return _lt.beam_merge_topk(beam_ids, beam_dists, cand_ids, cand_dists,
+                                   interpret=interpret)
+    return ref.beam_merge_topk_ref(beam_ids, beam_dists, cand_ids, cand_dists)
+
+
+def embedding_bag(table, idx, *, mode="sum", use_pallas=False, interpret=False):
+    if use_pallas:
+        return _bag.embedding_bag(table, idx, mode=mode, interpret=interpret)
+    return ref.embedding_bag_ref(table, idx, mode=mode)

@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``<name>_ref`` is the mathematical definition the kernel must match
+(assert_allclose in tests, and the XLA execution path on CPU / for dry-runs).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
+                        sm_scale: float | None = None) -> Array:
+    """q (B, H, Sq, dh); k, v (B, H, Skv, dh) -> (B, H, Sq, dv). Plain softmax."""
+    b, h, sq, dh = q.shape
+    skv = k.shape[2]
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(dh)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if causal:
+        mask = jnp.arange(skv)[None, :] <= jnp.arange(sq)[:, None] + (skv - sq)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def flash_decode_ref(q: Array, k: Array, v: Array, *, length: Array | int,
+                     sm_scale: float | None = None) -> Array:
+    """Single-query attention: q (B, H, dh); k, v (B, S, H, dh) -> (B, H, dh)."""
+    b, h, dh = q.shape
+    s = k.shape[1]
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(dh)
+    logits = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * sm_scale
+    valid = jnp.arange(s)[None, None, :] < jnp.asarray(length).reshape(-1, 1, 1)
+    logits = jnp.where(valid, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def l2_gather_dists_ref(corpus: Array, queries: Array, ids: Array) -> Array:
+    """corpus (N, dim); queries (B, dim); ids (B, K) -> (B, K) sq-l2 dists.
+
+    ids < 0 -> +inf (padding). This is the bi-metric beam-step hot op:
+    gather fanout candidates and score them against the query.
+    """
+    rows = corpus[jnp.maximum(ids, 0)]  # (B, K, dim)
+    diff = rows.astype(jnp.float32) - queries[:, None].astype(jnp.float32)
+    d = (diff * diff).sum(-1)
+    return jnp.where(ids >= 0, d, jnp.inf)
+
+
+def beam_merge_topk_ref(beam_ids: Array, beam_dists: Array, cand_ids: Array,
+                        cand_dists: Array) -> tuple[Array, Array]:
+    """Merge (B, L) beam with (B, K) candidates, return best (B, L) by dist."""
+    L = beam_ids.shape[1]
+    ids = jnp.concatenate([beam_ids, cand_ids], axis=1)
+    d = jnp.concatenate([beam_dists, cand_dists], axis=1)
+    order = jnp.argsort(d, axis=1, stable=True)
+    return (
+        jnp.take_along_axis(ids, order, axis=1)[:, :L],
+        jnp.take_along_axis(d, order, axis=1)[:, :L],
+    )
+
+
+def embedding_bag_ref(table: Array, idx: Array, mode: str = "sum") -> Array:
+    """table (V, D); idx (B, L) with -1 padding -> (B, D) reduced bags."""
+    rows = table[jnp.maximum(idx, 0)]
+    mask = (idx >= 0).astype(table.dtype)
+    out = (rows * mask[..., None]).sum(axis=1)
+    if mode == "mean":
+        out = out / jnp.maximum(mask.sum(-1, keepdims=True), 1.0)
+    return out

@@ -1,0 +1,160 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede every other import (jax locks the device count on first
+# init). The dry-run — and only the dry-run — builds the production meshes
+# out of 512 placeholder host devices.
+
+"""Multi-pod dry-run driver.
+
+For every (architecture × input shape) cell:
+    with mesh:
+        lowered  = jax.jit(step, donate_argnums=...).lower(*abstract_args)
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())    # proves the cell fits HBM
+        print(compiled.cost_analysis())      # XLA FLOPs/bytes (body-once)
+plus the trip-count-corrected HLO analysis (launch/hlo_analysis.py) that
+feeds EXPERIMENTS.md §Roofline. Results are appended to a JSON cache so
+cells can run in parallel worker processes and be merged.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k \
+        [--multi-pod] [--out results.json] [--all]
+"""
+import argparse
+import json
+import time
+import traceback
+
+
+def run_cell(arch_name: str, shape: str, *, multi_pod: bool,
+             out_path: str | None = None, verbose: bool = True) -> dict:
+    import jax
+
+    from repro.configs import get_arch
+    from repro.distributed import sharding as shr
+    from repro.launch import hlo_analysis as H
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    spec = get_arch(arch_name)
+    cell = spec.cell(shape)
+    t0 = time.time()
+    args = cell.abstract_args(mesh)
+    dp = (shr.all_axes(mesh) if getattr(cell, "act_axes", "dp") == "all"
+          else shr.batch_axes(mesh))
+    out_sh = cell.out_shardings(args) if cell.out_shardings else None
+    with mesh, shr.activation_mesh(mesh, dp):
+        jitted = jax.jit(cell.fn, donate_argnums=cell.donate,
+                         out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    an = H.analyze(hlo)
+    terms = H.roofline_terms(an)
+    result = {
+        "cell": f"{arch_name}/{shape}",
+        "arch": arch_name,
+        "shape": shape,
+        "mesh": list(mesh.devices.shape),
+        "mesh_axes": list(mesh.axis_names),
+        "n_chips": int(n_chips),
+        "entry": cell.entry,
+        "tokens": cell.tokens,
+        "ok": True,
+        "t_lower_s": round(t_lower, 1),
+        "t_compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "xla_cost": {
+            "flops_body_once": cost.get("flops", 0.0),
+            "bytes_accessed_body_once": cost.get("bytes accessed", 0.0),
+        },
+        "hlo_analysis": an,
+        "roofline": terms,
+    }
+    if verbose:
+        print(f"== {result['cell']} on {result['mesh']} ==")
+        print("memory_analysis:", mem)
+        print("cost_analysis flops (body-once):", cost.get("flops"))
+        print("hlo per-device:", {k: f"{v:.3e}" for k, v in an.items()
+                                  if isinstance(v, float)})
+        print("roofline:", {k: (f"{v:.4e}" if isinstance(v, float) else v)
+                            for k, v in terms.items()})
+    if out_path:
+        _append(out_path, result)
+    return result
+
+
+def _append(path: str, result: dict) -> None:
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            try:
+                data = json.load(f)
+            except json.JSONDecodeError:
+                data = {}
+    key = f"{result['cell']}@{'x'.join(map(str, result['mesh']))}"
+    data[key] = result
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1)
+    os.replace(tmp, path)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="run all 40 cells")
+    ap.add_argument("--out", type=str, default="dryrun_results.json")
+    args = ap.parse_args()
+
+    from repro.configs import ARCHS, all_cells
+
+    todo = []
+    if args.all:
+        todo = all_cells()
+    elif args.arch and args.shape:
+        todo = [(args.arch, args.shape)]
+    elif args.arch:
+        todo = [(args.arch, s) for s in ARCHS[args.arch].shapes]
+    else:
+        ap.error("pass --arch [--shape] or --all")
+
+    failures = []
+    for arch, shape in todo:
+        try:
+            run_cell(arch, shape, multi_pod=args.multi_pod, out_path=args.out)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failures.append((arch, shape, repr(e)))
+            traceback.print_exc()
+            _append(args.out, {
+                "cell": f"{arch}/{shape}",
+                "arch": arch, "shape": shape,
+                "mesh": [2, 16, 16] if args.multi_pod else [16, 16],
+                "ok": False, "error": repr(e),
+            })
+    if failures:
+        print("FAILED cells:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print(f"dry-run OK for {len(todo)} cell(s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,395 @@
+"""Post-SPMD HLO cost analyzer with loop-trip-count accounting.
+
+``compiled.cost_analysis()`` visits each while-loop *body once*, so a
+scan-over-layers transformer under-reports FLOPs by ~n_layers ×. This module
+re-derives the three roofline quantities from ``compiled.as_text()`` (the
+partitioned, optimized, per-device HLO):
+
+  * dot FLOPs        — 2 · |out| · K per dot (fused dots included), summed
+                       along the call graph with while bodies weighted by
+                       their ``known_trip_count``;
+  * bytes accessed   — HBM traffic at *fusion boundaries*: for every
+                       top-level instruction, operand + output bytes, where
+                       - fusion internals are register/VMEM-resident (free),
+                       - a fusion param consumed only via dynamic-slice /
+                         gather counts the slice bytes, not the operand,
+                       - a dynamic-update-slice (incl. as fusion root)
+                         counts the update bytes (the base is aliased);
+  * collective bytes — Σ output bytes of all-reduce / all-gather /
+                       reduce-scatter / all-to-all / collective-permute.
+
+Shapes in this text are per-device; all numbers here are per chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_FREE_OPS = ("parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "copy-done", "copy-start", "after-all", "partition-id")
+_SLICE_OPS = ("dynamic-slice", "gather", "slice")
+
+
+def shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(text: str) -> int:
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        return n
+    return 0
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_type: str
+    op: str
+    operands: list[str]
+    raw: str
+    is_root: bool
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\("
+)
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        s = line.rstrip()
+        if (
+            s.endswith("{") and "->" in s and not s.startswith(" ")
+            and "=" not in s.split("(")[0]
+        ):
+            head = s.split("(")[0].strip()
+            head = head.replace("ENTRY", "").strip().lstrip("%")
+            cur = head
+            comps[cur] = []
+            continue
+        if s.strip() == "}":
+            cur = None
+            continue
+        if cur is not None and s.strip():
+            comps[cur].append(line)
+    return comps
+
+
+def _parse_instr(line: str) -> Instr | None:
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    root, name, rtype, op = m.groups()
+    after = line[m.end():]
+    ops = re.findall(r"%([\w.\-]+)", after.split("),")[0] + ")")
+    return Instr(name=name, result_type=rtype, op=op, operands=ops,
+                 raw=line, is_root=bool(root))
+
+
+@dataclasses.dataclass
+class Comp:
+    name: str
+    instrs: list[Instr]
+    symtab: dict[str, str]
+    params: dict[int, str]  # parameter index -> instr name
+    root: Instr | None
+
+    def param_effective_bytes(self) -> dict[str, int]:
+        """Effective read bytes per param name (slice-aware)."""
+        out = {}
+        for idx, pname in self.params.items():
+            uses = [i for i in self.instrs if pname in i.operands]
+            if not uses:
+                out[pname] = 0
+            elif all(u.op in _SLICE_OPS for u in uses):
+                out[pname] = sum(shape_bytes(u.result_type) for u in uses)
+            else:
+                out[pname] = shape_bytes(self.symtab.get(pname, ""))
+        return out
+
+    def output_effective_bytes(self) -> int:
+        if self.root is not None and self.root.op == "dynamic-update-slice":
+            # base is aliased in place; traffic = the update tensor
+            upd = self.root.operands[1] if len(self.root.operands) > 1 else None
+            return shape_bytes(self.symtab.get(upd, "")) if upd else 0
+        if self.root is not None:
+            return shape_bytes(self.root.result_type)
+        return 0
+
+
+def _parse_comp(name: str, lines: list[str]) -> Comp:
+    instrs, symtab, params = [], {}, {}
+    root = None
+    for line in lines:
+        ins = _parse_instr(line)
+        if ins is None:
+            # parameter lines: "%p = f32[..] parameter(0)" match _INSTR_RE
+            continue
+        symtab[ins.name] = ins.result_type
+        instrs.append(ins)
+        if ins.op == "parameter":
+            m = re.search(r"parameter\((\d+)\)", ins.raw)
+            if m:
+                params[int(m.group(1))] = ins.name
+        if ins.is_root:
+            root = ins
+    return Comp(name=name, instrs=instrs, symtab=symtab, params=params,
+                root=root)
+
+
+def _dot_flops(instr: Instr, symtab: dict[str, str]) -> float:
+    mc = _CONTRACT_RE.search(instr.raw)
+    out_elems = shape_elems(instr.result_type)
+    if not mc or not instr.operands:
+        return 2.0 * out_elems
+    lhs_type = symtab.get(instr.operands[0], "")
+    mshape = _SHAPE_RE.search(lhs_type)
+    if not mshape:
+        return 2.0 * out_elems
+    dims = [int(d) for d in mshape.group(2).split(",") if d]
+    k = 1
+    for ci in mc.group(1).split(","):
+        if ci and int(ci) < len(dims):
+            k *= dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+def analyze(hlo_text: str) -> dict:
+    comps = {n: _parse_comp(n, ls)
+             for n, ls in _split_computations(hlo_text).items()}
+
+    flops: dict[str, float] = {}
+    for name, comp in comps.items():
+        flops[name] = sum(
+            _dot_flops(i, comp.symtab) for i in comp.instrs if i.op == "dot"
+        )
+
+    # call edges: (callee, multiplier, kind)
+    edges: dict[str, list[tuple[str, float, str]]] = {}
+    for name, comp in comps.items():
+        es = []
+        for ins in comp.instrs:
+            mult = 1.0
+            t = _TRIP_RE.search(ins.raw)
+            if ins.op == "while" and t:
+                mult = float(t.group(1))
+            for m in re.finditer(r"(to_apply|calls|body|condition)=%?([\w.\-]+)",
+                                 ins.raw):
+                kind = "while" if m.group(1) in ("body", "condition") else "fusion"
+                es.append((m.group(2), mult, kind))
+        edges[name] = es
+
+    _GROUPSIZE_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+    _GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+    def _group_size(raw: str) -> int:
+        m = _GROUPSIZE_RE.search(raw)
+        if m:
+            return int(m.group(2))
+        m = _GROUPS_RE.search(raw)
+        if m:
+            return len(m.group(1).split(","))
+        return 1
+
+    def comp_bytes_and_coll(comp: Comp) -> tuple[float, float, float, float]:
+        b = 0.0  # fusion-boundary model (what this HLO does)
+        bf = 0.0  # fused model: every buffer written once (TPU-like lower bound)
+        coll = 0.0
+        coll_rs = 0.0  # with the TPU AR->RS rewrite applied
+        # consumers (for detecting the all-reduce -> dynamic-slice pattern
+        # that the TPU pipeline rewrites to reduce-scatter; XLA:CPU lacks
+        # the ReduceScatterCreator pass so it survives in this artifact)
+        consumers: dict[str, list[Instr]] = {}
+        for ins in comp.instrs:
+            for o in ins.operands:
+                consumers.setdefault(o, []).append(ins)
+
+        def feeds_dynamic_slice(name: str, depth=0) -> bool:
+            if depth > 2:
+                return False
+            for u in consumers.get(name, []):
+                if "dynamic-slice" in u.name or u.op == "dynamic-slice":
+                    return True
+                if u.op in ("get-tuple-element", "bitcast", "copy", "convert"):
+                    if feeds_dynamic_slice(u.name, depth + 1):
+                        return True
+            return False
+
+        for ins in comp.instrs:
+            if ins.op in _FREE_OPS:
+                continue
+            out_b = shape_bytes(ins.result_type)
+            if ins.op in _COLLECTIVES or any(ins.op.startswith(c)
+                                             for c in _COLLECTIVES):
+                coll += out_b
+                # TPU AR->RS equivalence (XLA:CPU lacks ReduceScatterCreator):
+                # (a) AR whose result is dynamic-sliced, or (b) AR of rank-2
+                # weight-gradient (tuples) inside bwd loops — consumed only
+                # at the optimizer's shard. Both lower to reduce-scatter on
+                # the TPU pipeline; counted at the sharded size here.
+                ranks = [len([d for d in dims.split(",") if d])
+                         for _, dims in _SHAPE_RE.findall(ins.result_type)]
+                grad_like = ranks and max(ranks) == 2  # weight(+norm) grads
+                if ins.op.startswith("all-reduce") and (
+                        feeds_dynamic_slice(ins.name) or grad_like):
+                    coll_rs += out_b / max(_group_size(ins.raw), 1)
+                else:
+                    coll_rs += out_b
+                b += 2 * out_b
+                bf += 2 * out_b
+                continue
+            if ins.op in _SLICE_OPS:
+                b += 2 * out_b
+                bf += out_b
+                continue
+            if ins.op == "dynamic-update-slice":
+                upd = ins.operands[1] if len(ins.operands) > 1 else None
+                ub = shape_bytes(comp.symtab.get(upd, "")) if upd else out_b
+                b += 2 * ub
+                bf += ub
+                continue
+            if ins.op == "dot":
+                opb = sum(shape_bytes(comp.symtab.get(o, ""))
+                          for o in ins.operands)
+                b += out_b + opb
+                bf += out_b + opb
+                continue
+            if ins.op == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", ins.raw)
+                callee = comps.get(m.group(1)) if m else None
+                if callee is not None:
+                    eff = callee.param_effective_bytes()
+                    # operand order matches parameter index order
+                    for idx, opnd in enumerate(ins.operands):
+                        pname = callee.params.get(idx)
+                        if pname is not None:
+                            b += eff.get(pname, 0)
+                        else:
+                            b += shape_bytes(comp.symtab.get(opnd, ""))
+                    ob = callee.output_effective_bytes()
+                    b += ob
+                    bf += ob
+                else:
+                    b += out_b + sum(shape_bytes(comp.symtab.get(o, ""))
+                                     for o in ins.operands)
+                    bf += out_b
+                continue
+            if ins.op in ("while", "conditional", "call"):
+                continue  # accounted via their bodies
+            b += out_b + sum(shape_bytes(comp.symtab.get(o, ""))
+                             for o in ins.operands)
+            bf += out_b
+        return b, bf, coll, coll_rs
+
+    bytes_: dict[str, float] = {}
+    bytes_f: dict[str, float] = {}
+    coll: dict[str, float] = {}
+    coll_rs_d: dict[str, float] = {}
+    for name, comp in comps.items():
+        (bytes_[name], bytes_f[name], coll[name],
+         coll_rs_d[name]) = comp_bytes_and_coll(comp)
+
+    called = {c for es in edges.values() for c, _, _ in es}
+    entries = [c for c in comps if c not in called]
+    if not entries:
+        entries = list(comps)
+    entry = next((c for c in entries if "main" in c), entries[0])
+
+    memo: dict[str, tuple] = {}
+
+    def total(cname: str, depth=0) -> tuple:
+        if cname in memo:
+            return memo[cname]
+        if cname not in comps or depth > 128:
+            return (0.0, 0.0, 0.0, 0.0, 0.0)
+        f = flops[cname]
+        b = bytes_[cname]
+        bf = bytes_f[cname]
+        c = coll[cname]
+        crs = coll_rs_d[cname]
+        for callee, mult, kind in edges[cname]:
+            cf, cb, cbf, cc, ccrs = total(callee, depth + 1)
+            f += mult * cf
+            if kind == "while":  # fusion internals are not HBM traffic
+                b += mult * cb
+                bf += mult * cbf
+                c += mult * cc
+                crs += mult * ccrs
+            else:
+                c += mult * cc  # (collectives never live in fusions; safety)
+                crs += mult * ccrs
+        memo[cname] = (f, b, bf, c, crs)
+        return memo[cname]
+
+    f, b, bf, c, crs = total(entry)
+    return {
+        "entry": entry,
+        "dot_flops_per_device": f,
+        "bytes_per_device": b,
+        "bytes_fused_per_device": bf,
+        "collective_bytes_per_device": c,
+        "collective_rs_bytes_per_device": crs,
+        "n_computations": len(comps),
+    }
+
+
+# per-chip hardware peaks (TPU v5e)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9
+LINK_BW = 50e9  # per ICI link
+
+
+def roofline_terms(an: dict) -> dict:
+    compute_s = an["dot_flops_per_device"] / PEAK_FLOPS
+    memory_s = an["bytes_per_device"] / HBM_BW
+    memory_fused_s = an.get("bytes_fused_per_device", 0.0) / HBM_BW
+    collective_s = an["collective_bytes_per_device"] / LINK_BW
+    collective_rs_s = an.get("collective_rs_bytes_per_device",
+                             an["collective_bytes_per_device"]) / LINK_BW
+    dom = max(
+        ("compute", compute_s), ("memory", memory_fused_s),
+        ("collective", collective_s), key=lambda kv: kv[1],
+    )[0]
+    step_s = max(compute_s, memory_fused_s, collective_s)
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,  # CPU-HLO fusion-boundary upper model
+        "memory_fused_s": memory_fused_s,  # TPU-like fused lower model
+        "collective_s": collective_s,
+        "collective_rs_s": collective_rs_s,
+        "bottleneck": dom,
+        "roofline_fraction": compute_s / step_s if step_s else 0.0,
+        "roofline_fraction_rs": compute_s / max(
+            compute_s, memory_fused_s, collective_rs_s, 1e-30),
+    }

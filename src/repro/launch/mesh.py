@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) — 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the leading "pod" axis
+carries data parallelism (or pipeline stages, see distributed/pipeline.py)
+across the DCN boundary.
+
+Defined as functions so importing this module never touches jax device
+state (required for the dry-run's forced host-device count to win).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(n_data: int = 2, n_model: int = 4):
+    """Small mesh over whatever local devices exist (tests/examples)."""
+    n = len(jax.devices())
+    n_model = min(n_model, n)
+    n_data = max(1, min(n_data, n // n_model))
+    return jax.make_mesh(
+        (n_data, n_model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,229 @@
+"""Shared neural-net layers (pure JAX, dict-pytree params).
+
+Conventions:
+* params are nested dicts of jnp arrays; ``init_*`` functions build them from
+  a PRNG key (usable under ``jax.eval_shape`` for allocation-free dry-runs);
+* compute dtype is configurable (bf16 on TPU, f32 in CPU tests); normalization
+  statistics, softmax and logits always accumulate in f32;
+* attention supports MHA / GQA / MQA via ``n_kv_heads`` and optional qk-norm
+  (Qwen3), with RoPE applied at call sites.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = dict
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype) -> Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# normalization
+# --------------------------------------------------------------------------
+def rms_norm(x: Array, gamma: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: Array, gamma: Array, beta: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: (..., S, n_heads, head_dim); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention (blockwise / flash-style in XLA; Pallas kernel swaps in on TPU)
+# --------------------------------------------------------------------------
+def repeat_kv(k: Array, n_rep: int) -> Array:
+    """(B, S, Hkv, dh) -> (B, S, Hkv*n_rep, dh) for GQA/MQA."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d
+    )
+
+
+def blockwise_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    block_kv: int = 512,
+    scale: float | None = None,
+    q_offset: int = 0,
+) -> Array:
+    """Flash-style grouped attention in pure XLA: scan over KV blocks with
+    online softmax.
+
+    q: (B, Sq, H, dh); k, v: (B, Skv, Hkv, dh|dv) with H = Hkv·rep — the
+    GQA/MQA repeat is expressed inside the einsums and never materialized.
+    Never materializes the (Sq, Skv) score matrix; peak extra memory is one
+    (B, Hkv, rep, Sq, block_kv) block, rematerialized in the backward pass.
+    ``q_offset`` positions queries at ``q_offset + arange(Sq)`` within the
+    KV sequence (decode/prefill-append).
+    """
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    dv = v.shape[-1]  # value head dim may differ (MLA)
+    skv = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    nb = max(1, (skv + block_kv - 1) // block_kv)
+    pad = nb * block_kv - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, nb, block_kv, hkv, dh)
+    vb = v.reshape(b, nb, block_kv, hkv, dv)
+
+    # inputs stay in model dtype (bf16) — the einsums accumulate in f32 via
+    # preferred_element_type, so cotangents of q/k/v (and the collectives
+    # that move them) stay bf16. Softmax statistics are f32 throughout.
+    qf = (q * scale).reshape(b, sq, hkv, rep, dh)
+    q_pos = q_offset + jnp.arange(sq)
+
+    @jax.checkpoint  # recompute each block's scores in the backward pass —
+    def step(carry, inp):  # never stash (Sq × Skv) worth of probabilities
+        m, l, acc = carry  # (B,Hkv,rep,Sq), same, (B,Hkv,rep,Sq,dv) — f32
+        kblk, vblk, blk_idx = inp
+        kv_pos = blk_idx * block_kv + jnp.arange(block_kv)
+        s_blk = jnp.einsum(
+            "bqkrd,bckd->bkrqc", qf, kblk,
+            preferred_element_type=jnp.float32,
+        )  # (B,Hkv,rep,Sq,block) f32
+        mask = kv_pos[None, :] <= q_pos[:, None] if causal else (
+            kv_pos[None, :] >= 0
+        ) & jnp.ones((sq, 1), bool)
+        mask = mask & (kv_pos[None, :] < skv)  # mask the tail padding
+        s_blk = jnp.where(mask[None, None, None], s_blk, -jnp.inf)
+        m_blk = jnp.max(s_blk, axis=-1)
+        m_new = jnp.maximum(m, m_blk)
+        # guard fully-masked rows (m_new = -inf)
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s_blk - safe_m[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - safe_m), 0.0)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkrqc,bckd->bkrqd", p.astype(q.dtype), vblk,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, rep, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, rep, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, rep, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step,
+        (m0, l0, a0),
+        (
+            jnp.moveaxis(kb, 1, 0),
+            jnp.moveaxis(vb, 1, 0),
+            jnp.arange(nb),
+        ),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,Hkv,rep,Sq,dv)
+    out = out.reshape(b, h, sq, dv)
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B, Sq, H, dv)
+
+
+def decode_attention(
+    q: Array, k_cache: Array, v_cache: Array, *, length: Array | int, scale=None
+) -> Array:
+    """Single-token grouped attention vs a (possibly sequence-sharded) KV cache.
+
+    q: (B, 1, H, dh); caches: (B, S, Hkv, dh) with H = Hkv * rep (GQA/MQA —
+    the KV repeat is expressed inside the einsum, never materialized).
+    O(S) work, no score matrix bigger than (B, H, S). When the cache's S dim
+    is sharded over a mesh axis, XLA lowers the softmax reductions to
+    cross-shard collectives (distributed flash-decode: partial (m, l, acc) +
+    psum merge).
+    """
+    b, _, h, dh = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    rep = h // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    qg = (q[:, 0] * scale).reshape(b, hkv, rep, dh).astype(jnp.float32)
+    logits = jnp.einsum("bkrd,bskd->bkrs", qg, k_cache.astype(jnp.float32))
+    valid = jnp.arange(s)[None, None, None, :] < jnp.asarray(length).reshape(
+        -1, 1, 1, 1
+    )
+    logits = jnp.where(valid, logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum(
+        "bkrs,bskd->bkrd", p / jnp.maximum(l, 1e-30), v_cache.astype(jnp.float32)
+    )
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# FFN
+# --------------------------------------------------------------------------
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    g = x @ w_gate
+    u = x @ w_up
+    return (jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u) @ w_down
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp(x: Array, ws: list[Array], bs: list[Array], act=jax.nn.relu) -> Array:
+    """Plain MLP tower (recsys heads)."""
+    h = x
+    for i, (w, b) in enumerate(zip(ws, bs)):
+        h = h @ w + b
+        if i < len(ws) - 1:
+            h = act(h)
+    return h

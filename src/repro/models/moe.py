@@ -1,0 +1,145 @@
+"""Mixture-of-Experts FFN with grouped sort-based capacity dispatch.
+
+Token-choice top-k routing. Dispatch avoids both the O(T·E·C) GShard one-hot
+and a *global* sort:
+
+  1. tokens are split into G groups aligned with the data-parallel shards;
+  2. within each group (vmapped → fully shard-local): flatten (token, slot)
+     assignments, sort by expert id, rank-within-expert via searchsorted,
+     drop overflow beyond the per-group capacity C_g;
+  3. scatter into a (G, E, C_g, d) buffer — G lives on the dp axes, E on
+     "model", so the only cross-device movement is the token→expert
+     all-to-all that GSPMD derives from the buffer's expert sharding;
+  4. one batched einsum per expert matmul against stacked weights, then the
+     inverse gather combines weighted expert outputs per group.
+
+Aux losses: load-balancing (Switch) + router z-loss, computed globally.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain_moe_buf
+from repro.models import layers
+
+Array = jax.Array
+
+
+class MoEConfig(NamedTuple):
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int  # per-expert
+    n_shared: int = 0  # always-on shared experts (DeepSeek-V3 style)
+    capacity_factor: float = 1.25
+    n_groups: int = 32  # dispatch groups (≥ #dp shards keeps scatters local)
+    dtype: jnp.dtype = jnp.float32
+
+
+def init_moe(key, cfg: MoEConfig) -> dict:
+    ks = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(f)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * scale_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f)) * scale_in).astype(cfg.dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f)) * scale_in).astype(cfg.dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d)) * scale_out).astype(cfg.dtype),
+    }
+    if cfg.n_shared:
+        p["shared"] = layers.init_swiglu(
+            ks[4], d, cfg.d_ff * cfg.n_shared, cfg.dtype
+        )
+    return p
+
+
+def capacity(cfg: MoEConfig, n_tokens: int) -> int:
+    c = int(cfg.capacity_factor * cfg.top_k * n_tokens / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+class MoEOut(NamedTuple):
+    y: Array
+    aux_loss: Array
+    z_loss: Array
+
+
+def _dispatch_group(xg: Array, top_e: Array, top_p: Array, e: int, c: int):
+    """One group's sort-based dispatch. xg (Tg, d) -> buffer (E, C, d) plus
+    the bookkeeping needed to combine back."""
+    tg, d = xg.shape
+    k = top_e.shape[-1]
+    flat_e = top_e.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(tg, dtype=jnp.int32), k)
+    flat_w = top_p.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    starts = jnp.searchsorted(se, jnp.arange(e, dtype=se.dtype), side="left")
+    pos = jnp.arange(tg * k, dtype=jnp.int32) - starts[se]
+    keep = pos < c
+    se_c = jnp.where(keep, se, 0)
+    pos_c = jnp.where(keep, pos, 0)
+    buf = jnp.zeros((e, c, d), xg.dtype)
+    buf = buf.at[se_c, pos_c].add(jnp.where(keep[:, None], xg[st], 0))
+    return buf, (se_c, pos_c, st, sw, keep)
+
+
+def _combine_group(out_buf: Array, book, tg: int) -> Array:
+    se_c, pos_c, st, sw, keep = book
+    gathered = out_buf[se_c, pos_c]  # (Tg*K, d)
+    contrib = jnp.where(keep[:, None],
+                        gathered * sw[:, None].astype(out_buf.dtype), 0)
+    return jnp.zeros((tg, out_buf.shape[-1]), out_buf.dtype).at[st].add(contrib)
+
+
+def moe_ffn(params: dict, x: Array, cfg: MoEConfig) -> MoEOut:
+    """x: (..., d_model) -> same shape. Flattens leading dims to tokens."""
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    xt = x.reshape(-1, d)
+    t = xt.shape[0]
+    e, k = cfg.n_experts, cfg.top_k
+    g = cfg.n_groups if (t % cfg.n_groups == 0 and t >= cfg.n_groups) else 1
+    tg = t // g
+    c = capacity(cfg, tg)
+
+    xg = xt.reshape(g, tg, d)
+    logits = xg.astype(jnp.float32) @ params["router"]  # (G, Tg, E) f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (G, Tg, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    ep = e % 16 == 0  # expert-parallel when E divides the model axis
+    buf, book = jax.vmap(
+        lambda xg_, te_, tp_: _dispatch_group(xg_, te_, tp_, e, c)
+    )(xg, top_e, top_p)  # buf (G, E, C, d)
+    buf = constrain_moe_buf(buf, ep)
+
+    gte = jnp.einsum("gecd,edf->gecf", buf, params["w_gate"])
+    up = jnp.einsum("gecd,edf->gecf", buf, params["w_up"])
+    h = constrain_moe_buf(
+        jax.nn.silu(gte.astype(jnp.float32)).astype(x.dtype) * up, ep)
+    out_buf = constrain_moe_buf(
+        jnp.einsum("gecf,efd->gecd", h, params["w_down"]), ep)  # (G, E, C, d)
+
+    y = jax.vmap(lambda ob, bk: _combine_group(ob, bk, tg))(out_buf, book)
+    y = y.reshape(t, d)
+
+    # ---- shared experts (dense) -----------------------------------------
+    if "shared" in params:
+        s = params["shared"]
+        y = y + layers.swiglu(xt, s["w_gate"], s["w_up"], s["w_down"])
+
+    # ---- aux losses ------------------------------------------------------
+    ohot = jax.nn.one_hot(top_e[..., 0].reshape(-1), e, dtype=jnp.float32)
+    frac_tok = ohot.mean(axis=0)
+    frac_prob = probs.reshape(-1, e).mean(axis=0)
+    aux = e * jnp.sum(frac_tok * frac_prob)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    return MoEOut(y=y.reshape(*lead, d), aux_loss=aux, z_loss=z)

@@ -1,0 +1,532 @@
+"""Config-driven LM-family transformer: dense GQA/MQA, Qwen3 qk-norm,
+DeepSeek MLA (+ absorbed decode), MoE FFN with shared experts, MTP head.
+
+Layer stacks are scanned (`lax.scan` over stacked params) so the HLO size is
+depth-independent; activation rematerialization is configurable. Three entry
+points per model: ``forward`` (train/score), ``prefill`` (build KV cache),
+``decode`` (one token against a cache — O(cache) flash-decode semantics).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain_axis, constrain_batch, constrain_seq
+from repro.models import layers
+from repro.models.moe import MoEConfig, init_moe, moe_ffn
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    n_shared: int = 0
+    first_dense: int = 0  # leading dense-FFN layers (DeepSeek-V3: 3)
+    # MLA
+    mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    mtp: bool = False  # multi-token-prediction auxiliary head
+    embed_dim: int = 0  # retrieval-embedding head (0 = none)
+    dtype: Any = jnp.float32
+    remat: str = "none"  # none | full
+    block_kv: int = 512
+    aux_loss_coef: float = 0.001
+    z_loss_coef: float = 1e-4
+    mtp_coef: float = 0.3
+    capacity_factor: float = 1.25
+    # distribution/memory policy (see EXPERIMENTS.md §Perf)
+    seq_parallel: bool = True  # Megatron SP on the residual stream
+    ce_chunk: int = 2048  # sequence-chunked cross entropy (0 = dense)
+
+    @property
+    def qk_dim(self) -> int:
+        return (self.qk_nope_dim + self.qk_rope_dim) if self.mla else self.head_dim
+
+    @property
+    def v_dim(self) -> int:
+        return self.v_head_dim if self.mla else self.head_dim
+
+    def moe_cfg(self) -> MoEConfig:
+        return MoEConfig(
+            n_experts=self.n_experts,
+            top_k=self.top_k,
+            d_model=self.d_model,
+            d_ff=self.moe_d_ff,
+            n_shared=self.n_shared,
+            capacity_factor=self.capacity_factor,
+            dtype=self.dtype,
+        )
+
+
+# ==========================================================================
+# parameter construction
+# ==========================================================================
+def _init_attn(key, cfg: TransformerConfig) -> dict:
+    d, h, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    if cfg.mla:
+        p = {
+            "q_a": layers.dense_init(ks[0], d, cfg.q_lora_rank, cfg.dtype),
+            "q_a_norm": jnp.ones((cfg.q_lora_rank,), cfg.dtype),
+            "q_b": layers.dense_init(
+                ks[1], cfg.q_lora_rank, h * cfg.qk_dim, cfg.dtype
+            ),
+            "kv_a": layers.dense_init(
+                ks[2], d, cfg.kv_lora_rank + cfg.qk_rope_dim, cfg.dtype
+            ),
+            "kv_a_norm": jnp.ones((cfg.kv_lora_rank,), cfg.dtype),
+            "k_b": layers.dense_init(
+                ks[3], cfg.kv_lora_rank, h * cfg.qk_nope_dim, cfg.dtype
+            ),
+            "v_b": layers.dense_init(
+                ks[4], cfg.kv_lora_rank, h * cfg.v_head_dim, cfg.dtype
+            ),
+            "wo": layers.dense_init(ks[5], h * cfg.v_head_dim, d, cfg.dtype),
+        }
+    else:
+        p = {
+            "wq": layers.dense_init(ks[0], d, h * hd, cfg.dtype),
+            "wk": layers.dense_init(ks[1], d, hk * hd, cfg.dtype),
+            "wv": layers.dense_init(ks[2], d, hk * hd, cfg.dtype),
+            "wo": layers.dense_init(ks[3], h * hd, d, cfg.dtype),
+        }
+        if cfg.qk_norm:
+            p["q_norm"] = jnp.ones((hd,), cfg.dtype)
+            p["k_norm"] = jnp.ones((hd,), cfg.dtype)
+    return p
+
+
+def _init_block(key, cfg: TransformerConfig, use_moe: bool) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn": _init_attn(k1, cfg),
+        "ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+        "ln2": jnp.ones((cfg.d_model,), cfg.dtype),
+    }
+    if use_moe:
+        p["moe"] = init_moe(k2, cfg.moe_cfg())
+    else:
+        p["ffn"] = layers.init_swiglu(k2, cfg.d_model, cfg.d_ff, cfg.dtype)
+    return p
+
+
+def init_params(key, cfg: TransformerConfig) -> dict:
+    ke, kd, km, kh, kt, kp = jax.random.split(key, 6)
+    n_dense = cfg.first_dense if cfg.moe else cfg.n_layers
+    n_moe = cfg.n_layers - n_dense if cfg.moe else 0
+    p: dict = {
+        "embed": layers.embed_init(ke, cfg.vocab, cfg.d_model, cfg.dtype),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+    }
+    if n_dense:
+        keys = jax.random.split(kd, n_dense)
+        p["dense_blocks"] = jax.vmap(lambda k: _init_block(k, cfg, False))(keys)
+    if n_moe:
+        keys = jax.random.split(km, n_moe)
+        p["moe_blocks"] = jax.vmap(lambda k: _init_block(k, cfg, True))(keys)
+    if cfg.mtp:
+        k1, k2 = jax.random.split(kt)
+        p["mtp"] = {
+            "proj": layers.dense_init(k1, 2 * cfg.d_model, cfg.d_model, cfg.dtype),
+            "block": _init_block(k2, cfg, False),
+            "norm": jnp.ones((cfg.d_model,), cfg.dtype),
+        }
+    if cfg.embed_dim:
+        p["embed_head"] = layers.dense_init(kh, cfg.d_model, cfg.embed_dim, cfg.dtype)
+    return p
+
+
+# ==========================================================================
+# blocks
+# ==========================================================================
+def _attention(p: dict, x: Array, positions: Array, cfg: TransformerConfig,
+               kv_override=None) -> Array:
+    """Full-sequence attention (train / prefill). x: (B, S, d)."""
+    b, s, d = x.shape
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.mla:
+        qa = layers.rms_norm(x @ p["q_a"], p["q_a_norm"])
+        q = (qa @ p["q_b"]).reshape(b, s, h, cfg.qk_dim)
+        q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+        q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+
+        kv = x @ p["kv_a"]  # (B, S, kv_lora + rope)
+        c_kv, k_rope = jnp.split(kv, [cfg.kv_lora_rank], axis=-1)
+        c_kv = layers.rms_norm(c_kv, p["kv_a_norm"])
+        k_rope = layers.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+        k_nope = (c_kv @ p["k_b"]).reshape(b, s, h, cfg.qk_nope_dim)
+        v = (c_kv @ p["v_b"]).reshape(b, s, h, cfg.v_head_dim)
+
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        kk = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, s, h, cfg.qk_rope_dim))], axis=-1
+        )
+        out = layers.blockwise_attention(
+            qq, kk, v, causal=True, block_kv=cfg.block_kv,
+            scale=1.0 / math.sqrt(cfg.qk_dim),
+        )
+        return out.reshape(b, s, h * cfg.v_head_dim) @ p["wo"]
+
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, hk, hd)
+    v = (x @ p["wv"]).reshape(b, s, hk, hd)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"])
+        k = layers.rms_norm(k, p["k_norm"])
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    # grouped attention: the GQA/MQA repeat stays inside the einsums
+    out = layers.blockwise_attention(q, k, v, causal=True, block_kv=cfg.block_kv)
+    return out.reshape(b, s, h * hd) @ p["wo"]
+
+
+def _block(p: dict, x: Array, positions: Array, cfg: TransformerConfig,
+           use_moe: bool):
+    # keep the residual stream batch-sharded (and sequence-sharded under SP)
+    # against the FSDP/TP weights — including the scan's remat stash.
+    _c = constrain_seq if cfg.seq_parallel else constrain_batch
+    x = _c(x)
+    a = _attention(p["attn"], layers.rms_norm(x, p["ln1"]), positions, cfg)
+    x = _c(x + a)
+    hn = layers.rms_norm(x, p["ln2"])
+    if use_moe:
+        out = moe_ffn(p["moe"], hn, cfg.moe_cfg())
+        return _c(x + out.y), out.aux_loss, out.z_loss
+    f = layers.swiglu(hn, p["ffn"]["w_gate"], p["ffn"]["w_up"], p["ffn"]["w_down"])
+    return _c(x + f), jnp.float32(0), jnp.float32(0)
+
+
+def _scan_blocks(blocks: dict, x: Array, positions: Array,
+                 cfg: TransformerConfig, use_moe: bool):
+    def step(carry, lp):
+        h, aux, z = carry
+        f = partial(_block, cfg=cfg, use_moe=use_moe)
+        if cfg.remat != "none":
+            f = jax.checkpoint(f, static_argnums=())
+        h, a, zz = f(lp, h, positions)
+        return (h, aux + a, z + zz), None
+
+    (x, aux, z), _ = jax.lax.scan(step, (x, jnp.float32(0), jnp.float32(0)), blocks)
+    return x, aux, z
+
+
+# ==========================================================================
+# entry points
+# ==========================================================================
+class ForwardOut(NamedTuple):
+    hidden: Array  # (B, S, d) final hidden (pre-norm applied)
+    logits: Array | None
+    aux_loss: Array
+    z_loss: Array
+
+
+def forward(params: dict, tokens: Array, cfg: TransformerConfig,
+            *, with_logits: bool = True) -> ForwardOut:
+    b, s = tokens.shape
+    x = constrain_batch(params["embed"][tokens].astype(cfg.dtype))
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    aux = z = jnp.float32(0)
+    if "dense_blocks" in params:
+        x, a1, z1 = _scan_blocks(params["dense_blocks"], x, positions, cfg, False)
+        aux, z = aux + a1, z + z1
+    if "moe_blocks" in params:
+        x, a2, z2 = _scan_blocks(params["moe_blocks"], x, positions, cfg, True)
+        aux, z = aux + a2, z + z2
+    x = layers.rms_norm(x, params["final_norm"])
+    logits = None
+    if with_logits:
+        logits = x @ params["embed"].T  # tied head
+    return ForwardOut(hidden=x, logits=logits, aux_loss=aux, z_loss=z)
+
+
+def cross_entropy(logits: Array, labels: Array) -> Array:
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return (lse - gold).mean()
+
+
+def chunked_cross_entropy(hidden: Array, embed: Array, labels: Array,
+                          chunk: int) -> Array:
+    """CE against a tied vocab head without materializing (B, S, V) logits:
+    scan over sequence chunks, rematerializing each chunk's logits in the
+    backward pass. Peak extra memory = one (B, chunk, V_shard) block."""
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    n = s // chunk
+    rem = s - n * chunk
+    et = embed.T
+
+    @jax.checkpoint
+    def one(h_c, l_c):
+        logits = h_c @ et
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(lf, l_c[..., None], axis=-1)[..., 0]
+        return (lse - gold).sum()
+
+    def step(tot, inp):
+        h_c, l_c = inp
+        return tot + one(h_c, l_c), None
+
+    hc = hidden[:, : n * chunk].reshape(b, n, chunk, d).swapaxes(0, 1)
+    lc = labels[:, : n * chunk].reshape(b, n, chunk).swapaxes(0, 1)
+    total, _ = jax.lax.scan(step, jnp.float32(0), (hc, lc))
+    if rem:
+        total = total + one(hidden[:, n * chunk:], labels[:, n * chunk:])
+    return total / (b * s)
+
+
+def loss_fn(params: dict, batch: dict, cfg: TransformerConfig) -> tuple[Array, dict]:
+    use_chunked = cfg.ce_chunk and batch["tokens"].shape[1] > cfg.ce_chunk
+    out = forward(params, batch["tokens"], cfg, with_logits=not use_chunked)
+    if use_chunked:
+        ce = chunked_cross_entropy(out.hidden, params["embed"],
+                                   batch["labels"], cfg.ce_chunk)
+    else:
+        ce = cross_entropy(out.logits, batch["labels"])
+    total = ce + cfg.aux_loss_coef * out.aux_loss + cfg.z_loss_coef * out.z_loss
+    metrics = {"ce": ce, "aux": out.aux_loss, "z": out.z_loss}
+    if cfg.mtp:
+        # MTP (DeepSeek-V3): one extra block predicts token t+2 from
+        # [h_t ; emb(token_{t+1})]  — trains lookahead without a second trunk.
+        h = out.hidden[:, :-1]
+        nxt = params["embed"][batch["tokens"][:, 1:]].astype(cfg.dtype)
+        m = params["mtp"]
+        hm = jnp.concatenate([h, nxt], axis=-1) @ m["proj"]
+        b, s, _ = hm.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        hm, _, _ = _block(m["block"], hm, positions, cfg, False)
+        hm = layers.rms_norm(hm, m["norm"])
+        # position t predicts token t+2 == labels[t+1]
+        if use_chunked:
+            mtp_ce = chunked_cross_entropy(hm, params["embed"],
+                                           batch["labels"][:, 1:], cfg.ce_chunk)
+        else:
+            mtp_ce = cross_entropy(hm @ params["embed"].T,
+                                   batch["labels"][:, 1:])
+        total = total + cfg.mtp_coef * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    metrics["loss"] = total
+    return total, metrics
+
+
+def embed_pool(params: dict, tokens: Array, cfg: TransformerConfig) -> Array:
+    """Retrieval-embedding tower: mean-pool final hidden -> proj -> l2 norm."""
+    out = forward(params, tokens, cfg, with_logits=False)
+    pooled = out.hidden.mean(axis=1)
+    if "embed_head" in params:
+        pooled = pooled @ params["embed_head"]
+    pooled = pooled.astype(jnp.float32)
+    return pooled * jax.lax.rsqrt((pooled * pooled).sum(-1, keepdims=True) + 1e-9)
+
+
+# ---------------------------- decode path ---------------------------------
+class KVCache(NamedTuple):
+    """GQA: k/v (L, B, S, Hkv, dh). MLA: c_kv (L, B, S, rank), k_rope (L, B, S, rope)."""
+    k: Array
+    v: Array
+    length: Array  # () int32 — tokens already in the cache
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int,
+               length: int = 0) -> KVCache:
+    L = cfg.n_layers
+    if cfg.mla:
+        k = jnp.zeros((L, batch, max_seq, cfg.kv_lora_rank), cfg.dtype)
+        v = jnp.zeros((L, batch, max_seq, cfg.qk_rope_dim), cfg.dtype)
+    else:
+        k = jnp.zeros((L, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), cfg.dtype)
+        v = jnp.zeros_like(k)
+    return KVCache(k=k, v=v, length=jnp.int32(length))
+
+
+def _decode_attn_gqa(p, x, cache_k, cache_v, length, cfg: TransformerConfig):
+    b, s1, d = x.shape  # s1 == 1
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pos = jnp.broadcast_to(length[None, None], (b, 1))
+    q = (x @ p["wq"]).reshape(b, 1, h, hd)
+    k = (x @ p["wk"]).reshape(b, 1, hk, hd)
+    v = (x @ p["wv"]).reshape(b, 1, hk, hd)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"])
+        k = layers.rms_norm(k, p["k_norm"])
+    q = layers.apply_rope(q, pos, cfg.rope_theta)
+    k = layers.apply_rope(k, pos, cfg.rope_theta)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, length, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, length, 0, 0))
+    # grouped attention — the GQA repeat stays inside the einsum
+    out = layers.decode_attention(q, cache_k, cache_v, length=length + 1)
+    return out.reshape(b, 1, h * hd) @ p["wo"], cache_k, cache_v
+
+
+def _decode_attn_mla(p, x, cache_c, cache_r, length, cfg: TransformerConfig):
+    """Absorbed MLA decode: cache holds (c_kv, k_rope); W_UK/W_UV folded in."""
+    b, _, d = x.shape
+    h = cfg.n_heads
+    pos = jnp.broadcast_to(length[None, None], (b, 1))
+    qa = layers.rms_norm(x @ p["q_a"], p["q_a_norm"])
+    q = (qa @ p["q_b"]).reshape(b, 1, h, cfg.qk_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = layers.apply_rope(q_rope, pos, cfg.rope_theta)
+
+    kv = x @ p["kv_a"]
+    c_new, r_new = jnp.split(kv, [cfg.kv_lora_rank], axis=-1)
+    c_new = layers.rms_norm(c_new, p["kv_a_norm"])
+    r_new = layers.apply_rope(r_new[:, :, None, :], pos, cfg.rope_theta)[:, :, 0]
+    cache_c = jax.lax.dynamic_update_slice(cache_c, c_new, (0, length, 0))
+    cache_r = jax.lax.dynamic_update_slice(cache_r, r_new, (0, length, 0))
+
+    # absorb: q_abs[b,h,r] = q_nope[b,h,n] @ W_UK[r, h, n]
+    w_uk = p["k_b"].reshape(cfg.kv_lora_rank, h, cfg.qk_nope_dim)
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0], w_uk)
+    s_c = jnp.einsum("bhr,bsr->bhs", q_abs.astype(jnp.float32),
+                     cache_c.astype(jnp.float32))
+    s_r = jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                     cache_r.astype(jnp.float32))
+    logits = (s_c + s_r) / math.sqrt(cfg.qk_dim)
+    valid = jnp.arange(cache_c.shape[1])[None, None, :] < (length + 1)
+    logits = jnp.where(valid, logits, -jnp.inf)
+    m = logits.max(-1, keepdims=True)
+    pdist = jnp.exp(logits - m)
+    pdist = pdist / jnp.maximum(pdist.sum(-1, keepdims=True), 1e-30)
+    ctx = jnp.einsum("bhs,bsr->bhr", pdist, cache_c.astype(jnp.float32))
+    w_uv = p["v_b"].reshape(cfg.kv_lora_rank, h, cfg.v_head_dim)
+    out = jnp.einsum("bhr,rhv->bhv", ctx, w_uv.astype(jnp.float32)).astype(cfg.dtype)
+    return out.reshape(b, 1, h * cfg.v_head_dim) @ p["wo"], cache_c, cache_r
+
+
+def decode_step(params: dict, tokens: Array, cache: KVCache,
+                cfg: TransformerConfig) -> tuple[Array, KVCache]:
+    """One decode step. tokens: (B, 1). Returns (logits (B, 1, V), new cache)."""
+    b = tokens.shape[0]
+    x = params["embed"][tokens].astype(cfg.dtype)
+    length = cache.length
+
+    def block_step(carry, inp):
+        h = carry
+        lp, ck, cv = inp
+        h = constrain_batch(h)
+        hn = layers.rms_norm(h, lp["ln1"])
+        if cfg.mla:
+            a, ck, cv = _decode_attn_mla(lp["attn"], hn, ck, cv, length, cfg)
+        else:
+            a, ck, cv = _decode_attn_gqa(lp["attn"], hn, ck, cv, length, cfg)
+        h = h + a
+        hn2 = layers.rms_norm(h, lp["ln2"])
+        if "moe" in lp:
+            h = h + moe_ffn(lp["moe"], hn2, cfg.moe_cfg()).y
+        else:
+            f = lp["ffn"]
+            h = h + layers.swiglu(hn2, f["w_gate"], f["w_up"], f["w_down"])
+        return h, (ck, cv)
+
+    n_dense = cfg.first_dense if cfg.moe else cfg.n_layers
+    x_h = x
+    new_k, new_v = [], []
+    if "dense_blocks" in params:
+        nd = n_dense
+        x_h, (k1, v1) = jax.lax.scan(
+            block_step, x_h,
+            (params["dense_blocks"], cache.k[:nd], cache.v[:nd]),
+        )
+        new_k.append(k1)
+        new_v.append(v1)
+    if "moe_blocks" in params:
+        x_h, (k2, v2) = jax.lax.scan(
+            block_step, x_h,
+            (params["moe_blocks"], cache.k[n_dense:], cache.v[n_dense:]),
+        )
+        new_k.append(k2)
+        new_v.append(v2)
+    x_h = layers.rms_norm(x_h, params["final_norm"])
+    logits = x_h @ params["embed"].T
+    cache = KVCache(
+        k=jnp.concatenate(new_k) if len(new_k) > 1 else new_k[0],
+        v=jnp.concatenate(new_v) if len(new_v) > 1 else new_v[0],
+        length=length + 1,
+    )
+    return logits, cache
+
+
+def prefill(params: dict, tokens: Array, cfg: TransformerConfig,
+            max_seq: int | None = None) -> tuple[Array, KVCache]:
+    """Run the full prompt, return (last-position logits, populated cache).
+
+    Uses the train-style blockwise forward to compute hidden states and
+    re-derives the cache tensors layer by layer (single pass, no score matrix).
+    """
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    x = params["embed"][tokens].astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def block_step(h, lp):
+        use_moe = "moe" in lp
+        h = constrain_batch(h)
+        hn = layers.rms_norm(h, lp["ln1"])
+        p = lp["attn"]
+        if cfg.mla:
+            kv = hn @ p["kv_a"]
+            c_kv, k_rope = jnp.split(kv, [cfg.kv_lora_rank], axis=-1)
+            c_kv = layers.rms_norm(c_kv, p["kv_a_norm"])
+            k_rope = layers.apply_rope(
+                k_rope[:, :, None, :], positions, cfg.rope_theta
+            )[:, :, 0]
+            ck, cv = c_kv, k_rope
+        else:
+            k = (hn @ p["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+            v = (hn @ p["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+            if cfg.qk_norm:
+                k = layers.rms_norm(k, p["k_norm"])
+            k = layers.apply_rope(k, positions, cfg.rope_theta)
+            ck, cv = k, v
+        h2, _, _ = _block(lp, h, positions, cfg, use_moe)
+        pad = max_seq - s
+        if pad > 0:
+            ck = jnp.pad(ck, [(0, 0), (0, pad)] + [(0, 0)] * (ck.ndim - 2))
+            cv = jnp.pad(cv, [(0, 0), (0, pad)] + [(0, 0)] * (cv.ndim - 2))
+        return h2, (ck, cv)
+
+    n_dense = cfg.first_dense if cfg.moe else cfg.n_layers
+    ks, vs = [], []
+    if "dense_blocks" in params:
+        x, (k1, v1) = jax.lax.scan(block_step, x, params["dense_blocks"])
+        ks.append(k1)
+        vs.append(v1)
+    if "moe_blocks" in params:
+        x, (k2, v2) = jax.lax.scan(block_step, x, params["moe_blocks"])
+        ks.append(k2)
+        vs.append(v2)
+    x = layers.rms_norm(x, params["final_norm"])
+    logits = x[:, -1:] @ params["embed"].T
+    cache = KVCache(
+        k=jnp.concatenate(ks) if len(ks) > 1 else ks[0],
+        v=jnp.concatenate(vs) if len(vs) > 1 else vs[0],
+        length=jnp.int32(s),
+    )
+    return logits, cache

@@ -1,0 +1,2 @@
+from repro.serve.batcher import Batcher  # noqa: F401
+from repro.serve.engine import BiMetricEngine, EmbedTower  # noqa: F401

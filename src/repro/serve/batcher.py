@@ -1,0 +1,60 @@
+"""Request batcher: pads/pools pending queries so tower forward passes run
+at serving-efficient batch sizes (the expensive tower is the bottleneck)."""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    tokens: np.ndarray
+    quota: int
+    result: "queue.Queue"
+
+
+class Batcher:
+    """Collects requests up to ``max_batch`` or ``max_wait_ms`` and runs them
+    through ``handler(list[Request])`` on a worker thread."""
+
+    def __init__(self, handler: Callable[[list[Request]], None],
+                 max_batch: int = 8, max_wait_ms: float = 5.0):
+        self.handler = handler
+        self.max_batch = max_batch
+        self.max_wait = max_wait_ms / 1e3
+        self._q: "queue.Queue[Request]" = queue.Queue()
+        self._stop = False
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def submit(self, tokens: np.ndarray, quota: int):
+        r = Request(tokens=tokens, quota=quota, result=queue.Queue(maxsize=1))
+        self._q.put(r)
+        return r.result
+
+    def _loop(self):
+        while not self._stop:
+            try:
+                first = self._q.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            batch = [first]
+            deadline = time.monotonic() + self.max_wait
+            while len(batch) < self.max_batch:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                try:
+                    batch.append(self._q.get(timeout=remaining))
+                except queue.Empty:
+                    break
+            self.handler(batch)
+
+    def close(self):
+        self._stop = True
+        self._thread.join(timeout=1.0)

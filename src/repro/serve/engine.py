@@ -1,0 +1,153 @@
+"""Bi-metric serving engine: the paper's deployment story, end to end.
+
+* the **cheap tower** (e.g. qwen3-0.6b / bge-micro-like) runs locally and
+  embeds the corpus once at index-build time — the graph index is built on
+  those embeddings only (Theorem 1.1 property 1);
+* the **expensive tower** (e.g. deepseek-v3 / SFR-Mistral-like) is the
+  ground-truth metric D: scoring a document costs a forward pass. The engine
+  memoizes per-query D embeddings and enforces the call budget *exactly* —
+  the quota is literally a compute budget on the big model;
+* queries run the two-stage search: stage 1 on-device jitted beam search
+  under d; stage 2 host-orchestrated greedy expansion under D (batched
+  tower calls, device compute / host control — the standard serving split).
+
+``EmbedTower`` wraps (params, config, pooling); swap in any LM arch config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distances, vamana
+from repro.models import transformer as T
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class EmbedTower:
+    params: dict
+    cfg: T.TransformerConfig
+
+    def __post_init__(self):
+        self._embed = jax.jit(
+            lambda p, toks: T.embed_pool(p, toks, self.cfg))
+
+    def embed(self, tokens: np.ndarray, batch: int = 64) -> np.ndarray:
+        out = []
+        n = tokens.shape[0]
+        pad = (-n) % batch
+        toks = np.pad(tokens, ((0, pad), (0, 0))) if pad else tokens
+        for s in range(0, len(toks), batch):
+            out.append(np.asarray(self._embed(self.params, toks[s:s + batch])))
+        return np.concatenate(out)[:n]
+
+
+@dataclasses.dataclass
+class ServeStats:
+    d_calls: int = 0
+    D_calls: int = 0  # expensive-tower document embeddings (the budget)
+
+
+class BiMetricEngine:
+    """corpus_tokens: (N, S) int32 document tokens."""
+
+    def __init__(self, cheap: EmbedTower, expensive: EmbedTower,
+                 corpus_tokens: np.ndarray,
+                 index_cfg: vamana.VamanaConfig | None = None):
+        self.cheap = cheap
+        self.expensive = expensive
+        self.corpus_tokens = corpus_tokens
+        self.n = corpus_tokens.shape[0]
+        # --- index build: cheap metric ONLY --------------------------------
+        self.emb_d = jnp.asarray(cheap.embed(corpus_tokens))
+        self.index = vamana.build(self.emb_d,
+                                  index_cfg or vamana.VamanaConfig(
+                                      max_degree=16, l_build=24, pool_size=48,
+                                      rev_candidates=16))
+        self._em_d = distances.EmbeddingMetric(self.emb_d)
+        self._adj = np.asarray(self.index.adjacency)
+
+    # ---------------------------------------------------------------- query
+    def query(self, query_tokens: np.ndarray, *, quota: int, k: int = 10,
+              n_seeds: int | None = None) -> tuple[np.ndarray, np.ndarray, ServeStats]:
+        """One query (S,) tokens. Returns (ids, D-dists, stats)."""
+        stats = ServeStats()
+        q_d = jnp.asarray(self.cheap.embed(query_tokens[None])[0])
+        q_D = self.expensive.embed(query_tokens[None])[0]
+        n_seeds = n_seeds or max(1, quota // 2)
+
+        # stage 1 — cheap greedy search on device
+        from repro.core.beam import greedy_search
+        res = greedy_search(
+            lambda ids: self._em_d.dists(q_d, ids),
+            self.index.adjacency,
+            jnp.array([self.index.medoid], jnp.int32),
+            n_points=self.n, beam_width=max(32, n_seeds),
+            pool_size=max(32, n_seeds), max_steps=4 * max(32, n_seeds),
+        )
+        stats.d_calls = int(res.n_calls)
+        seeds = [int(i) for i in np.asarray(res.pool_ids[:n_seeds]) if i >= 0]
+
+        # stage 2 — host-orchestrated greedy under the expensive tower
+        emb_cache: dict[int, np.ndarray] = {}
+
+        def D(ids: list[int]) -> np.ndarray:
+            new = [i for i in ids if i not in emb_cache]
+            if new:
+                allowed = max(0, quota - stats.D_calls)
+                new = new[:allowed]
+                if new:
+                    embs = self.expensive.embed(self.corpus_tokens[new])
+                    for i, e in zip(new, embs):
+                        emb_cache[i] = e
+                    stats.D_calls += len(new)
+            return np.array([
+                np.linalg.norm(q_D - emb_cache[i]) if i in emb_cache else np.inf
+                for i in ids
+            ])
+
+        dists = {i: d for i, d in zip(seeds, D(seeds))}
+        expanded: set[int] = set()
+        while stats.D_calls < quota:
+            frontier = [i for i in sorted(dists, key=dists.get)
+                        if i not in expanded and np.isfinite(dists[i])][:1]
+            if not frontier:
+                break
+            v = frontier[0]
+            expanded.add(v)
+            nbrs = [int(u) for u in self._adj[v] if u >= 0 and u not in dists]
+            if nbrs:
+                for u, du in zip(nbrs, D(nbrs)):
+                    if np.isfinite(du):
+                        dists[u] = float(du)
+        order = sorted((d, i) for i, d in dists.items() if np.isfinite(d))[:k]
+        ids = np.array([i for _, i in order], np.int64)
+        dd = np.array([d for d, _ in order], np.float64)
+        return ids, dd, stats
+
+    def rerank_query(self, query_tokens: np.ndarray, *, quota: int,
+                     k: int = 10) -> tuple[np.ndarray, np.ndarray, ServeStats]:
+        """"Bi-metric (baseline)": top-quota by d, embed all with D, rerank."""
+        stats = ServeStats()
+        q_d = jnp.asarray(self.cheap.embed(query_tokens[None])[0])
+        q_D = self.expensive.embed(query_tokens[None])[0]
+        from repro.core.beam import greedy_search
+        res = greedy_search(
+            lambda ids: self._em_d.dists(q_d, ids),
+            self.index.adjacency,
+            jnp.array([self.index.medoid], jnp.int32),
+            n_points=self.n, beam_width=max(32, quota),
+            pool_size=max(32, quota), max_steps=8 * max(32, quota),
+        )
+        stats.d_calls = int(res.n_calls)
+        cand = [int(i) for i in np.asarray(res.pool_ids[:quota]) if i >= 0]
+        embs = self.expensive.embed(self.corpus_tokens[cand])
+        stats.D_calls = len(cand)
+        dd = np.linalg.norm(embs - q_D[None], axis=1)
+        order = np.argsort(dd)[:k]
+        return np.asarray(cand)[order], dd[order], stats

@@ -1,0 +1,1 @@
+from repro.train import compression, contrastive, optimizer, trainer  # noqa: F401

@@ -1,0 +1,29 @@
+"""InfoNCE bi-encoder training — how the metric towers (d and D) are made.
+
+In-batch-negative symmetric InfoNCE, the standard recipe for the embedding
+models the paper uses (bge/gte/SFR are all trained this way). The end-to-end
+driver (examples/train_biencoder.py) trains the cheap proxy tower with this
+loss and then builds a bi-metric index over its embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+
+Array = jax.Array
+
+
+def info_nce_loss(params: dict, batch: dict, cfg: transformer.TransformerConfig,
+                  *, temperature: float = 0.05) -> tuple[Array, dict]:
+    q = transformer.embed_pool(params, batch["query_tokens"], cfg)  # (B, E)
+    d = transformer.embed_pool(params, batch["doc_tokens"], cfg)  # (B, E)
+    logits = (q @ d.T) / temperature  # (B, B) — in-batch negatives
+    labels = jnp.arange(q.shape[0])
+    lse_q = jax.nn.logsumexp(logits, axis=1)
+    lse_d = jax.nn.logsumexp(logits, axis=0)
+    diag = jnp.diagonal(logits)
+    loss = ((lse_q - diag).mean() + (lse_d - diag).mean()) / 2
+    acc = (logits.argmax(axis=1) == labels).mean()
+    return loss, {"loss": loss, "acc": acc}

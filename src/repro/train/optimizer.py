@@ -1,0 +1,191 @@
+"""Optimizers: AdamW with optional int8-quantized moment states.
+
+No optax dependency — states are plain pytrees so the checkpoint manager and
+the dry-run (ShapeDtypeStruct pytrees) can treat them uniformly.
+
+Mixed precision: model params may be bf16; the optimizer keeps an f32 master
+copy and casts back after the update. The int8 variant stores the Adam
+moments block-quantized (block 128 along the last axis, per-block absmax
+scales) — 6 bytes/param of optimizer state instead of 12, which is what lets
+the 671B config fit 16 GB/chip HBM at 512 chips (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Pytree = Any
+
+QBLOCK = 128
+
+
+# --------------------------------------------------------------------------
+# block quantization helpers (also reused by gradient compression)
+# --------------------------------------------------------------------------
+def _pad_last(x: Array, mult: int) -> Array:
+    pad = (-x.shape[-1]) % mult
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x
+
+
+def quantize_blockwise(x: Array) -> tuple[Array, Array]:
+    """f32 (..., d) -> (int8 (..., d), f32 scales (..., ceil(d/128)))."""
+    orig = x.shape[-1]
+    xp = _pad_last(x.astype(jnp.float32), QBLOCK)
+    blocks = xp.reshape(*xp.shape[:-1], -1, QBLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0  # (..., nb)
+    q = jnp.round(blocks / jnp.maximum(scale[..., None], 1e-12))
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    return q.reshape(*xp.shape[:-1], -1)[..., :orig], scale
+
+
+def dequantize_blockwise(q: Array, scale: Array) -> Array:
+    orig = q.shape[-1]
+    qp = _pad_last(q, QBLOCK).astype(jnp.float32)
+    blocks = qp.reshape(*qp.shape[:-1], -1, QBLOCK)
+    x = blocks * scale[..., None]
+    return x.reshape(*qp.shape[:-1], -1)[..., :orig]
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantized_state: bool = False  # int8 moments
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step: Array) -> Array:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (s - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.minimum(warm, cos)
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    master: Pytree  # f32 master weights
+    m: Pytree  # f32, or (int8 q, f32 scale) pairs when quantized
+    v: Pytree
+
+
+def _zeros_moment(p: Array, quantized: bool):
+    if quantized:
+        q, s = quantize_blockwise(jnp.zeros(p.shape, jnp.float32))
+        return {"q": q, "scale": s}
+    return jnp.zeros(p.shape, jnp.float32)
+
+
+def _read_moment(mm, quantized: bool) -> Array:
+    return dequantize_blockwise(mm["q"], mm["scale"]) if quantized else mm
+
+
+def _write_moment(x: Array, quantized: bool):
+    if quantized:
+        q, s = quantize_blockwise(x)
+        return {"q": q, "scale": s}
+    return x
+
+
+def global_norm(tree: Pytree) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves)
+    )
+
+
+def make_adamw(cfg: AdamWConfig):
+    def init(params: Pytree) -> AdamWState:
+        # copy=True: a no-op astype would alias the param buffer and break
+        # donation (same buffer donated twice in the fused train step)
+        master = jax.tree.map(
+            lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params)
+        m = jax.tree.map(lambda p: _zeros_moment(p, cfg.quantized_state), params)
+        v = jax.tree.map(lambda p: _zeros_moment(p, cfg.quantized_state), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), master=master, m=m, v=v)
+
+    def update(grads: Pytree, state: AdamWState, params: Pytree):
+        step = state.step + 1
+        lr = lr_schedule(cfg, step)
+        gn = global_norm(grads)
+        clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+        b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+        b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+        is_q = cfg.quantized_state
+
+        def upd(g, master, mm, vv, p):
+            g = g.astype(jnp.float32) * clip
+            m_f = _read_moment(mm, is_q)
+            v_f = _read_moment(vv, is_q)
+            if is_q:  # v stored as sqrt(v): halves the dynamic range the
+                v_f = v_f * v_f  # int8 grid has to span
+            m_new = cfg.b1 * m_f + (1 - cfg.b1) * g
+            v_new = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+            upd_ = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + cfg.eps)
+            decay = cfg.weight_decay * master if master.ndim >= 2 else 0.0
+            master_new = master - lr * (upd_ + decay)
+            v_store = jnp.sqrt(v_new) if is_q else v_new
+            return (
+                master_new,
+                _write_moment(m_new, is_q),
+                _write_moment(v_store, is_q),
+                master_new.astype(p.dtype),
+            )
+
+        # tree_map over (grads, master, m, v, params). m/v leaves may be dicts
+        # when quantized, so map over param structure explicitly.
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_ma = treedef.flatten_up_to(state.master)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        out = [upd(g, ma, mm, vv, p)
+               for g, ma, mm, vv, p in zip(flat_g, flat_ma, flat_m, flat_v, flat_p)]
+        master_new = treedef.unflatten([o[0] for o in out])
+        m_new = treedef.unflatten([o[1] for o in out])
+        v_new = treedef.unflatten([o[2] for o in out])
+        params_new = treedef.unflatten([o[3] for o in out])
+        return params_new, AdamWState(step=step, master=master_new, m=m_new, v=v_new), {
+            "grad_norm": gn, "lr": lr,
+        }
+
+    return init, update
+
+
+def make_sgd(lr: float = 1e-2):
+    """Plain SGD (used by convergence tests for gradient compression)."""
+
+    def init(params):
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          master=jax.tree.map(lambda p: p.astype(jnp.float32), params),
+                          m=None, v=None)
+
+    def update(grads, state, params):
+        master = jax.tree.map(
+            lambda ma, g: ma - lr * g.astype(jnp.float32), state.master, grads
+        )
+        params_new = jax.tree.map(lambda ma, p: ma.astype(p.dtype), master, params)
+        return params_new, AdamWState(step=state.step + 1, master=master,
+                                      m=None, v=None), {}
+
+    return init, update

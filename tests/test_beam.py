@@ -1,0 +1,73 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distances
+from repro.core.beam import NO_QUOTA, greedy_search
+
+
+def _line_graph(n):
+    """Path graph 0-1-2-...-n-1; embeddings on a line."""
+    adj = np.full((n, 4), -1, np.int32)
+    for i in range(n):
+        if i > 0:
+            adj[i, 0] = i - 1
+        if i < n - 1:
+            adj[i, 1] = i + 1
+    emb = jnp.arange(n, dtype=jnp.float32)[:, None]
+    return jnp.asarray(adj), emb
+
+
+def test_greedy_reaches_nn_on_line():
+    adj, emb = _line_graph(32)
+    em = distances.EmbeddingMetric(emb)
+    q = jnp.array([27.2], jnp.float32)
+    res = greedy_search(
+        lambda ids: em.dists(q, ids), adj, jnp.array([0], jnp.int32),
+        n_points=32, beam_width=4, max_steps=200,
+    )
+    assert int(res.pool_ids[0]) == 27
+
+
+def test_quota_exact():
+    adj, emb = _line_graph(64)
+    em = distances.EmbeddingMetric(emb)
+    q = jnp.array([63.0], jnp.float32)
+    for quota in [1, 5, 17]:
+        res = greedy_search(
+            lambda ids: em.dists(q, ids), adj, jnp.array([0], jnp.int32),
+            n_points=64, beam_width=4, quota=quota, max_steps=500,
+        )
+        assert int(res.n_calls) <= quota
+        # scored bitmap count == n_calls (each call scored exactly one vertex)
+        assert int(res.scored.sum()) == int(res.n_calls)
+
+
+def test_pool_sorted_and_deduped():
+    adj, emb = _line_graph(16)
+    em = distances.EmbeddingMetric(emb)
+    q = jnp.array([8.0], jnp.float32)
+    res = greedy_search(
+        lambda ids: em.dists(q, ids), adj,
+        jnp.array([0, 0, 15, 3], jnp.int32),  # duplicate entries
+        n_points=16, beam_width=6, max_steps=100,
+    )
+    d = np.asarray(res.pool_dists)
+    assert (np.diff(d[np.isfinite(d)]) >= 0).all()
+    ids = np.asarray(res.pool_ids)
+    valid = ids[ids >= 0]
+    assert len(valid) == len(set(valid.tolist()))
+
+
+def test_entries_respect_quota():
+    adj, emb = _line_graph(16)
+    em = distances.EmbeddingMetric(emb)
+    q = jnp.array([8.0], jnp.float32)
+    res = greedy_search(
+        lambda ids: em.dists(q, ids), adj,
+        jnp.arange(10, dtype=jnp.int32),  # 10 entries but quota 4
+        n_points=16, beam_width=6, quota=4, max_steps=100,
+    )
+    assert int(res.n_calls) == 4
+    assert int(res.scored.sum()) == 4

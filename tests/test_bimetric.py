@@ -1,0 +1,90 @@
+"""Behavioral tests of the paper's core claims on controlled data."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bimetric, distances, metrics, vamana
+from repro.data.synthetic import make_dataset
+
+
+@pytest.fixture(scope="module")
+def setup():
+    data = make_dataset(n=1024, n_queries=24, dim_D=48, dim_d=8,
+                        noise=0.12, seed=1)
+    cfg = vamana.VamanaConfig(max_degree=16, l_build=24, alpha=1.2,
+                              pool_size=48, rev_candidates=16,
+                              build_batch=512, n_rounds=2)
+    idx = vamana.build(data.corpus_d, cfg)
+    em_d = distances.EmbeddingMetric(data.corpus_d)
+    em_D = distances.EmbeddingMetric(data.corpus_D)
+    true_ids, _ = em_D.brute_force(data.queries_D, 10)
+    return data, idx, em_d, em_D, true_ids
+
+
+def _run(setup, method, quota):
+    data, idx, em_d, em_D, true_ids = setup
+    fn = (bimetric.bimetric_search if method == "bimetric"
+          else bimetric.rerank_search)
+    res = fn(
+        lambda q, i: em_d.dists(q, i), lambda q, i: em_D.dists(q, i),
+        idx, data.queries_d, data.queries_D,
+        n_points=1024, quota=quota, k=10,
+    )
+    rec = float(metrics.recall_at_k(res.ids, true_ids).mean())
+    return res, rec
+
+
+def test_quota_never_exceeded(setup):
+    for quota in (20, 60, 150):
+        res, _ = _run(setup, "bimetric", quota)
+        assert int(res.D_calls.max()) <= quota
+        res2, _ = _run(setup, "rerank", quota)
+        assert int(res2.D_calls.max()) <= quota
+
+
+def test_converges_to_exact(setup):
+    """Property 4 of Thm 1.1: with enough budget the true NN under D."""
+    _, rec = _run(setup, "bimetric", 700)
+    assert rec >= 0.95, rec
+
+
+def test_bimetric_beats_or_matches_rerank(setup):
+    """The paper's empirical headline (Fig. 1): at equal Q, the two-stage
+    search dominates re-ranking (checked at a mid-range budget)."""
+    _, rec_b = _run(setup, "bimetric", 80)
+    _, rec_r = _run(setup, "rerank", 80)
+    assert rec_b >= rec_r - 0.02, (rec_b, rec_r)
+
+
+def test_identical_metrics_reduce_to_single(setup):
+    """With d == D (C=1) the bi-metric search equals single-metric search."""
+    data, idx, em_d, em_D, _ = setup
+    res = bimetric.bimetric_search(
+        lambda q, i: em_d.dists(q, i), lambda q, i: em_d.dists(q, i),
+        idx, data.queries_d, data.queries_d,
+        n_points=1024, quota=400, k=10,
+    )
+    true_d, _ = em_d.brute_force(data.queries_d, 10)
+    rec = float(metrics.recall_at_k(res.ids, true_d).mean())
+    assert rec >= 0.95
+
+
+def test_recall_monotone_in_quota(setup):
+    recs = [(_run(setup, "bimetric", q)[1]) for q in (20, 80, 300)]
+    assert recs[0] <= recs[1] + 0.05 and recs[1] <= recs[2] + 0.05
+
+
+def test_seeding_ablation(setup):
+    """Figure 3: multi-seed stage-2 beats default-entry stage-2."""
+    data, idx, em_d, em_D, true_ids = setup
+    kw = dict(n_points=1024, quota=100, k=10)
+    multi = bimetric.bimetric_search(
+        lambda q, i: em_d.dists(q, i), lambda q, i: em_D.dists(q, i),
+        idx, data.queries_d, data.queries_D, **kw)
+    default = bimetric.bimetric_search(
+        lambda q, i: em_d.dists(q, i), lambda q, i: em_D.dists(q, i),
+        idx, data.queries_d, data.queries_D, use_stage1=False, **kw)
+    rec_m = float(metrics.recall_at_k(multi.ids, true_ids).mean())
+    rec_d = float(metrics.recall_at_k(default.ids, true_ids).mean())
+    assert rec_m >= rec_d - 0.02, (rec_m, rec_d)

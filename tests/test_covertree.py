@@ -1,0 +1,63 @@
+import numpy as np
+import pytest
+
+from repro.core import covertree
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    x_D = rng.normal(size=(400, 12))
+    # proxy: noisy compression (C-approx after scaling)
+    proj = rng.normal(size=(12, 5)) / np.sqrt(5)
+    x_d = x_D @ proj
+    return x_d, x_D
+
+
+def test_cover_invariants(data):
+    x_d, _ = data
+    t = covertree.build(x_d, T=1.0)
+    # separation: members of each cover are >= 2^i/T apart (scaled)
+    for j, level in enumerate(t.levels[:-1]):
+        r = t.level_scales[j] / t.T
+        pts = x_d[level] * t.scale
+        if len(level) > 1:
+            dm = np.linalg.norm(pts[:, None] - pts[None], axis=-1)
+            np.fill_diagonal(dm, np.inf)
+            assert dm.min() > r * 0.999, f"level {j}"
+    # root covers everything
+    assert len(t.levels[0]) >= 1
+    assert len(t.levels[-1]) == t.n
+
+
+def test_search_exact_same_metric(data):
+    x_d, _ = data
+    t = covertree.build(x_d, T=1.0)
+    q = x_d[17] + 0.01
+    ids, dists, calls = covertree.search(
+        t, lambda i: np.linalg.norm(x_d[i] - q, axis=-1), eps=0.25, k=1)
+    true = np.argmin(np.linalg.norm(x_d - q, axis=-1))
+    true_d = np.linalg.norm(x_d - q, axis=-1).min()
+    assert dists[0] <= (1 + 0.25) * true_d + 1e-9
+    assert calls < 400  # sub-linear in practice
+
+
+def test_bimetric_cover_tree(data):
+    """Build on proxy d (T=C), search with D: 1+eps accuracy wrt D."""
+    x_d, x_D = data
+    # measure C between the two metrics on sampled pairs
+    rng = np.random.default_rng(1)
+    ii = rng.integers(0, 400, 200)
+    jj = rng.integers(0, 400, 200)
+    dd = np.linalg.norm(x_d[ii] - x_d[jj], axis=-1) + 1e-9
+    DD = np.linalg.norm(x_D[ii] - x_D[jj], axis=-1) + 1e-9
+    ratio = DD / dd
+    C = float(ratio.max() / ratio.min())
+    t = covertree.build(x_d * ratio.min(), T=min(C, 8.0))
+    q_D = x_D[33] + 0.05
+    ids, dists, calls = covertree.search(
+        t, lambda i: np.linalg.norm(x_D[i] - q_D, axis=-1), eps=0.5, k=1)
+    true_d = np.linalg.norm(x_D - q_D, axis=-1).min()
+    # generous slack: C is an empirical estimate on sampled pairs
+    assert dists[0] <= (1 + 0.5) * true_d * 1.5 + 1e-9
+    assert calls < 400

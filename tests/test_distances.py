@@ -1,0 +1,67 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distances
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def test_pairwise_l2_matches_numpy(rng_key):
+    x = jax.random.normal(rng_key, (13, 7))
+    y = jax.random.normal(jax.random.fold_in(rng_key, 1), (9, 7))
+    d = distances.pairwise(x, y, "l2")
+    ref = np.linalg.norm(np.asarray(x)[:, None] - np.asarray(y)[None], axis=-1)
+    np.testing.assert_allclose(np.asarray(d), ref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("metric", distances.VALID_METRICS)
+def test_point_to_points_consistency(rng_key, metric):
+    x = jax.random.normal(rng_key, (11, 5))
+    q = jax.random.normal(jax.random.fold_in(rng_key, 2), (5,))
+    d1 = distances.point_to_points(q, x, metric)
+    d2 = distances.pairwise(q[None], x, metric)[0]
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-5)
+
+
+def test_embedding_metric_invalid_ids(rng_key):
+    emb = jax.random.normal(rng_key, (10, 4))
+    em = distances.EmbeddingMetric(emb)
+    d = em.dists(emb[0], jnp.array([0, -1, 3]))
+    assert np.isinf(np.asarray(d)[1])
+    assert np.asarray(d)[0] == pytest.approx(0.0, abs=1e-5)
+
+
+def test_brute_force_topk(rng_key):
+    emb = jax.random.normal(rng_key, (50, 8))
+    em = distances.EmbeddingMetric(emb)
+    q = emb[:3] + 0.01
+    ids, d = em.brute_force(q, 1)
+    assert list(np.asarray(ids)[:, 0]) == [0, 1, 2]
+
+
+@given(scale=st.floats(1.1, 10.0))
+def test_measure_capproximation(scale):
+    rng = np.random.default_rng(0)
+    dd = jnp.asarray(rng.uniform(0.5, 2.0, size=100).astype(np.float32))
+    # D within [1, scale] multiplicative band of d
+    band = jnp.asarray(rng.uniform(1.0, scale, size=100).astype(np.float32))
+    DD = dd * band
+    s, c = distances.measure_capproximation(dd, DD)
+    # after rescaling by s, d' <= D <= C d' must hold
+    dscaled = np.asarray(dd) * s
+    assert (dscaled <= np.asarray(DD) * (1 + 1e-5)).all()
+    assert (np.asarray(DD) <= c * dscaled * (1 + 1e-5)).all()
+    assert c <= scale * 1.01
+
+
+def test_l2_triangle_inequality(rng_key):
+    x = np.asarray(jax.random.normal(rng_key, (20, 6)))
+    d = np.asarray(distances.pairwise(jnp.asarray(x), jnp.asarray(x)))
+    for i in range(0, 20, 5):
+        for j in range(0, 20, 5):
+            for k in range(0, 20, 5):
+                assert d[i, j] <= d[i, k] + d[k, j] + 1e-4

@@ -1,0 +1,64 @@
+"""The roofline analyzer must be loop-trip-count exact."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo_analysis as H
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_equals_unrolled_flops():
+    def scanned(x, ws):
+        y, _ = jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), None), x, ws)
+        return y
+
+    def unrolled(x, ws):
+        for i in range(8):
+            x = jnp.tanh(x @ ws[i])
+        return x
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
+    fs = H.analyze(_compile_text(scanned, x, ws))["dot_flops_per_device"]
+    fu = H.analyze(_compile_text(unrolled, x, ws))["dot_flops_per_device"]
+    expect = 8 * 2 * 64 * 128 * 128
+    assert fs == expect and fu == expect
+
+
+def test_dot_flops_exact_batched():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+
+    a = jax.ShapeDtypeStruct((4, 32, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 64, 16), jnp.float32)
+    an = H.analyze(_compile_text(f, a, b))
+    assert an["dot_flops_per_device"] == 2 * 4 * 32 * 64 * 16
+
+
+def test_shape_bytes_parser():
+    assert H.shape_bytes("bf16[128,256]{1,0}") == 128 * 256 * 2
+    assert H.shape_bytes("(f32[8]{0}, s32[4]{0})") == 8 * 4 + 4 * 4
+    assert H.shape_bytes("pred[]") == 1 * 1
+
+
+def test_bytes_reasonable_for_elementwise():
+    def f(x):
+        return jnp.tanh(x) * 2.0 + 1.0
+
+    x = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    an = H.analyze(_compile_text(f, x))
+    nbytes = 1024 * 1024 * 4
+    # fused chain: ~read once + write once
+    assert nbytes <= an["bytes_per_device"] <= 6 * nbytes
+
+
+def test_roofline_terms_structure():
+    an = dict(dot_flops_per_device=197e12, bytes_per_device=819e9,
+              bytes_fused_per_device=819e9, collective_bytes_per_device=0.0)
+    t = H.roofline_terms(an)
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert abs(t["memory_fused_s"] - 1.0) < 1e-9
+    assert t["bottleneck"] in ("compute", "memory")

@@ -1,0 +1,73 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distances
+from repro.kernels import ref
+from repro.train.optimizer import dequantize_blockwise, quantize_blockwise
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(1, 5), st.integers(1, 500), st.floats(0.1, 100.0))
+def test_quantize_roundtrip_bounded(rows, cols, scale):
+    rng = np.random.default_rng(rows * 1000 + cols)
+    x = jnp.asarray(rng.normal(size=(rows, cols)) * scale, jnp.float32)
+    q, s = quantize_blockwise(x)
+    back = dequantize_blockwise(q, s)
+    # per-block bound: |err| <= block_absmax / 127
+    xp = np.asarray(x)
+    err = np.abs(np.asarray(back) - xp)
+    pad = (-cols) % 128
+    xb = np.pad(xp, [(0, 0), (0, pad)]).reshape(rows, -1, 128)
+    bound = np.abs(xb).max(-1) / 127.0 + 1e-6
+    errb = np.pad(err, [(0, 0), (0, pad)]).reshape(rows, -1, 128).max(-1)
+    assert (errb <= bound + 1e-5).all()
+
+
+@given(st.integers(2, 30), st.integers(2, 30), st.integers(2, 16))
+def test_pairwise_symmetry_and_identity(n, m, d):
+    rng = np.random.default_rng(n * 100 + m)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    dm = np.asarray(distances.pairwise(x, x))
+    np.testing.assert_allclose(dm, dm.T, atol=1e-4)
+    # the ||x||^2+||y||^2-2xy expansion cancels catastrophically at zero and
+    # the sqrt amplifies it: diag error is O(sqrt(eps)*||x||) in f32
+    assert np.abs(np.diag(dm)).max() < 3e-2
+
+
+@given(st.integers(1, 8), st.integers(1, 32), st.integers(1, 32))
+def test_beam_merge_is_sorted_merge(b, L, K):
+    rng = np.random.default_rng(b * 7 + L * 3 + K)
+    bi = jnp.asarray(rng.integers(0, 1000, (b, L)), jnp.int32)
+    bd = jnp.asarray(rng.uniform(size=(b, L)), jnp.float32)
+    ci = jnp.asarray(rng.integers(0, 1000, (b, K)), jnp.int32)
+    cd = jnp.asarray(rng.uniform(size=(b, K)), jnp.float32)
+    mi, md = ref.beam_merge_topk_ref(bi, bd, ci, cd)
+    alld = np.concatenate([np.asarray(bd), np.asarray(cd)], 1)
+    expect = np.sort(alld, axis=1)[:, :L]
+    np.testing.assert_allclose(np.asarray(md), expect, atol=1e-6)
+    assert (np.diff(np.asarray(md), axis=1) >= 0).all()
+
+
+@given(st.integers(4, 64), st.floats(0.0, 0.3))
+def test_synthetic_capprox_at_least_one(dim_d, noise):
+    from repro.data.synthetic import make_dataset
+
+    data = make_dataset(n=128, n_queries=4, dim_D=64,
+                        dim_d=min(dim_d, 64), noise=noise, seed=dim_d)
+    assert data.c_estimate >= 1.0
+
+
+@given(st.integers(1, 4), st.integers(8, 64))
+def test_flash_attention_rowsum_one(h, s):
+    """Softmax rows integrate to 1: attention of v=ones is ones."""
+    key = jax.random.PRNGKey(h * 100 + s)
+    q = jax.random.normal(key, (1, h, s, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, h, s, 16))
+    v = jnp.ones((1, h, s, 16))
+    out = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), 1.0, atol=1e-5)
