@@ -3,9 +3,17 @@
 All benchmarks print ``name,us_per_call,derived`` CSV rows (harness contract):
 ``us_per_call`` is wall-µs per expensive-metric call (or per op for kernel
 benches); ``derived`` carries the figure's metric (NDCG/recall/etc.).
+
+Every emitted row is also recorded so ``benchmarks/run.py`` can write one
+machine-readable ``BENCH_<slug>.json`` artifact per benchmark (the perf
+trajectory across PRs); ``BENCH_OUT_DIR`` overrides the output directory
+(default: current working directory, i.e. the repo root under the tier-1
+invocation).
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
@@ -23,9 +31,47 @@ INDEX_CFG = vamana.VamanaConfig(
     build_batch=1024, n_rounds=2,
 )
 
+_EMITTED: list[dict] = []
+
 
 def emit(name: str, us_per_call: float, derived) -> None:
     print(f"{name},{us_per_call:.3f},{derived}")
+    _EMITTED.append({"name": name, "us_per_call": float(us_per_call),
+                     "derived": str(derived)})
+
+
+def drain_emitted() -> list[dict]:
+    """Rows emitted since the last drain (run.py snapshots per benchmark)."""
+    rows = _EMITTED[:]
+    _EMITTED.clear()
+    return rows
+
+
+def _jsonable(obj):
+    """Coerce benchmark results (tuple keys, numpy scalars, ...) to JSON."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, (np.ndarray, jax.Array)):
+        return np.asarray(obj).tolist()
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    return str(obj)
+
+
+def write_bench_json(slug: str, payload: dict) -> str:
+    """Write ``BENCH_<slug>.json`` to ``BENCH_OUT_DIR`` (default: cwd)."""
+    out_dir = os.environ.get("BENCH_OUT_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{slug}.json")
+    with open(path, "w") as f:
+        json.dump(_jsonable(payload), f, indent=2, sort_keys=True)
+    return path
 
 
 class Setup:

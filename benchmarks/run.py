@@ -1,6 +1,9 @@
 """Benchmark harness — one module per paper table/figure.
 
-Each row: ``name,us_per_call,derived`` CSV.
+Each row: ``name,us_per_call,derived`` CSV. Additionally, every benchmark's
+emitted rows (plus whatever dict its ``run()`` returns) are written to a
+machine-readable ``BENCH_<slug>.json`` artifact so the perf trajectory is
+tracked from PR to PR (``BENCH_OUT_DIR`` overrides the destination).
 """
 from __future__ import annotations
 
@@ -13,24 +16,32 @@ sys.path.insert(0, "src")
 
 def main() -> None:
     from benchmarks import (bench_bimetric, bench_covertree, bench_model_gap,
-                            bench_search_perf, bench_seeding, bench_table1)
+                            bench_search_perf, bench_seeding, bench_table1,
+                            common)
 
     benches = [
-        ("table1", bench_table1.run),
-        ("fig1", bench_bimetric.run),
-        ("fig2", bench_model_gap.run),
-        ("fig3", bench_seeding.run),
-        ("covertree", bench_covertree.run),
-        ("perf", bench_search_perf.run),
+        ("table1", "table1", bench_table1.run),
+        ("fig1", "bimetric", bench_bimetric.run),
+        ("fig2", "model_gap", bench_model_gap.run),
+        ("fig3", "seeding", bench_seeding.run),
+        ("covertree", "covertree", bench_covertree.run),
+        ("perf", "search_perf", bench_search_perf.run),
     ]
     print("name,us_per_call,derived")
     failures = []
-    for name, fn in benches:
+    for name, slug, fn in benches:
+        common.drain_emitted()
         t0 = time.time()
         try:
-            fn()
-            print(f"{name}/_wall,{(time.time()-t0)*1e6:.0f},seconds="
-                  f"{time.time()-t0:.1f}")
+            result = fn()
+            wall = time.time() - t0
+            print(f"{name}/_wall,{wall*1e6:.0f},seconds={wall:.1f}")
+            common.write_bench_json(slug, {
+                "bench": name,
+                "wall_seconds": wall,
+                "rows": common.drain_emitted(),
+                "result": result,
+            })
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
             failures.append((name, repr(e)))

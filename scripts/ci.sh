@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verification — the exact command the roadmap pins:
+#   PYTHONPATH=src python -m pytest -x -q
+# Run from the repo root (locally or in CI).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

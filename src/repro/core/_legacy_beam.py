@@ -1,0 +1,154 @@
+"""FROZEN pre-refactor per-query greedy search — parity oracle, not for use.
+
+This is the retired single-query engine exactly as it shipped before the
+batched refactor (one vertex expanded per ``while_loop`` iteration, stable
+argsort pool merge). It exists for two reasons only:
+
+* the parity tests assert the batched engine (``repro.core.beam``) is
+  bit-exact against it — same pool ids, distances, ``n_calls`` — at
+  ``expand_width=1``;
+* ``benchmarks/bench_search_perf.py`` uses it as the "old" baseline when
+  reporting the refactor's throughput gain.
+
+Do not extend it and do not call it from production paths; new code goes
+through ``repro.core.beam``.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+NO_QUOTA = jnp.iinfo(jnp.int32).max // 2
+
+
+class SearchState(NamedTuple):
+    pool_ids: Array  # (P,) int32, sorted by dist; -1 pad
+    pool_dists: Array  # (P,) f32; +inf pad
+    expanded: Array  # (P,) bool
+    scored: Array  # (N,) bool bitmap — dedup + exact call counting
+    n_calls: Array  # () int32
+    step: Array  # () int32
+
+
+class SearchResult(NamedTuple):
+    pool_ids: Array
+    pool_dists: Array
+    scored: Array
+    n_calls: Array
+    n_steps: Array
+
+
+def _merge_pool(
+    pool_ids: Array,
+    pool_dists: Array,
+    expanded: Array,
+    new_ids: Array,
+    new_dists: Array,
+) -> tuple[Array, Array, Array]:
+    """Merge new scored candidates into the sorted pool, keep best P."""
+    p = pool_ids.shape[0]
+    ids = jnp.concatenate([pool_ids, new_ids])
+    dists = jnp.concatenate([pool_dists, new_dists])
+    exp = jnp.concatenate([expanded, jnp.zeros(new_ids.shape, dtype=bool)])
+    order = jnp.argsort(dists, stable=True)
+    return ids[order][:p], dists[order][:p], exp[order][:p]
+
+
+def greedy_search(
+    dist_fn: Callable[[Array], Array],
+    adjacency: Array,
+    entry_ids: Array,
+    *,
+    n_points: int,
+    beam_width: int,
+    pool_size: int | None = None,
+    quota: int | Array = NO_QUOTA,
+    max_steps: int | None = None,
+    scored_init: Array | None = None,
+    calls_init: Array | int = 0,
+) -> SearchResult:
+    """Greedy beam search over ``adjacency`` for a single query (frozen)."""
+    adjacency = adjacency.astype(jnp.int32)
+    n, r = adjacency.shape
+    assert n == n_points
+    L = beam_width
+    P = pool_size or max(L, entry_ids.shape[0])
+    P = max(P, L, entry_ids.shape[0])
+    if max_steps is None:
+        max_steps = 4 * L + 16
+    quota = jnp.asarray(quota, jnp.int32)
+
+    # --- score entries (respecting the quota) -----------------------------
+    e = entry_ids.shape[0]
+    entry_ids = entry_ids.astype(jnp.int32)
+    # dedup entries positionally: an id equal to an earlier id becomes -1.
+    dup = (entry_ids[:, None] == entry_ids[None, :]) & (
+        jnp.arange(e)[:, None] > jnp.arange(e)[None, :]
+    )
+    entry_ids = jnp.where(dup.any(axis=1), -1, entry_ids)
+    valid = entry_ids >= 0
+    order_idx = jnp.cumsum(valid.astype(jnp.int32)) - 1  # call index per entry
+    budget0 = quota - jnp.asarray(calls_init, jnp.int32)
+    keep = valid & (order_idx < budget0)
+    safe_entries = jnp.where(keep, entry_ids, -1)
+    entry_dists = jnp.where(keep, dist_fn(safe_entries), jnp.inf)
+    n_calls0 = jnp.asarray(calls_init, jnp.int32) + keep.sum(dtype=jnp.int32)
+
+    scored0 = (
+        jnp.zeros((n,), dtype=bool) if scored_init is None else scored_init
+    )
+    # scatter-OR (max): padding ids all alias index 0, so a plain set() races
+    scored0 = scored0.at[jnp.maximum(safe_entries, 0)].max(keep)
+
+    pool_ids = jnp.full((P,), -1, jnp.int32)
+    pool_dists = jnp.full((P,), jnp.inf, jnp.float32)
+    expanded = jnp.zeros((P,), dtype=bool)
+    pool_ids, pool_dists, expanded = _merge_pool(
+        pool_ids, pool_dists, expanded, safe_entries, entry_dists
+    )
+
+    state = SearchState(
+        pool_ids, pool_dists, expanded, scored0, n_calls0, jnp.int32(0)
+    )
+
+    def frontier_open(s: SearchState) -> Array:
+        frontier = (~s.expanded[:L]) & jnp.isfinite(s.pool_dists[:L])
+        return frontier.any()
+
+    def cond(s: SearchState) -> Array:
+        return frontier_open(s) & (s.step < max_steps) & (s.n_calls < quota)
+
+    def body(s: SearchState) -> SearchState:
+        frontier = (~s.expanded[:L]) & jnp.isfinite(s.pool_dists[:L])
+        # best unexpanded in the beam prefix (pool is sorted -> first open slot)
+        idx = jnp.argmax(frontier)  # first True
+        v = s.pool_ids[idx]
+        expanded = s.expanded.at[idx].set(True)
+
+        nbrs = adjacency[jnp.maximum(v, 0)]  # (R,)
+        fresh = (nbrs >= 0) & ~s.scored[jnp.maximum(nbrs, 0)]
+        # exact quota masking: only the first `remaining` fresh ids get scored
+        call_idx = jnp.cumsum(fresh.astype(jnp.int32)) - 1
+        remaining = quota - s.n_calls
+        keep = fresh & (call_idx < remaining)
+        safe = jnp.where(keep, nbrs, -1)
+        d = jnp.where(keep, dist_fn(safe), jnp.inf)
+        n_calls = s.n_calls + keep.sum(dtype=jnp.int32)
+        scored = s.scored.at[jnp.maximum(safe, 0)].max(keep)
+
+        pool_ids, pool_dists, expanded = _merge_pool(
+            s.pool_ids, s.pool_dists, expanded, safe, d
+        )
+        return SearchState(
+            pool_ids, pool_dists, expanded, scored, n_calls, s.step + 1
+        )
+
+    final = lax.while_loop(cond, body, state)
+    return SearchResult(
+        final.pool_ids, final.pool_dists, final.scored, final.n_calls, final.step
+    )

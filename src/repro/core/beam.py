@@ -1,21 +1,43 @@
-"""Greedy graph search (paper Algorithm 1) as a fixed-shape JAX while_loop.
+"""Batched greedy graph search (paper Algorithm 1) — the one shared hot loop.
 
-TPU adaptation of DiskANN's pointer-chasing greedy search:
+Every search in the system — index construction (metric d), stage-1 search
+(d), stage-2 search (D), the single-metric baseline, and the serving engine —
+runs this engine. One step processes a whole batch of ``B`` queries in a
+single fixed-shape update:
 
-* the search frontier is a fixed-size *pool* of the best ``pool_size`` scored
-  vertices (sorted by distance); the classic beam is its length-``L`` prefix;
-* one step = expand the best unexpanded vertex in the beam prefix, gather its
-  ``R`` graph neighbors, score the not-yet-scored ones, merge into the pool;
-* a per-query bitmap of scored vertices provides exact dedup — a vertex's
-  distance is computed at most once, so counting scored vertices counts
-  distance-function *calls* exactly (the paper's cost model);
-* an explicit ``quota`` bounds the number of distance calls: candidates that
-  would exceed the quota are masked out (never scored, never used), so the
-  search is *exactly* budget-feasible per query, not just in expectation.
+* each query's frontier is a fixed-size *pool* of its best ``pool_size``
+  scored vertices (sorted by distance); the classic beam is the length-``L``
+  prefix;
+* one step = pick up to ``expand_width`` best unexpanded vertices in each
+  query's beam prefix, gather the ``(B, E, R)`` neighbor fanout, drop
+  already-scored vertices against the per-query scored bitmap, score the
+  survivors with one batched distance call, and merge (beam ‖ fanout) back
+  into the pools in one call (``repro.kernels.ops.merge_pool_batch`` — the
+  stable jnp merge off-TPU, the fused Pallas bitonic kernel on TPU);
+* the per-query bitmap of scored vertices provides exact dedup — a vertex's
+  distance is computed at most once per step wave, so counting scored
+  candidates counts distance-function *calls* exactly (the paper's cost
+  model);
+* an explicit ``quota`` bounds the number of distance calls per query:
+  candidates that would exceed the quota are masked out (never scored, never
+  used), so the search is *exactly* budget-feasible per query, not just in
+  expectation. Queries whose quota or frontier is exhausted freeze in place
+  while the rest of the batch keeps stepping.
 
-The same routine serves index construction (metric d), stage-1 search (d),
-stage-2 search (D), and the single-metric baseline — they differ only in the
-``dist_fn`` closure and the quota.
+With ``expand_width=1`` a batched search is bit-exact to running each query
+alone (and to the historical per-query engine): same pool ids, distances and
+call counts. ``expand_width>1`` is the throughput knob — it cuts the step
+count roughly E-fold at the cost of a slightly greedier expansion order (the
+standard batched relaxation used by GPU graph-ANN engines); each wave's
+fanout is positionally deduped, so a vertex reachable from two same-wave
+frontier vertices is still paid for exactly once. (At E=1 the historical
+behavior is preserved bit-exactly, including its quirk of scoring duplicate
+ids inside one adjacency row twice.)
+
+The step is exposed as ``plan_step`` / ``commit_scores`` so callers that
+cannot score inside a ``while_loop`` (the serving engine, whose expensive
+metric is a lazily-evaluated model forward pass) drive the identical loop
+from the host: plan on device, score through the tower, commit on device.
 """
 from __future__ import annotations
 
@@ -25,18 +47,22 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.kernels import ops
+
 Array = jax.Array
 
 NO_QUOTA = jnp.iinfo(jnp.int32).max // 2
 
 
-class SearchState(NamedTuple):
-    pool_ids: Array  # (P,) int32, sorted by dist; -1 pad
-    pool_dists: Array  # (P,) f32; +inf pad
-    expanded: Array  # (P,) bool
-    scored: Array  # (N,) bool bitmap — dedup + exact call counting
-    n_calls: Array  # () int32
-    step: Array  # () int32
+class BatchedSearchState(NamedTuple):
+    """Per-query search state, batch-leading. All shapes are static."""
+
+    pool_ids: Array  # (B, P) int32, sorted by dist; -1 pad
+    pool_dists: Array  # (B, P) f32; +inf pad
+    expanded: Array  # (B, P) bool
+    scored: Array  # (B, N) bool bitmap — dedup + exact call counting
+    n_calls: Array  # (B,) int32
+    n_steps: Array  # (B,) int32
 
 
 class SearchResult(NamedTuple):
@@ -47,20 +73,291 @@ class SearchResult(NamedTuple):
     n_steps: Array
 
 
-def _merge_pool(
-    pool_ids: Array,
-    pool_dists: Array,
-    expanded: Array,
-    new_ids: Array,
-    new_dists: Array,
-) -> tuple[Array, Array, Array]:
-    """Merge new scored candidates into the sorted pool, keep best P."""
-    p = pool_ids.shape[0]
-    ids = jnp.concatenate([pool_ids, new_ids])
-    dists = jnp.concatenate([pool_dists, new_dists])
-    exp = jnp.concatenate([expanded, jnp.zeros(new_ids.shape, dtype=bool)])
-    order = jnp.argsort(dists, stable=True)
-    return ids[order][:p], dists[order][:p], exp[order][:p]
+def _positional_dedup(ids: Array) -> Array:
+    """Per row: an id equal to an earlier id in the row becomes -1."""
+    e = ids.shape[-1]
+    dup = (ids[..., :, None] == ids[..., None, :]) & (
+        jnp.arange(e)[:, None] > jnp.arange(e)[None, :]
+    )
+    return jnp.where(dup.any(axis=-1), -1, ids)
+
+
+def init_state(
+    entry_ids: Array,
+    *,
+    n_points: int,
+    pool_size: int,
+    quota: Array,
+    scored_init: Array | None = None,
+    calls_init: Array | int = 0,
+) -> tuple[BatchedSearchState, Array, Array]:
+    """Empty pools + the entry wave, quota-masked but not yet scored.
+
+    Returns ``(state, safe_entries (B, E0), keep (B, E0))``; the caller scores
+    ``safe_entries`` (ids < 0 are masked) and feeds the result to
+    :func:`commit_scores`. ``scored`` / ``n_calls`` already account for the
+    kept entries — a wave is paid for when it is planned.
+    """
+    b, e = entry_ids.shape
+    entry_ids = _positional_dedup(entry_ids.astype(jnp.int32))
+    valid = entry_ids >= 0
+    order_idx = jnp.cumsum(valid.astype(jnp.int32), axis=1) - 1
+    quota = jnp.broadcast_to(jnp.asarray(quota, jnp.int32), (b,))
+    calls0 = jnp.broadcast_to(jnp.asarray(calls_init, jnp.int32), (b,))
+    keep = valid & (order_idx < (quota - calls0)[:, None])
+    safe = jnp.where(keep, entry_ids, -1)
+
+    rows = jnp.arange(b)[:, None]
+    scored = (
+        jnp.zeros((b, n_points), dtype=bool)
+        if scored_init is None
+        else scored_init
+    )
+    # scatter-OR (max): padding ids all alias index 0, so a plain set() races
+    scored = scored.at[rows, jnp.maximum(safe, 0)].max(keep)
+    n_calls = calls0 + keep.sum(axis=1, dtype=jnp.int32)
+
+    p = pool_size
+    state = BatchedSearchState(
+        pool_ids=jnp.full((b, p), -1, jnp.int32),
+        pool_dists=jnp.full((b, p), jnp.inf, jnp.float32),
+        expanded=jnp.zeros((b, p), dtype=bool),
+        scored=scored,
+        n_calls=n_calls,
+        n_steps=jnp.zeros((b,), jnp.int32),
+    )
+    return state, safe, keep
+
+
+def active_mask(
+    state: BatchedSearchState, *, beam_width: int, quota: Array, max_steps: int
+) -> Array:
+    """(B,) — which queries still have an open frontier, budget and steps."""
+    L = beam_width
+    frontier = (~state.expanded[:, :L]) & jnp.isfinite(state.pool_dists[:, :L])
+    quota = jnp.asarray(quota, jnp.int32)
+    return (
+        frontier.any(axis=1)
+        & (state.n_calls < quota)
+        & (state.n_steps < max_steps)
+    )
+
+
+def plan_step(
+    state: BatchedSearchState,
+    adjacency: Array,
+    *,
+    beam_width: int,
+    quota: Array,
+    max_steps: int,
+    expand_width: int = 1,
+) -> tuple[BatchedSearchState, Array, Array, Array]:
+    """One expansion wave: pick frontiers, gather fanout, mask to the quota.
+
+    Returns ``(state', safe (B, E*R), keep (B, E*R), active (B,))`` where
+    ``state'`` has ``expanded`` / ``scored`` / ``n_calls`` / ``n_steps``
+    advanced (a wave is paid for when planned). The caller scores ``safe``
+    and calls :func:`commit_scores`. Frozen (inactive) queries plan an
+    all-masked wave, which commits as an exact no-op.
+    """
+    b, p = state.pool_ids.shape
+    L = beam_width
+    E = expand_width
+    r = adjacency.shape[1]
+    quota = jnp.broadcast_to(jnp.asarray(quota, jnp.int32), (b,))
+    rows = jnp.arange(b)[:, None]
+
+    active = active_mask(
+        state, beam_width=L, quota=quota, max_steps=max_steps
+    )
+    # best unexpanded slots in the beam prefix (pool sorted -> first open)
+    open_ = (
+        (~state.expanded)
+        & jnp.isfinite(state.pool_dists)
+        & (jnp.arange(p)[None, :] < L)
+    )
+    rank = jnp.cumsum(open_.astype(jnp.int32), axis=1) - 1
+    sel = open_ & (rank < E) & active[:, None]
+    expanded = state.expanded | sel
+    # slot positions of the selected vertices, in pool order; p == "none"
+    # (top_k of the negated positions == first-E ascending, without a sort)
+    slot_pos = -jax.lax.top_k(
+        jnp.where(sel, -jnp.arange(p)[None, :], -p), E
+    )[0]
+    has = slot_pos < p
+    verts = jnp.where(
+        has,
+        jnp.take_along_axis(state.pool_ids, jnp.minimum(slot_pos, p - 1), 1),
+        -1,
+    )
+
+    nbrs = adjacency.astype(jnp.int32)[jnp.maximum(verts, 0)]  # (B, E, R)
+    nbrs = jnp.where((verts >= 0)[:, :, None], nbrs, -1)
+    cand = nbrs.reshape(b, E * r)
+    if E > 1:
+        # a vertex reachable from two same-wave frontier vertices must be
+        # paid for once; E=1 keeps the historical behavior bit-exactly
+        # (which scores duplicate ids inside one adjacency row twice).
+        cand = _positional_dedup(cand)
+    fresh = (cand >= 0) & ~jnp.take_along_axis(
+        state.scored, jnp.maximum(cand, 0), axis=1
+    )
+    # exact quota masking: only the first `remaining` fresh ids get scored
+    call_idx = jnp.cumsum(fresh.astype(jnp.int32), axis=1) - 1
+    keep = fresh & (call_idx < (quota - state.n_calls)[:, None])
+    safe = jnp.where(keep, cand, -1)
+
+    scored = state.scored.at[rows, jnp.maximum(safe, 0)].max(keep)
+    n_calls = state.n_calls + keep.sum(axis=1, dtype=jnp.int32)
+    n_steps = state.n_steps + active.astype(jnp.int32)
+    state = state._replace(
+        expanded=expanded, scored=scored, n_calls=n_calls, n_steps=n_steps
+    )
+    return state, safe, keep, active
+
+
+def commit_scores(
+    state: BatchedSearchState,
+    safe: Array,
+    keep: Array,
+    dists: Array,
+    *,
+    use_fused_merge: bool = False,
+    interpret: bool = False,
+) -> BatchedSearchState:
+    """Merge a scored wave into the pools (masked lanes are +inf no-ops)."""
+    d = jnp.where(keep, dists.astype(jnp.float32), jnp.inf)
+    pool_ids, pool_dists, expanded = ops.merge_pool_batch(
+        state.pool_ids,
+        state.pool_dists,
+        state.expanded,
+        safe,
+        d,
+        use_pallas=use_fused_merge,
+        interpret=interpret,
+    )
+    return state._replace(
+        pool_ids=pool_ids, pool_dists=pool_dists, expanded=expanded
+    )
+
+
+def batched_greedy_search(
+    dist_fn_batch: Callable[[Array, Array], Array],
+    adjacency: Array,
+    query_ctx: Array | None,
+    entry_ids: Array,
+    *,
+    n_points: int,
+    beam_width: int,
+    pool_size: int | None = None,
+    quota: int | Array = NO_QUOTA,
+    expand_width: int = 1,
+    max_steps: int | None = None,
+    scored_init: Array | None = None,
+    calls_init: Array | int = 0,
+    use_fused_merge: bool = False,
+    interpret: bool = False,
+) -> SearchResult:
+    """Greedy beam search over ``adjacency`` for a whole query batch.
+
+    Args:
+      dist_fn_batch: maps ``(query_ctx, ids (B, K) int32) -> (B, K) f32``
+        distances; ids < 0 must map to +inf. Every *finite* evaluation is one
+        metric call. ``repro.core.distances.EmbeddingMetric.dists_batch`` and
+        the fused ``repro.kernels.ops.gather_score`` both satisfy this.
+      adjacency: (N, R) int32 out-neighbors, -1 padded.
+      query_ctx: opaque per-query context forwarded to ``dist_fn_batch``
+        (usually the (B, dim) query embeddings; may be None).
+      entry_ids: (B, E0) int32 starting vertices (deduped here; -1 pads ok).
+      n_points: N (for the scored bitmap).
+      beam_width: L — expansion happens within the best-L prefix.
+      pool_size: P >= L — how many best-scored vertices to retain.
+      quota: max distance calls per query (incl. entry scoring); scalar or
+        (B,) for mixed per-query budgets.
+      expand_width: E — frontier vertices expanded per query per step. 1 is
+        bit-exact to the per-query engine; >1 trades exact expansion order
+        for ~E-fold fewer steps.
+      max_steps: cap on per-query expansions (defaults to a safe bound).
+      scored_init / calls_init: continue an earlier search's accounting —
+        used by the bi-metric stage-2 search (see bimetric.py).
+      use_fused_merge / interpret: route pool merges through the Pallas
+        bitonic kernel (TPU) instead of the stable jnp merge.
+
+    Returns a batch-leading SearchResult, pools sorted ascending by distance.
+    """
+    adjacency = adjacency.astype(jnp.int32)
+    n, _ = adjacency.shape
+    assert n == n_points
+    b, e0 = entry_ids.shape
+    L = beam_width
+    P = max(pool_size or 0, L, e0)
+    if max_steps is None:
+        max_steps = 4 * L + 16
+    quota = jnp.broadcast_to(jnp.asarray(quota, jnp.int32), (b,))
+
+    state, safe, keep = init_state(
+        entry_ids,
+        n_points=n_points,
+        pool_size=P,
+        quota=quota,
+        scored_init=scored_init,
+        calls_init=calls_init,
+    )
+    state = commit_scores(
+        state, safe, keep, dist_fn_batch(query_ctx, safe),
+        use_fused_merge=use_fused_merge, interpret=interpret,
+    )
+
+    def cond(s: BatchedSearchState) -> Array:
+        return active_mask(
+            s, beam_width=L, quota=quota, max_steps=max_steps
+        ).any()
+
+    def body(s: BatchedSearchState) -> BatchedSearchState:
+        s, safe, keep, _ = plan_step(
+            s,
+            adjacency,
+            beam_width=L,
+            quota=quota,
+            max_steps=max_steps,
+            expand_width=expand_width,
+        )
+        return commit_scores(
+            s, safe, keep, dist_fn_batch(query_ctx, safe),
+            use_fused_merge=use_fused_merge, interpret=interpret,
+        )
+
+    final = lax.while_loop(cond, body, state)
+    return SearchResult(
+        final.pool_ids,
+        final.pool_dists,
+        final.scored,
+        final.n_calls,
+        final.n_steps,
+    )
+
+
+def fused_dist_fn(
+    corpus: Array,
+    metric: str = "sqeuclidean",
+    *,
+    use_pallas: bool = False,
+    interpret: bool = False,
+) -> Callable[[Array, Array], Array]:
+    """A ``dist_fn_batch`` that runs the fused gather→score kernel.
+
+    ``query_ctx`` must then be the (B, dim) query embeddings. Off-TPU
+    (``use_pallas=False``) this is the jnp gather-then-reduce oracle, which
+    matches ``EmbeddingMetric`` up to fp association.
+    """
+
+    def fn(q_embs: Array, ids: Array) -> Array:
+        return ops.gather_score(
+            corpus, q_embs, ids, metric=metric,
+            use_pallas=use_pallas, interpret=interpret,
+        )
+
+    return fn
 
 
 def greedy_search(
@@ -76,104 +373,32 @@ def greedy_search(
     scored_init: Array | None = None,
     calls_init: Array | int = 0,
 ) -> SearchResult:
-    """Greedy beam search over ``adjacency`` for a single query.
+    """Single-query wrapper over the batched engine (B = 1).
 
-    Args:
-      dist_fn: maps (k,) int32 vertex ids -> (k,) f32 distances to the query.
-        Ids < 0 must map to +inf. Every *finite* evaluation is one metric call.
-      adjacency: (N, R) int32 out-neighbors, -1 padded.
-      entry_ids: (E,) int32 starting vertices (deduped here; -1 pads allowed).
-      n_points: N (for the scored bitmap).
-      beam_width: L — expansion happens within the best-L prefix.
-      pool_size: P >= L — how many best-scored vertices to retain (the
-        candidate pool used by index construction / result reporting).
-      quota: max number of distance calls (incl. entry scoring).
-      max_steps: cap on expansions (defaults to a safe bound).
-      scored_init / calls_init: continue an earlier search's accounting — used
-        by the bi-metric stage-2 search to share the scored bitmap shape (the
-        D-metric bitmap starts fresh; see bimetric.py).
-
-    Returns SearchResult with the pool sorted ascending by distance.
+    ``dist_fn`` maps (k,) int32 vertex ids -> (k,) f32 distances to the query
+    (ids < 0 -> +inf). Semantics are unchanged from the historical per-query
+    engine: expand-one-vertex steps, exact quota, scored-bitmap dedup.
     """
-    adjacency = adjacency.astype(jnp.int32)
-    n, r = adjacency.shape
-    assert n == n_points
-    L = beam_width
-    P = pool_size or max(L, entry_ids.shape[0])
-    P = max(P, L, entry_ids.shape[0])
-    if max_steps is None:
-        max_steps = 4 * L + 16
-    quota = jnp.asarray(quota, jnp.int32)
 
-    # --- score entries (respecting the quota) -----------------------------
-    e = entry_ids.shape[0]
-    entry_ids = entry_ids.astype(jnp.int32)
-    # dedup entries positionally: an id equal to an earlier id becomes -1.
-    dup = (entry_ids[:, None] == entry_ids[None, :]) & (
-        jnp.arange(e)[:, None] > jnp.arange(e)[None, :]
+    def dist_fn_batch(_ctx, ids):
+        # vmapped even at B=1 so the lowering (and hence fp association) is
+        # identical to a real batch — parity is bit-exact, not just close.
+        return jax.vmap(dist_fn)(ids)
+
+    res = batched_greedy_search(
+        dist_fn_batch,
+        adjacency,
+        None,
+        entry_ids[None, :],
+        n_points=n_points,
+        beam_width=beam_width,
+        pool_size=pool_size,
+        quota=quota,
+        max_steps=max_steps,
+        scored_init=None if scored_init is None else scored_init[None, :],
+        calls_init=calls_init,
     )
-    entry_ids = jnp.where(dup.any(axis=1), -1, entry_ids)
-    valid = entry_ids >= 0
-    order_idx = jnp.cumsum(valid.astype(jnp.int32)) - 1  # call index per entry
-    budget0 = quota - jnp.asarray(calls_init, jnp.int32)
-    keep = valid & (order_idx < budget0)
-    safe_entries = jnp.where(keep, entry_ids, -1)
-    entry_dists = jnp.where(keep, dist_fn(safe_entries), jnp.inf)
-    n_calls0 = jnp.asarray(calls_init, jnp.int32) + keep.sum(dtype=jnp.int32)
-
-    scored0 = (
-        jnp.zeros((n,), dtype=bool) if scored_init is None else scored_init
-    )
-    # scatter-OR (max): padding ids all alias index 0, so a plain set() races
-    scored0 = scored0.at[jnp.maximum(safe_entries, 0)].max(keep)
-
-    pool_ids = jnp.full((P,), -1, jnp.int32)
-    pool_dists = jnp.full((P,), jnp.inf, jnp.float32)
-    expanded = jnp.zeros((P,), dtype=bool)
-    pool_ids, pool_dists, expanded = _merge_pool(
-        pool_ids, pool_dists, expanded, safe_entries, entry_dists
-    )
-
-    state = SearchState(
-        pool_ids, pool_dists, expanded, scored0, n_calls0, jnp.int32(0)
-    )
-
-    def frontier_open(s: SearchState) -> Array:
-        frontier = (~s.expanded[:L]) & jnp.isfinite(s.pool_dists[:L])
-        return frontier.any()
-
-    def cond(s: SearchState) -> Array:
-        return frontier_open(s) & (s.step < max_steps) & (s.n_calls < quota)
-
-    def body(s: SearchState) -> SearchState:
-        frontier = (~s.expanded[:L]) & jnp.isfinite(s.pool_dists[:L])
-        # best unexpanded in the beam prefix (pool is sorted -> first open slot)
-        idx = jnp.argmax(frontier)  # first True
-        v = s.pool_ids[idx]
-        expanded = s.expanded.at[idx].set(True)
-
-        nbrs = adjacency[jnp.maximum(v, 0)]  # (R,)
-        fresh = (nbrs >= 0) & ~s.scored[jnp.maximum(nbrs, 0)]
-        # exact quota masking: only the first `remaining` fresh ids get scored
-        call_idx = jnp.cumsum(fresh.astype(jnp.int32)) - 1
-        remaining = quota - s.n_calls
-        keep = fresh & (call_idx < remaining)
-        safe = jnp.where(keep, nbrs, -1)
-        d = jnp.where(keep, dist_fn(safe), jnp.inf)
-        n_calls = s.n_calls + keep.sum(dtype=jnp.int32)
-        scored = s.scored.at[jnp.maximum(safe, 0)].max(keep)
-
-        pool_ids, pool_dists, expanded = _merge_pool(
-            s.pool_ids, s.pool_dists, expanded, safe, d
-        )
-        return SearchState(
-            pool_ids, pool_dists, expanded, scored, n_calls, s.step + 1
-        )
-
-    final = lax.while_loop(cond, body, state)
-    return SearchResult(
-        final.pool_ids, final.pool_dists, final.scored, final.n_calls, final.step
-    )
+    return SearchResult(*(a[0] for a in res))
 
 
 def greedy_search_batch(
@@ -183,18 +408,16 @@ def greedy_search_batch(
     entry_ids: Array,
     **kw,
 ) -> SearchResult:
-    """vmap of ``greedy_search`` over a batch of queries.
+    """Batched search with a *per-query* distance function (legacy contract).
 
-    ``dist_fn_batch(q_ctx, ids)`` scores (k,) ids against one query context
-    (usually the query's embedding under the metric in play).
+    ``dist_fn_batch(q_ctx, ids)`` scores (k,) ids against one query context;
+    it is vmapped over the batch and fed to the batched engine.
     ``query_ctx``: (B, ...) per-query context; ``entry_ids``: (B, E) or (E,).
     """
     if entry_ids.ndim == 1:
         entry_ids = jnp.broadcast_to(
             entry_ids, (query_ctx.shape[0], entry_ids.shape[0])
         )
-
-    def one(q, ent):
-        return greedy_search(lambda ids: dist_fn_batch(q, ids), adjacency, ent, **kw)
-
-    return jax.vmap(one)(query_ctx, entry_ids)
+    return batched_greedy_search(
+        jax.vmap(dist_fn_batch), adjacency, query_ctx, entry_ids, **kw
+    )

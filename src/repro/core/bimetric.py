@@ -9,6 +9,12 @@ Given a graph index built *only* with the cheap metric d (vamana.build):
             (including scoring the seeds) counts against the quota Q; the
             scored-bitmap guarantees no pair is ever paid for twice.
 
+Both stages run the batched engine (``repro.core.beam``): the whole query
+batch advances through one fixed-shape hot loop per stage instead of a
+per-query ``vmap`` of scalar searches. ``expand_width`` widens each wave
+(E frontier vertices per query per step) for throughput; the default of 1
+keeps the historical expand-one-vertex semantics bit-exactly.
+
 Report the top-k vertices by D among everything scored — by construction the
 pool holds exactly those.
 
@@ -23,7 +29,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.beam import NO_QUOTA, greedy_search
+from repro.core.beam import NO_QUOTA, batched_greedy_search
 from repro.core.vamana import VamanaIndex
 
 Array = jax.Array
@@ -38,26 +44,100 @@ class BiMetricResult(NamedTuple):
     D_calls: Array  # (B,) expensive-metric calls (stage 2) — the paper's cost
 
 
-def _stage1(
-    cheap_fn: DistFn,
+def _medoid_entries(index: VamanaIndex, batch: int) -> Array:
+    """(B, 1) entry matrix — every query starts at the graph medoid."""
+    medoid = jnp.asarray(index.medoid, jnp.int32).reshape(1, 1)
+    return jnp.broadcast_to(medoid, (batch, 1))
+
+
+def _stage1_batch(
+    cheap_fn_batch: Callable[[Array, Array], Array],
     index: VamanaIndex,
+    q_cheap: Array,
     *,
     n_points: int,
     n_seeds: int,
     l_search: int,
+    expand_width: int = 1,
 ) -> tuple[Array, Array]:
-    """Cheap-metric greedy search; returns (seed ids (n_seeds,), n_d_calls)."""
-    res = greedy_search(
-        cheap_fn,
+    """Cheap-metric batched greedy search -> (seeds (B, n_seeds), d_calls (B,))."""
+    res = batched_greedy_search(
+        cheap_fn_batch,
         index.adjacency,
-        jnp.array([index.medoid], jnp.int32),
+        q_cheap,
+        _medoid_entries(index, q_cheap.shape[0]),
         n_points=n_points,
         beam_width=l_search,
         pool_size=max(l_search, n_seeds),
         quota=NO_QUOTA,
+        expand_width=expand_width,
         max_steps=4 * l_search,
     )
-    return res.pool_ids[:n_seeds], res.n_calls
+    return res.pool_ids[:, :n_seeds], res.n_calls
+
+
+def bimetric_search(
+    cheap_fn_batch: Callable[[Array, Array], Array],
+    expensive_fn_batch: Callable[[Array, Array], Array],
+    index: VamanaIndex,
+    q_cheap: Array,
+    q_expensive: Array,
+    *,
+    n_points: int,
+    quota: int,
+    k: int = 10,
+    n_seeds: int | None = None,
+    l_search_d: int | None = None,
+    beam_width_D: int | None = None,
+    use_stage1: bool = True,
+    expand_width: int = 1,
+) -> BiMetricResult:
+    """Batched bi-metric search.
+
+    ``cheap_fn_batch(q_ctx, ids)`` / ``expensive_fn_batch(q_ctx, ids)`` score
+    (k,) ids against *one* query's context under d / D respectively (they are
+    vmapped over the batch here); ``q_cheap`` and ``q_expensive`` are the
+    per-query contexts (e.g. the two embeddings).
+    """
+    b = q_cheap.shape[0]
+    if n_seeds is None:
+        n_seeds = max(1, quota // 2)  # paper default: top-Q/2
+    l1 = l_search_d or max(index.config.l_build, n_seeds)
+
+    if use_stage1:
+        seeds, d_calls = _stage1_batch(
+            jax.vmap(cheap_fn_batch),
+            index,
+            q_cheap,
+            n_points=n_points,
+            n_seeds=n_seeds,
+            l_search=l1,
+            expand_width=expand_width,
+        )
+    else:  # "Default" ablation: start from the graph entry point only
+        seeds = jnp.full((b, max(n_seeds, 1)), -1, jnp.int32)
+        seeds = seeds.at[:, 0].set(jnp.asarray(index.medoid, jnp.int32))
+        d_calls = jnp.zeros((b,), jnp.int32)
+
+    bw = beam_width_D or max(k, min(quota, 2 * n_seeds + 8))
+    res = batched_greedy_search(
+        jax.vmap(expensive_fn_batch),
+        index.adjacency,
+        q_expensive,
+        seeds,
+        n_points=n_points,
+        beam_width=bw,
+        pool_size=max(bw, k),
+        quota=quota,
+        expand_width=expand_width,
+        max_steps=4 * quota,  # quota is the real stop; steps are a safety cap
+    )
+    return BiMetricResult(
+        ids=res.pool_ids[:, :k],
+        dists=res.pool_dists[:, :k],
+        d_calls=d_calls,
+        D_calls=res.n_calls,
+    )
 
 
 def bimetric_search_single(
@@ -73,69 +153,26 @@ def bimetric_search_single(
     beam_width_D: int | None = None,
     use_stage1: bool = True,
 ) -> tuple[Array, Array, Array, Array]:
-    """One query. Returns (ids (k,), D_dists (k,), d_calls, D_calls)."""
-    if n_seeds is None:
-        n_seeds = max(1, quota // 2)  # paper default: top-Q/2
-    l1 = l_search_d or max(index.config.l_build, n_seeds)
-    if use_stage1:
-        seeds, d_calls = _stage1(
-            cheap_fn, index, n_points=n_points, n_seeds=n_seeds, l_search=l1
-        )
-    else:  # "Default" ablation: start from the graph entry point only
-        seeds = jnp.full((max(n_seeds, 1),), -1, jnp.int32)
-        seeds = seeds.at[0].set(index.medoid)
-        d_calls = jnp.int32(0)
+    """One query (B = 1 through the batched engine).
 
-    bw = beam_width_D or max(k, min(quota, 2 * n_seeds + 8))
-    res = greedy_search(
-        expensive_fn,
-        index.adjacency,
-        seeds,
-        n_points=n_points,
-        beam_width=bw,
-        pool_size=max(bw, k),
-        quota=quota,
-        max_steps=4 * quota,  # quota is the real stop; steps are a safety cap
-    )
-    return res.pool_ids[:k], res.pool_dists[:k], d_calls, res.n_calls
-
-
-def bimetric_search(
-    cheap_fn_batch: Callable[[Array, Array], Array],
-    expensive_fn_batch: Callable[[Array, Array], Array],
-    index: VamanaIndex,
-    q_cheap: Array,
-    q_expensive: Array,
-    *,
-    n_points: int,
-    quota: int,
-    k: int = 10,
-    n_seeds: int | None = None,
-    l_search_d: int | None = None,
-    use_stage1: bool = True,
-) -> BiMetricResult:
-    """Batched bi-metric search.
-
-    ``cheap_fn_batch(q_ctx, ids)`` / ``expensive_fn_batch(q_ctx, ids)`` score
-    ids against one query's context under d / D respectively; ``q_cheap`` and
-    ``q_expensive`` are the per-query contexts (e.g. the two embeddings).
+    ``cheap_fn`` / ``expensive_fn`` close over the query: (k,) ids -> dists.
+    Returns (ids (k,), D_dists (k,), d_calls, D_calls).
     """
-
-    def one(qc, qe):
-        return bimetric_search_single(
-            lambda ids: cheap_fn_batch(qc, ids),
-            lambda ids: expensive_fn_batch(qe, ids),
-            index,
-            n_points=n_points,
-            quota=quota,
-            k=k,
-            n_seeds=n_seeds,
-            l_search_d=l_search_d,
-            use_stage1=use_stage1,
-        )
-
-    ids, dd, dc, Dc = jax.vmap(one)(q_cheap, q_expensive)
-    return BiMetricResult(ids=ids, dists=dd, d_calls=dc, D_calls=Dc)
+    res = bimetric_search(
+        lambda _q, ids: cheap_fn(ids),
+        lambda _q, ids: expensive_fn(ids),
+        index,
+        jnp.zeros((1, 1), jnp.float32),
+        jnp.zeros((1, 1), jnp.float32),
+        n_points=n_points,
+        quota=quota,
+        k=k,
+        n_seeds=n_seeds,
+        l_search_d=l_search_d,
+        beam_width_D=beam_width_D,
+        use_stage1=use_stage1,
+    )
+    return res.ids[0], res.dists[0], res.d_calls[0], res.D_calls[0]
 
 
 def rerank_search(
@@ -149,6 +186,7 @@ def rerank_search(
     quota: int,
     k: int = 10,
     l_search_d: int | None = None,
+    expand_width: int = 1,
 ) -> BiMetricResult:
     """"Bi-metric (baseline)" — retrieve top-``quota`` by d, re-rank all by D.
 
@@ -156,20 +194,20 @@ def rerank_search(
     the paper's issue (2) with re-ranking).
     """
     l1 = l_search_d or max(index.config.l_build, quota)
-
-    def one(qc, qe):
-        cand, d_calls = _stage1(
-            lambda ids: cheap_fn_batch(qc, ids),
-            index,
-            n_points=n_points,
-            n_seeds=quota,
-            l_search=max(l1, quota),
-        )
-        dd = expensive_fn_batch(qe, cand)
-        dd = jnp.where(cand >= 0, dd, jnp.inf)
-        order = jnp.argsort(dd, stable=True)
-        n_D = (cand >= 0).sum(dtype=jnp.int32)
-        return cand[order][:k], dd[order][:k], d_calls, n_D
-
-    ids, dd, dc, Dc = jax.vmap(one)(q_cheap, q_expensive)
-    return BiMetricResult(ids=ids, dists=dd, d_calls=dc, D_calls=Dc)
+    cand, d_calls = _stage1_batch(
+        jax.vmap(cheap_fn_batch),
+        index,
+        q_cheap,
+        n_points=n_points,
+        n_seeds=quota,
+        l_search=max(l1, quota),
+        expand_width=expand_width,
+    )
+    dd = jax.vmap(expensive_fn_batch)(q_expensive, cand)
+    dd = jnp.where(cand >= 0, dd, jnp.inf)
+    order = jnp.argsort(dd, axis=1, stable=True)
+    take = lambda a: jnp.take_along_axis(a, order, axis=1)[:, :k]  # noqa: E731
+    n_D = (cand >= 0).sum(axis=1, dtype=jnp.int32)
+    return BiMetricResult(
+        ids=take(cand), dists=take(dd), d_calls=d_calls, D_calls=n_D
+    )

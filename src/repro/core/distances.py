@@ -84,10 +84,28 @@ class EmbeddingMetric:
         return q  # already an embedding in the precomputed setting
 
     def dists(self, q_emb: Array, ids: Array) -> Array:
-        """(dim,), (k,) int -> (k,) distances. Invalid ids (<0) -> +inf."""
+        """(dim,), (k,) int -> (k,) distances. Invalid ids (<0) -> +inf.
+
+        Computed in gather-then-reduce form (not the matmul expansion of
+        ``pairwise``): elementwise reductions are batch-size invariant under
+        jit, which the batched search engine relies on for bit-exact parity
+        between batched and single-query runs, and the formulation matches
+        the fused ``repro.kernels`` gather→score kernel exactly.
+        """
         valid = ids >= 0
-        rows = self.embeddings[jnp.maximum(ids, 0)]
-        d = point_to_points(q_emb, rows, self.metric)
+        rows = self.embeddings[jnp.maximum(ids, 0)].astype(jnp.float32)
+        q = q_emb.astype(jnp.float32)
+        if self.metric in ("l2", "sqeuclidean"):
+            diff = rows - q[None, :]
+            d = jnp.sum(diff * diff, axis=-1)
+            if self.metric == "l2":
+                d = jnp.sqrt(d)
+        elif self.metric == "ip":
+            d = -jnp.sum(rows * q[None, :], axis=-1)
+        else:  # cosine
+            qn = jax.lax.rsqrt(jnp.sum(q * q) + 1e-12)
+            rn = jax.lax.rsqrt(jnp.sum(rows * rows, axis=-1) + 1e-12)
+            d = 1.0 - jnp.sum(rows * q[None, :], axis=-1) * qn * rn
         return jnp.where(valid, d, jnp.inf)
 
     def dists_batch(self, q_embs: Array, ids: Array) -> Array:

@@ -134,13 +134,14 @@ def sharded_bimetric_search(
         calls = jax.lax.psum(n_calls, model_axis)
         return top_ids, top_dd, calls
 
+    from repro.launch.mesh import shard_map
+
     qspec = P(data_axes if len(data_axes) > 1 else data_axes[0], None)
-    out = jax.shard_map(
+    out = shard_map(
         program,
         mesh=mesh,
         in_specs=(P(model_axis), P(model_axis), P(model_axis), P(model_axis), qspec, qspec),
         out_specs=(qspec, qspec, P(data_axes if len(data_axes) > 1 else data_axes[0])),
-        check_vma=False,
     )(index.adjacency, index.medoid, index.emb_cheap, index.emb_expensive,
       q_cheap, q_expensive)
     return out

@@ -6,7 +6,7 @@ preprocessing" DiskANN) adapted to accelerators:
 
 * instead of inserting points one-by-one (pointer chasing), we run synchronous
   rounds: every round beam-searches *all* points against the current graph
-  (vmapped fixed-shape search), robust-prunes each candidate pool, then adds
+  (one batched-engine run per chunk), robust-prunes each candidate pool, then adds
   reverse edges and prunes again — the standard batched/GPU Vamana schedule;
 * robust pruning uses a distance matrix over the pool computed with one MXU
   matmul per point, so the O(P^2) occlusion loop is pure gather/compare;
@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import distances
-from repro.core.beam import greedy_search
+from repro.core.beam import batched_greedy_search
 
 Array = jax.Array
 
@@ -91,24 +91,24 @@ def robust_prune(
 
 
 def _search_pool(x, adjacency, medoid, ids, cfg: VamanaConfig):
-    """Beam-search each point id against the current graph; return its pool."""
+    """Beam-search a chunk of point ids against the current graph in one
+    batched engine run; returns each point's candidate pool."""
     em = distances.EmbeddingMetric(x, cfg.metric)
-
-    def one(i):
-        res = greedy_search(
-            lambda ids_: em.dists(x[i], ids_),
-            adjacency,
-            jnp.array([medoid], jnp.int32)
-            if not hasattr(medoid, "shape") or medoid.ndim == 0
-            else medoid[None],
-            n_points=x.shape[0],
-            beam_width=cfg.l_build,
-            pool_size=cfg.pool_size,
-            max_steps=2 * cfg.l_build,
-        )
-        return res.pool_ids, res.pool_dists
-
-    return jax.vmap(one)(ids)
+    b = ids.shape[0]
+    entries = jnp.broadcast_to(
+        jnp.asarray(medoid, jnp.int32).reshape(1, 1), (b, 1)
+    )
+    res = batched_greedy_search(
+        em.dists_batch,
+        adjacency,
+        x[ids],
+        entries,
+        n_points=x.shape[0],
+        beam_width=cfg.l_build,
+        pool_size=cfg.pool_size,
+        max_steps=2 * cfg.l_build,
+    )
+    return res.pool_ids, res.pool_dists
 
 
 def _prune_batch(x, ids, pool_ids, pool_dists, *, alpha, cfg: VamanaConfig):
@@ -222,32 +222,34 @@ def search(
     quota: int | None = None,
     metric: str | None = None,
     n_entries: int = 8,
+    expand_width: int = 1,
 ) -> tuple[Array, Array, Array]:
     """Standard single-metric search. Returns (ids (B,k), dists (B,k), calls (B,)).
 
     Starts from the medoid plus ``n_entries-1`` stratified vertices — on
     strongly clustered corpora a single entry point leaves the greedy search
-    stranded in the entry's cluster (multi-entry is standard practice)."""
+    stranded in the entry's cluster (multi-entry is standard practice). The
+    whole query batch runs through one batched-engine loop; ``expand_width``
+    is the step-widening throughput knob (1 = historical semantics)."""
     em = distances.EmbeddingMetric(corpus_emb, metric or index.config.metric)
     L = beam_width or max(k, index.config.l_build)
     n = corpus_emb.shape[0]
+    b = query_emb.shape[0]
     stride = max(1, n // max(n_entries, 1))
     entries = jnp.concatenate([
         jnp.array([index.medoid], jnp.int32),
         (jnp.arange(max(n_entries - 1, 0), dtype=jnp.int32) * stride) % n,
     ])
-
-    def one(q):
-        res = greedy_search(
-            lambda ids_: em.dists(q, ids_),
-            index.adjacency,
-            entries,
-            n_points=n,
-            beam_width=L,
-            pool_size=max(L, k),
-            quota=quota if quota is not None else jnp.iinfo(jnp.int32).max // 2,
-            max_steps=4 * L,
-        )
-        return res.pool_ids[:k], res.pool_dists[:k], res.n_calls
-
-    return jax.vmap(one)(query_emb)
+    res = batched_greedy_search(
+        em.dists_batch,
+        index.adjacency,
+        query_emb,
+        jnp.broadcast_to(entries, (b, entries.shape[0])),
+        n_points=n,
+        beam_width=L,
+        pool_size=max(L, k),
+        quota=quota if quota is not None else jnp.iinfo(jnp.int32).max // 2,
+        expand_width=expand_width,
+        max_steps=4 * L,
+    )
+    return res.pool_ids[:, :k], res.pool_dists[:, :k], res.n_calls

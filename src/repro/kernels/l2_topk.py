@@ -1,15 +1,24 @@
-"""Fused gather → L2-distance → beam-merge kernels (the bi-metric beam step).
+"""Fused gather → score → beam-merge kernels (the bi-metric beam step).
 
-This is the query-time hot loop of the paper's method on TPU: each greedy
-search step scores the expanded vertex's fanout against the query and merges
-the results into the beam. Two kernels:
+This is the query-time hot loop of the paper's method on TPU: each batched
+greedy-search step scores the expanded frontier's fanout against the queries
+and merges the results into the per-query pools. Two kernels:
 
-* ``gather_l2`` — scalar-prefetched candidate ids drive the BlockSpec index
-  map, so corpus rows stream HBM→VMEM *by id* (no XLA gather materialization),
-  and the squared-l2 reduction happens in VMEM next to the data;
-* ``beam_merge_topk`` — bitonic merge network over the (beam ‖ candidates)
-  pair in VMEM, compare-exchange implemented with roll/where so it lowers to
-  vector selects (no sort primitive needed on TPU).
+* ``gather_score`` — scalar-prefetched candidate ids drive the BlockSpec index
+  map, so corpus rows stream HBM→VMEM *by id* (no XLA gather materialization)
+  and the metric reduction (l2 / sqeuclidean / ip / cosine, matching
+  ``repro.core.distances``) happens in VMEM next to the data. ``gather_l2``
+  is the historical sqeuclidean entry point, kept as an alias;
+* ``beam_merge_topk`` — bitonic merge network over the (beam ‖ fanout) pair
+  in VMEM for the whole query batch per invocation, compare-exchange
+  implemented with roll/where so it lowers to vector selects (no sort
+  primitive needed on TPU). Optionally carries an int32 payload lane
+  (the pool's ``expanded`` flags) through the same permutation network so
+  the batched engine can merge its full (ids, dists, expanded) pool state
+  in one call.
+
+Pure-jnp oracles for both live in ``repro.kernels.ref`` (the CPU/interpret
+fallback path used by the core engine off-TPU).
 """
 from __future__ import annotations
 
@@ -22,24 +31,41 @@ from jax.experimental.pallas import tpu as pltpu
 
 Array = jax.Array
 
+VALID_METRICS = ("l2", "sqeuclidean", "ip", "cosine")
+
 
 # --------------------------------------------------------------------------
-# gather + L2
+# fused gather + score (metric-parameterized)
 # --------------------------------------------------------------------------
-def _gather_l2_kernel(ids_ref, q_ref, row_ref, o_ref):
+def _gather_score_kernel(ids_ref, q_ref, row_ref, o_ref, *, metric: str):
     b = pl.program_id(0)
     k = pl.program_id(1)
-    q = q_ref[0].astype(jnp.float32)  # (1, dim) — query b
-    row = row_ref[0].astype(jnp.float32)  # (1, dim) — corpus[ids[b, k]]
-    diff = q - row
-    d = jnp.sum(diff * diff)
+    q = q_ref[0].astype(jnp.float32)  # (dim,) — query b
+    row = row_ref[0].astype(jnp.float32)  # (dim,) — corpus[ids[b, k]]
+    if metric in ("l2", "sqeuclidean"):
+        diff = q - row
+        d = jnp.sum(diff * diff)
+        if metric == "l2":
+            d = jnp.sqrt(d)
+    elif metric == "ip":
+        d = -jnp.sum(q * row)
+    else:  # cosine
+        qn = jax.lax.rsqrt(jnp.sum(q * q) + 1e-12)
+        rn = jax.lax.rsqrt(jnp.sum(row * row) + 1e-12)
+        d = 1.0 - jnp.sum(q * row) * qn * rn
     valid = ids_ref[b, k] >= 0
     o_ref[0, 0] = jnp.where(valid, d, float("inf"))
 
 
-def gather_l2(corpus: Array, queries: Array, ids: Array, *,
-              interpret: bool = False) -> Array:
-    """corpus (N, dim); queries (B, dim); ids (B, K) -> (B, K) sq-l2 dists."""
+def gather_score(corpus: Array, queries: Array, ids: Array, *,
+                 metric: str = "sqeuclidean", interpret: bool = False) -> Array:
+    """corpus (N, dim); queries (B, dim); ids (B, K) -> (B, K) dissimilarities.
+
+    Ids < 0 are padding and map to +inf. The metric names and conventions
+    match ``repro.core.distances`` ("ip" is negated, "cosine" is one-minus).
+    """
+    if metric not in VALID_METRICS:
+        raise ValueError(f"metric must be one of {VALID_METRICS}, got {metric!r}")
     b, dim = queries.shape
     k = ids.shape[1]
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -56,11 +82,18 @@ def gather_l2(corpus: Array, queries: Array, ids: Array, *,
         out_specs=pl.BlockSpec((1, 1), lambda bi, ki, ids: (bi, ki)),
     )
     return pl.pallas_call(
-        _gather_l2_kernel,
+        functools.partial(_gather_score_kernel, metric=metric),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
         interpret=interpret,
     )(ids.astype(jnp.int32), queries, corpus)
+
+
+def gather_l2(corpus: Array, queries: Array, ids: Array, *,
+              interpret: bool = False) -> Array:
+    """corpus (N, dim); queries (B, dim); ids (B, K) -> (B, K) sq-l2 dists."""
+    return gather_score(corpus, queries, ids, metric="sqeuclidean",
+                        interpret=interpret)
 
 
 # --------------------------------------------------------------------------
@@ -76,9 +109,11 @@ def _xor_permute(x: Array, j: int) -> Array:
     return x.reshape(n // (2 * j), 2, j)[:, ::-1, :].reshape(1, n)
 
 
-def _merge_kernel(bi_ref, bd_ref, ci_ref, cd_ref, oi_ref, od_ref, *, n: int):
+def _merge_kernel(bi_ref, bd_ref, bf_ref, ci_ref, cd_ref, cf_ref,
+                  oi_ref, od_ref, of_ref, *, n: int):
     d = jnp.concatenate([bd_ref[...], cd_ref[...]], axis=1).astype(jnp.float32)
     idx = jnp.concatenate([bi_ref[...], ci_ref[...]], axis=1)
+    flg = jnp.concatenate([bf_ref[...], cf_ref[...]], axis=1)
     pos = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
     # full bitonic sort (ascending) of the 2^m-length sequence
     m = n.bit_length() - 1
@@ -89,21 +124,38 @@ def _merge_kernel(bi_ref, bd_ref, ci_ref, cd_ref, oi_ref, od_ref, *, n: int):
             j = 1 << sub
             d_p = _xor_permute(d, j)
             i_p = _xor_permute(idx, j)
+            f_p = _xor_permute(flg, j)
             is_lo = (pos & j) == 0
             want_min = desc ^ is_lo
             take_self = jnp.where(want_min, d <= d_p, d >= d_p)
             d = jnp.where(take_self, d, d_p)
             idx = jnp.where(take_self, idx, i_p)
+            flg = jnp.where(take_self, flg, f_p)
     L = oi_ref.shape[1]
     oi_ref[...] = idx[:, :L]
     od_ref[...] = d[:, :L]
+    of_ref[...] = flg[:, :L]
 
 
 def beam_merge_topk(beam_ids: Array, beam_dists: Array, cand_ids: Array,
-                    cand_dists: Array, *, interpret: bool = False):
-    """Merge (B, L) beam and (B, K) candidates -> best-(B, L). Bitonic in VMEM."""
+                    cand_dists: Array, *, beam_flags: Array | None = None,
+                    cand_flags: Array | None = None, interpret: bool = False):
+    """Merge (B, L) beam and (B, K) candidates -> best-(B, L). Bitonic in VMEM.
+
+    One invocation handles the whole query batch (grid over B). When
+    ``beam_flags`` is given, an int32 payload lane rides through the same
+    compare-exchange network (the batched engine's ``expanded`` markers) and
+    a third output is returned. Ties in distance (inf padding included) are
+    broken by the network, not by input position — callers needing the
+    stable-merge contract use ``repro.kernels.ref.merge_pool_batch_ref``.
+    """
     b, L = beam_ids.shape
     k = cand_ids.shape[1]
+    with_flags = beam_flags is not None
+    if beam_flags is None:
+        beam_flags = jnp.zeros((b, L), jnp.int32)
+    if cand_flags is None:
+        cand_flags = jnp.zeros((b, k), jnp.int32)
     n = L + k
     n_pad = 1 << (n - 1).bit_length()
     pad = n_pad - n
@@ -111,26 +163,34 @@ def beam_merge_topk(beam_ids: Array, beam_dists: Array, cand_ids: Array,
         cand_ids = jnp.pad(cand_ids, ((0, 0), (0, pad)), constant_values=-1)
         cand_dists = jnp.pad(cand_dists, ((0, 0), (0, pad)),
                              constant_values=jnp.inf)
+        cand_flags = jnp.pad(cand_flags, ((0, 0), (0, pad)))
         k = k + pad
     kernel = functools.partial(_merge_kernel, n=n_pad)
-    oi, od = pl.pallas_call(
+    oi, od, of = pl.pallas_call(
         kernel,
         grid=(b,),
         in_specs=[
             pl.BlockSpec((1, L), lambda bi: (bi, 0)),
             pl.BlockSpec((1, L), lambda bi: (bi, 0)),
+            pl.BlockSpec((1, L), lambda bi: (bi, 0)),
+            pl.BlockSpec((1, k), lambda bi: (bi, 0)),
             pl.BlockSpec((1, k), lambda bi: (bi, 0)),
             pl.BlockSpec((1, k), lambda bi: (bi, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, L), lambda bi: (bi, 0)),
             pl.BlockSpec((1, L), lambda bi: (bi, 0)),
+            pl.BlockSpec((1, L), lambda bi: (bi, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((b, L), beam_ids.dtype),
             jax.ShapeDtypeStruct((b, L), jnp.float32),
+            jax.ShapeDtypeStruct((b, L), jnp.int32),
         ],
         interpret=interpret,
-    )(beam_ids, beam_dists.astype(jnp.float32), cand_ids,
-      cand_dists.astype(jnp.float32))
+    )(beam_ids, beam_dists.astype(jnp.float32),
+      beam_flags.astype(jnp.int32), cand_ids,
+      cand_dists.astype(jnp.float32), cand_flags.astype(jnp.int32))
+    if with_flags:
+        return oi, od, of
     return oi, od

@@ -42,16 +42,36 @@ def flash_decode_ref(q: Array, k: Array, v: Array, *, length: Array | int,
     return jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
-def l2_gather_dists_ref(corpus: Array, queries: Array, ids: Array) -> Array:
-    """corpus (N, dim); queries (B, dim); ids (B, K) -> (B, K) sq-l2 dists.
+def gather_score_ref(corpus: Array, queries: Array, ids: Array,
+                     metric: str = "sqeuclidean") -> Array:
+    """corpus (N, dim); queries (B, dim); ids (B, K) -> (B, K) dissimilarities.
 
     ids < 0 -> +inf (padding). This is the bi-metric beam-step hot op:
-    gather fanout candidates and score them against the query.
+    gather fanout candidates and score them against the query. Metric names
+    and conventions match ``repro.core.distances`` ("ip" negated, "cosine"
+    one-minus), computed in the gather-then-reduce form of the Pallas kernel.
     """
-    rows = corpus[jnp.maximum(ids, 0)]  # (B, K, dim)
-    diff = rows.astype(jnp.float32) - queries[:, None].astype(jnp.float32)
-    d = (diff * diff).sum(-1)
+    rows = corpus[jnp.maximum(ids, 0)].astype(jnp.float32)  # (B, K, dim)
+    q = queries[:, None].astype(jnp.float32)  # (B, 1, dim)
+    if metric in ("l2", "sqeuclidean"):
+        diff = rows - q
+        d = (diff * diff).sum(-1)
+        if metric == "l2":
+            d = jnp.sqrt(d)
+    elif metric == "ip":
+        d = -(rows * q).sum(-1)
+    elif metric == "cosine":
+        qn = jax.lax.rsqrt((q * q).sum(-1) + 1e-12)
+        rn = jax.lax.rsqrt((rows * rows).sum(-1) + 1e-12)
+        d = 1.0 - (rows * q).sum(-1) * qn * rn
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
     return jnp.where(ids >= 0, d, jnp.inf)
+
+
+def l2_gather_dists_ref(corpus: Array, queries: Array, ids: Array) -> Array:
+    """Historical sqeuclidean entry point of :func:`gather_score_ref`."""
+    return gather_score_ref(corpus, queries, ids, metric="sqeuclidean")
 
 
 def beam_merge_topk_ref(beam_ids: Array, beam_dists: Array, cand_ids: Array,
@@ -65,6 +85,27 @@ def beam_merge_topk_ref(beam_ids: Array, beam_dists: Array, cand_ids: Array,
         jnp.take_along_axis(ids, order, axis=1)[:, :L],
         jnp.take_along_axis(d, order, axis=1)[:, :L],
     )
+
+
+def merge_pool_batch_ref(
+    pool_ids: Array, pool_dists: Array, expanded: Array,
+    cand_ids: Array, cand_dists: Array,
+) -> tuple[Array, Array, Array]:
+    """Stable (beam ‖ fanout) merge keeping the best pool-width per query.
+
+    (B, P) pool + (B, K) candidates -> (B, P). The ``expanded`` bool payload
+    rides along (new candidates enter unexpanded). Stability is part of the
+    contract: ties — including the +inf padding — resolve to the earlier
+    position, so merging an all-masked candidate wave is an exact no-op.
+    """
+    p = pool_ids.shape[1]
+    ids = jnp.concatenate([pool_ids, cand_ids], axis=1)
+    d = jnp.concatenate([pool_dists, cand_dists], axis=1)
+    exp = jnp.concatenate(
+        [expanded, jnp.zeros(cand_ids.shape, dtype=bool)], axis=1)
+    order = jnp.argsort(d, axis=1, stable=True)
+    take = lambda a: jnp.take_along_axis(a, order, axis=1)[:, :p]  # noqa: E731
+    return take(ids), take(d), take(exp)
 
 
 def embedding_bag_ref(table: Array, idx: Array, mode: str = "sum") -> Array:

@@ -206,7 +206,16 @@ def analyze(hlo_text: str) -> dict:
                 mult = float(t.group(1))
             for m in re.finditer(r"(to_apply|calls|body|condition)=%?([\w.\-]+)",
                                  ins.raw):
-                kind = "while" if m.group(1) in ("body", "condition") else "fusion"
+                if m.group(1) in ("body", "condition"):
+                    kind = "while"
+                elif ins.op in ("call", "conditional"):
+                    # plain call wrappers (e.g. XLA:CPU's parallel-partition
+                    # `call ... to_apply=%parallel_*`) execute their body's
+                    # HBM traffic once — unlike fusions, whose internals are
+                    # register-resident.
+                    kind = "call"
+                else:
+                    kind = "fusion"
                 es.append((m.group(2), mult, kind))
         edges[name] = es
 
@@ -341,7 +350,7 @@ def analyze(hlo_text: str) -> dict:
         for callee, mult, kind in edges[cname]:
             cf, cb, cbf, cc, ccrs = total(callee, depth + 1)
             f += mult * cf
-            if kind == "while":  # fusion internals are not HBM traffic
+            if kind in ("while", "call"):  # fusions are not HBM traffic
                 b += mult * cb
                 bf += mult * cbf
                 c += mult * cc

@@ -5,24 +5,31 @@
   those embeddings only (Theorem 1.1 property 1);
 * the **expensive tower** (e.g. deepseek-v3 / SFR-Mistral-like) is the
   ground-truth metric D: scoring a document costs a forward pass. The engine
-  memoizes per-query D embeddings and enforces the call budget *exactly* —
-  the quota is literally a compute budget on the big model;
-* queries run the two-stage search: stage 1 on-device jitted beam search
-  under d; stage 2 host-orchestrated greedy expansion under D (batched
-  tower calls, device compute / host control — the standard serving split).
+  enforces the call budget *exactly* — the quota is literally a compute
+  budget on the big model;
+* queries run the two-stage search **as a batch**. Stage 1 is one
+  batched-engine run under d on device. Stage 2 drives the *same* core hot
+  loop (``repro.core.beam.plan_step`` / ``commit_scores``) from the host:
+  each wave is planned on device for every query at once, the union of
+  documents the wave needs is drained through the expensive tower in
+  ``serve/batcher.py``-style batched forward passes, and the scores are
+  committed back on device. Per-query accounting is identical to running
+  each query alone (a document counts against a query's quota the first
+  time that query scores it), while the tower only ever embeds a document
+  once per engine lifetime — the cross-query cache is pure compute savings.
 
 ``EmbedTower`` wraps (params, config, pooling); swap in any LM arch config.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import distances, vamana
+from repro.core import beam, distances, vamana
 from repro.models import transformer as T
 
 Array = jax.Array
@@ -50,7 +57,33 @@ class EmbedTower:
 @dataclasses.dataclass
 class ServeStats:
     d_calls: int = 0
-    D_calls: int = 0  # expensive-tower document embeddings (the budget)
+    D_calls: int = 0  # expensive-tower document scorings (the budget)
+    # forward-pass batches drained for the WHOLE request batch (replicated
+    # on every query's stats for convenience — do not sum across a batch)
+    tower_batches: int = 0
+
+
+@functools.partial(
+    jax.jit, static_argnames=("beam_width", "max_steps", "expand_width"))
+def _plan_step_j(state, adjacency, quota, *, beam_width, max_steps,
+                 expand_width):
+    return beam.plan_step(
+        state, adjacency, beam_width=beam_width, quota=quota,
+        max_steps=max_steps, expand_width=expand_width)
+
+
+@jax.jit
+def _score_commit_j(state, safe, keep, doc_embs, q_D):
+    """L2 under D from gathered doc embeddings; commit the wave."""
+    diff = doc_embs.astype(jnp.float32) - q_D[:, None, :].astype(jnp.float32)
+    d = jnp.sqrt(jnp.sum(diff * diff, axis=-1))
+    return beam.commit_scores(state, safe, keep, d)
+
+
+@functools.partial(jax.jit, static_argnames=("beam_width", "max_steps"))
+def _active_any_j(state, quota, *, beam_width, max_steps):
+    return beam.active_mask(
+        state, beam_width=beam_width, quota=quota, max_steps=max_steps).any()
 
 
 class BiMetricEngine:
@@ -58,11 +91,13 @@ class BiMetricEngine:
 
     def __init__(self, cheap: EmbedTower, expensive: EmbedTower,
                  corpus_tokens: np.ndarray,
-                 index_cfg: vamana.VamanaConfig | None = None):
+                 index_cfg: vamana.VamanaConfig | None = None,
+                 tower_batch: int = 64):
         self.cheap = cheap
         self.expensive = expensive
         self.corpus_tokens = corpus_tokens
         self.n = corpus_tokens.shape[0]
+        self.tower_batch = tower_batch
         # --- index build: cheap metric ONLY --------------------------------
         self.emb_d = jnp.asarray(cheap.embed(corpus_tokens))
         self.index = vamana.build(self.emb_d,
@@ -70,84 +105,137 @@ class BiMetricEngine:
                                       max_degree=16, l_build=24, pool_size=48,
                                       rev_candidates=16))
         self._em_d = distances.EmbeddingMetric(self.emb_d)
-        self._adj = np.asarray(self.index.adjacency)
+        self._adjacency = self.index.adjacency.astype(jnp.int32)
+        # lazy expensive-tower document embeddings (engine-lifetime cache)
+        self._emb_D: np.ndarray | None = None
+        self._emb_D_valid = np.zeros((self.n,), bool)
+
+    # ------------------------------------------------------------ internals
+    def _embed_queries(self, query_tokens: np.ndarray):
+        """(B, S) tokens -> cheap (B, dim_d) on device, expensive (B, dim_D).
+
+        Query-side embeddings are not charged to the quota: the budget counts
+        *document* scorings (the paper's cost model)."""
+        q_d = jnp.asarray(self.cheap.embed(query_tokens))
+        q_D = jnp.asarray(self.expensive.embed(query_tokens))
+        return q_d, q_D
+
+    def _stage1(self, q_d: Array, *, width: int, pool: int,
+                max_steps: int) -> beam.SearchResult:
+        """Batched cheap-metric greedy search from the medoid (stage 1)."""
+        b = q_d.shape[0]
+        entries = jnp.broadcast_to(
+            jnp.asarray(self.index.medoid, jnp.int32).reshape(1, 1), (b, 1))
+        return beam.batched_greedy_search(
+            self._em_d.dists_batch, self._adjacency, q_d, entries,
+            n_points=self.n, beam_width=width, pool_size=pool,
+            max_steps=max_steps)
+
+    def _drain_tower(self, ids: np.ndarray) -> int:
+        """Embed not-yet-cached docs through the expensive tower; returns the
+        number of forward batches drained."""
+        need = np.unique(ids[(ids >= 0) & ~self._emb_D_valid[np.maximum(ids, 0)]])
+        if need.size == 0:
+            return 0
+        embs = self.expensive.embed(self.corpus_tokens[need],
+                                    batch=self.tower_batch)
+        if self._emb_D is None:
+            self._emb_D = np.zeros((self.n, embs.shape[1]), embs.dtype)
+        self._emb_D[need] = embs
+        self._emb_D_valid[need] = True
+        return -(-need.size // self.tower_batch)
 
     # ---------------------------------------------------------------- query
-    def query(self, query_tokens: np.ndarray, *, quota: int, k: int = 10,
-              n_seeds: int | None = None) -> tuple[np.ndarray, np.ndarray, ServeStats]:
-        """One query (S,) tokens. Returns (ids, D-dists, stats)."""
-        stats = ServeStats()
-        q_d = jnp.asarray(self.cheap.embed(query_tokens[None])[0])
-        q_D = self.expensive.embed(query_tokens[None])[0]
+    def query_batch(self, query_tokens: np.ndarray, *, quota: int,
+                    k: int = 10, n_seeds: int | None = None,
+                    expand_width: int = 1,
+                    ) -> tuple[np.ndarray, np.ndarray, list[ServeStats]]:
+        """Two-stage bi-metric search for a whole batch of (B, S) queries.
+
+        Returns (ids (B, k), D-dists (B, k), per-query stats); unfilled
+        result slots are id -1 / dist +inf.
+        """
+        b = query_tokens.shape[0]
+        q_d, q_D = self._embed_queries(query_tokens)
         n_seeds = n_seeds or max(1, quota // 2)
+        width1 = max(32, n_seeds)
 
-        # stage 1 — cheap greedy search on device
-        from repro.core.beam import greedy_search
-        res = greedy_search(
-            lambda ids: self._em_d.dists(q_d, ids),
-            self.index.adjacency,
-            jnp.array([self.index.medoid], jnp.int32),
-            n_points=self.n, beam_width=max(32, n_seeds),
-            pool_size=max(32, n_seeds), max_steps=4 * max(32, n_seeds),
-        )
-        stats.d_calls = int(res.n_calls)
-        seeds = [int(i) for i in np.asarray(res.pool_ids[:n_seeds]) if i >= 0]
+        # stage 1 — one batched cheap-metric search on device
+        res1 = self._stage1(q_d, width=width1, pool=max(width1, n_seeds),
+                            max_steps=4 * width1)
+        seeds = res1.pool_ids[:, :n_seeds]
+        d_calls = np.asarray(res1.n_calls)
 
-        # stage 2 — host-orchestrated greedy under the expensive tower
-        emb_cache: dict[int, np.ndarray] = {}
+        # stage 2 — the core hot loop, host-driven: plan on device, drain the
+        # tower for the wave's union of fresh docs, commit scores on device.
+        L = max(k, min(quota, 2 * max(n_seeds, 1) + 8))
+        P = max(L, k)
+        max_steps = 4 * quota
+        quota_arr = jnp.full((b,), quota, jnp.int32)
+        tower_batches = 0
 
-        def D(ids: list[int]) -> np.ndarray:
-            new = [i for i in ids if i not in emb_cache]
-            if new:
-                allowed = max(0, quota - stats.D_calls)
-                new = new[:allowed]
-                if new:
-                    embs = self.expensive.embed(self.corpus_tokens[new])
-                    for i, e in zip(new, embs):
-                        emb_cache[i] = e
-                    stats.D_calls += len(new)
-            return np.array([
-                np.linalg.norm(q_D - emb_cache[i]) if i in emb_cache else np.inf
-                for i in ids
-            ])
-
-        dists = {i: d for i, d in zip(seeds, D(seeds))}
-        expanded: set[int] = set()
-        while stats.D_calls < quota:
-            frontier = [i for i in sorted(dists, key=dists.get)
-                        if i not in expanded and np.isfinite(dists[i])][:1]
-            if not frontier:
+        state, safe, keep = beam.init_state(
+            seeds, n_points=self.n, pool_size=P, quota=quota_arr)
+        while True:
+            safe_np = np.asarray(safe)
+            tower_batches += self._drain_tower(safe_np[np.asarray(keep)])
+            doc_embs = jnp.asarray(
+                (self._emb_D if self._emb_D is not None
+                 else np.zeros((self.n, q_D.shape[1]), np.float32)
+                 )[np.maximum(safe_np, 0)])
+            state = _score_commit_j(state, safe, keep, doc_embs, q_D)
+            if not bool(_active_any_j(state, quota_arr, beam_width=L,
+                                      max_steps=max_steps)):
                 break
-            v = frontier[0]
-            expanded.add(v)
-            nbrs = [int(u) for u in self._adj[v] if u >= 0 and u not in dists]
-            if nbrs:
-                for u, du in zip(nbrs, D(nbrs)):
-                    if np.isfinite(du):
-                        dists[u] = float(du)
-        order = sorted((d, i) for i, d in dists.items() if np.isfinite(d))[:k]
-        ids = np.array([i for _, i in order], np.int64)
-        dd = np.array([d for d, _ in order], np.float64)
+            state, safe, keep, _ = _plan_step_j(
+                state, self._adjacency, quota_arr, beam_width=L,
+                max_steps=max_steps, expand_width=expand_width)
+
+        ids = np.asarray(state.pool_ids[:, :k], np.int64)
+        dd = np.asarray(state.pool_dists[:, :k], np.float64)
+        D_calls = np.asarray(state.n_calls)
+        stats = [ServeStats(d_calls=int(d_calls[i]), D_calls=int(D_calls[i]),
+                            tower_batches=tower_batches) for i in range(b)]
         return ids, dd, stats
+
+    def query(self, query_tokens: np.ndarray, *, quota: int, k: int = 10,
+              n_seeds: int | None = None,
+              ) -> tuple[np.ndarray, np.ndarray, ServeStats]:
+        """One query (S,) tokens. Returns (ids, D-dists, stats)."""
+        ids, dd, stats = self.query_batch(query_tokens[None], quota=quota,
+                                          k=k, n_seeds=n_seeds)
+        ok = (ids[0] >= 0) & np.isfinite(dd[0])
+        return ids[0][ok], dd[0][ok], stats[0]
+
+    # --------------------------------------------------------------- rerank
+    def rerank_query_batch(self, query_tokens: np.ndarray, *, quota: int,
+                           k: int = 10,
+                           ) -> tuple[np.ndarray, np.ndarray, list[ServeStats]]:
+        """"Bi-metric (baseline)": top-quota by d, embed all with D, rerank."""
+        b = query_tokens.shape[0]
+        q_d, q_D = self._embed_queries(query_tokens)
+        width = max(32, quota)
+        res1 = self._stage1(q_d, width=width, pool=max(width, quota),
+                            max_steps=8 * width)
+        cand = np.asarray(res1.pool_ids[:, :quota])
+        tower_batches = self._drain_tower(cand)
+        doc_embs = self._emb_D[np.maximum(cand, 0)]  # host-side, no transfer
+        diff = doc_embs - np.asarray(q_D)[:, None, :]
+        dd = np.sqrt((diff * diff).sum(-1))
+        dd = np.where(cand >= 0, dd, np.inf)
+        order = np.argsort(dd, axis=1, kind="stable")[:, :k]
+        rows = np.arange(b)[:, None]
+        d_calls = np.asarray(res1.n_calls)
+        n_D = (cand >= 0).sum(1)
+        stats = [ServeStats(d_calls=int(d_calls[i]), D_calls=int(n_D[i]),
+                            tower_batches=tower_batches) for i in range(b)]
+        return (np.take_along_axis(cand, order, 1).astype(np.int64),
+                np.take_along_axis(dd, order, 1), stats)
 
     def rerank_query(self, query_tokens: np.ndarray, *, quota: int,
                      k: int = 10) -> tuple[np.ndarray, np.ndarray, ServeStats]:
-        """"Bi-metric (baseline)": top-quota by d, embed all with D, rerank."""
-        stats = ServeStats()
-        q_d = jnp.asarray(self.cheap.embed(query_tokens[None])[0])
-        q_D = self.expensive.embed(query_tokens[None])[0]
-        from repro.core.beam import greedy_search
-        res = greedy_search(
-            lambda ids: self._em_d.dists(q_d, ids),
-            self.index.adjacency,
-            jnp.array([self.index.medoid], jnp.int32),
-            n_points=self.n, beam_width=max(32, quota),
-            pool_size=max(32, quota), max_steps=8 * max(32, quota),
-        )
-        stats.d_calls = int(res.n_calls)
-        cand = [int(i) for i in np.asarray(res.pool_ids[:quota]) if i >= 0]
-        embs = self.expensive.embed(self.corpus_tokens[cand])
-        stats.D_calls = len(cand)
-        dd = np.linalg.norm(embs - q_D[None], axis=1)
-        order = np.argsort(dd)[:k]
-        return np.asarray(cand)[order], dd[order], stats
+        """One query (S,) tokens through the rerank baseline."""
+        ids, dd, stats = self.rerank_query_batch(query_tokens[None],
+                                                 quota=quota, k=k)
+        ok = (ids[0] >= 0) & np.isfinite(dd[0])
+        return ids[0][ok], dd[0][ok], stats[0]

@@ -1,0 +1,148 @@
+"""Batched engine: quota edge cases and parity with the single-query paths.
+
+The parity tests pin the refactor's core guarantee: at ``expand_width=1``
+the batched engine is bit-exact — same pool ids, distances, scored bitmap
+and ``n_calls`` — against (a) the frozen pre-refactor implementation
+(``repro.core._legacy_beam``) and (b) the single-query wrapper, on random
+graphs, across quotas.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import _legacy_beam, distances
+from repro.core.beam import (NO_QUOTA, batched_greedy_search, greedy_search)
+
+
+def _random_graph(seed, n=128, r=6, dim=8, b=5):
+    rng = np.random.default_rng(seed)
+    adj = rng.integers(0, n, (n, r)).astype(np.int32)
+    adj[rng.random((n, r)) < 0.2] = -1  # ragged out-degrees
+    emb = rng.normal(size=(n, dim)).astype(np.float32)
+    qs = rng.normal(size=(b, dim)).astype(np.float32)
+    return jnp.asarray(adj), jnp.asarray(emb), jnp.asarray(qs)
+
+
+def _line_graph(n):
+    adj = np.full((n, 4), -1, np.int32)
+    for i in range(n):
+        if i > 0:
+            adj[i, 0] = i - 1
+        if i < n - 1:
+            adj[i, 1] = i + 1
+    emb = jnp.arange(n, dtype=jnp.float32)[:, None]
+    return jnp.asarray(adj), emb
+
+
+# ---------------------------------------------------------------- edge cases
+def test_quota_zero():
+    adj, emb = _line_graph(16)
+    em = distances.EmbeddingMetric(emb)
+    qs = jnp.array([[3.0], [9.0]], jnp.float32)
+    res = batched_greedy_search(
+        em.dists_batch, adj, qs, jnp.zeros((2, 2), jnp.int32),
+        n_points=16, beam_width=4, quota=0, max_steps=50)
+    assert (np.asarray(res.n_calls) == 0).all()
+    assert not np.asarray(res.scored).any()
+    assert (np.asarray(res.pool_ids) == -1).all()
+    assert np.isinf(np.asarray(res.pool_dists)).all()
+
+
+def test_quota_smaller_than_seed_set():
+    adj, emb = _line_graph(16)
+    em = distances.EmbeddingMetric(emb)
+    qs = jnp.array([[8.0]], jnp.float32)
+    entries = jnp.arange(10, dtype=jnp.int32)[None, :]
+    res = batched_greedy_search(
+        em.dists_batch, adj, qs, entries,
+        n_points=16, beam_width=6, quota=4, max_steps=100)
+    # exactly the first 4 entries get scored, nothing else
+    assert int(res.n_calls[0]) == 4
+    assert int(res.scored[0].sum()) == 4
+    assert set(np.asarray(res.pool_ids[0][:4]).tolist()) == {0, 1, 2, 3}
+
+
+@pytest.mark.parametrize("expand_width", [1, 3])
+def test_quota_exhausted_mid_expansion(expand_width):
+    """Quota lands inside a fanout wave: only the first `remaining` fresh
+    candidates may be scored, and the accounting stays exact."""
+    adj, emb = _line_graph(64)
+    em = distances.EmbeddingMetric(emb)
+    qs = jnp.array([[63.0]], jnp.float32)
+    for quota in (1, 2, 5, 17):
+        res = batched_greedy_search(
+            em.dists_batch, adj, qs, jnp.zeros((1, 1), jnp.int32),
+            n_points=64, beam_width=4, quota=quota,
+            expand_width=expand_width, max_steps=500)
+        assert int(res.n_calls[0]) <= quota
+        # line graph has no duplicate fanout: calls == scored exactly
+        assert int(res.scored[0].sum()) == int(res.n_calls[0])
+
+
+def test_per_query_quotas():
+    """A (B,) quota vector freezes each query at its own budget."""
+    adj, emb = _line_graph(64)
+    em = distances.EmbeddingMetric(emb)
+    qs = jnp.array([[63.0], [63.0], [63.0]], jnp.float32)
+    quotas = jnp.array([1, 7, 23], jnp.int32)
+    res = batched_greedy_search(
+        em.dists_batch, adj, qs, jnp.zeros((3, 1), jnp.int32),
+        n_points=64, beam_width=4, quota=quotas, max_steps=500)
+    assert np.asarray(res.n_calls).tolist() == [1, 7, 23]
+
+
+# ------------------------------------------------------------------- parity
+@pytest.mark.parametrize("quota", [NO_QUOTA, 0, 3, 11, 40])
+def test_batched_matches_legacy_and_wrapper(quota):
+    """Bit-exact three-way parity on random graphs at expand_width=1."""
+    adj, emb, qs = _random_graph(seed=quota % 97, n=128, r=6, b=5)
+    em = distances.EmbeddingMetric(emb)
+    entries = jnp.broadcast_to(jnp.array([0, 64, 100], jnp.int32), (5, 3))
+
+    batched = jax.jit(lambda q: batched_greedy_search(
+        em.dists_batch, adj, q, entries, n_points=128,
+        beam_width=8, pool_size=16, quota=quota, max_steps=100))(qs)
+
+    for b in range(5):
+        legacy = jax.jit(lambda q: _legacy_beam.greedy_search(
+            lambda ids: em.dists(q, ids), adj, entries[b], n_points=128,
+            beam_width=8, pool_size=16, quota=quota, max_steps=100))(qs[b])
+        single = jax.jit(lambda q: greedy_search(
+            lambda ids: em.dists(q, ids), adj, entries[b], n_points=128,
+            beam_width=8, pool_size=16, quota=quota, max_steps=100))(qs[b])
+        for res in (legacy, single):
+            assert (np.asarray(batched.pool_ids[b])
+                    == np.asarray(res.pool_ids)).all()
+            np.testing.assert_array_equal(
+                np.asarray(batched.pool_dists[b]),
+                np.asarray(res.pool_dists))
+            assert int(batched.n_calls[b]) == int(res.n_calls)
+            assert (np.asarray(batched.scored[b])
+                    == np.asarray(res.scored)).all()
+        assert int(batched.n_steps[b]) == int(legacy.n_steps)
+
+
+def test_expand_width_respects_quota_and_order():
+    """Wider waves stay budget-exact and keep pools sorted/deduped."""
+    adj, emb, qs = _random_graph(seed=7, n=128, r=6, b=4)
+    em = distances.EmbeddingMetric(emb)
+    entries = jnp.zeros((4, 1), jnp.int32)
+    for e in (2, 4, 8):
+        res = batched_greedy_search(
+            em.dists_batch, adj, qs, entries, n_points=128,
+            beam_width=8, pool_size=16, quota=30, expand_width=e,
+            max_steps=100)
+        calls = np.asarray(res.n_calls)
+        assert (calls <= 30).all()
+        d = np.asarray(res.pool_dists)
+        ids = np.asarray(res.pool_ids)
+        for b in range(4):
+            fin = d[b][np.isfinite(d[b])]
+            assert (np.diff(fin) >= 0).all()
+            valid = ids[b][ids[b] >= 0]
+            assert len(valid) == len(set(valid.tolist()))
+            # every pool entry was paid for, and (waves are deduped at
+            # E > 1) every call scored exactly one distinct vertex
+            assert np.asarray(res.scored[b])[valid].all()
+            assert int(np.asarray(res.scored[b]).sum()) == int(calls[b])

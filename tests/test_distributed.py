@@ -19,8 +19,8 @@ def _run(body: str) -> str:
         import numpy as np
         from functools import partial
         from jax.sharding import PartitionSpec as P
-        mesh = jax.make_mesh((8,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh, shard_map
+        mesh = make_mesh((8,), ("x",))
     """) + textwrap.dedent(body)
     res = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, cwd=ROOT, timeout=900)
@@ -35,15 +35,15 @@ def test_overlapped_collectives_match_dense():
         key = jax.random.PRNGKey(0)
         x = jax.random.normal(key, (16, 12))
         w = jax.random.normal(jax.random.fold_in(key, 1), (12, 10))
-        f = jax.shard_map(partial(C.allgather_matmul, axis_name="x"),
-                          mesh=mesh, in_specs=(P("x", None), P(None, None)),
-                          out_specs=P(None, None), check_vma=False)
+        f = shard_map(partial(C.allgather_matmul, axis_name="x"),
+                      mesh=mesh, in_specs=(P("x", None), P(None, None)),
+                      out_specs=P(None, None))
         assert float(jnp.abs(f(x, w) - x @ w).max()) < 1e-4
         xk = jax.random.normal(key, (16, 24))
         wk = jax.random.normal(jax.random.fold_in(key, 2), (24, 10))
-        g = jax.shard_map(partial(C.matmul_reducescatter, axis_name="x"),
-                          mesh=mesh, in_specs=(P(None, "x"), P("x", None)),
-                          out_specs=P("x", None), check_vma=False)
+        g = shard_map(partial(C.matmul_reducescatter, axis_name="x"),
+                      mesh=mesh, in_specs=(P(None, "x"), P("x", None)),
+                      out_specs=P("x", None))
         assert float(jnp.abs(g(xk, wk) - xk @ wk).max()) < 1e-4
         print("COLLECTIVES_OK")
     """)
@@ -63,12 +63,12 @@ def test_gpipe_forward_backward():
         sp = PP.stack_stage_params(init_stage, key, 8)
         xm = jax.random.normal(jax.random.fold_in(key, 5), (4, 6, 16))
         def ploss(spp, xmm):
-            o = jax.shard_map(
+            o = shard_map(
                 lambda s_, x_: PP.gpipe_apply(
                     stage_fn, jax.tree.map(lambda a: a[0], s_), x_,
                     axis_name="x", n_micro=4),
-                mesh=mesh, in_specs=(P("x"), P(None)), out_specs=P(None),
-                check_vma=False)(spp, xmm)
+                mesh=mesh, in_specs=(P("x"), P(None)),
+                out_specs=P(None))(spp, xmm)
             return (o ** 2).sum()
         def rloss(spp, xmm):
             r = xmm
@@ -92,9 +92,8 @@ def test_quantized_psum_accuracy():
     out = _run("""
         from repro.train.compression import quantized_psum
         g = jax.random.normal(jax.random.PRNGKey(0), (8, 256))
-        f = jax.shard_map(lambda t: quantized_psum(t, "x"), mesh=mesh,
-                          in_specs=P("x", None), out_specs=P("x", None),
-                          check_vma=False)
+        f = shard_map(lambda t: quantized_psum(t, "x"), mesh=mesh,
+                      in_specs=P("x", None), out_specs=P("x", None))
         approx = f(g)
         exact = jnp.broadcast_to(g.sum(0, keepdims=True), (8, 256))
         rel = float(jnp.abs(approx - exact).max() / jnp.abs(exact).max())
@@ -109,8 +108,7 @@ def test_sharded_bimetric_search_matches_quality():
     """Scatter-gather search over 4 corpus shards reaches the recall of the
     exact D ranking at a moderate budget."""
     out = _run("""
-        mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh2 = make_mesh((2, 4), ("data", "model"))
         from repro.core import distances, metrics
         from repro.core.distributed import build_sharded, sharded_bimetric_search
         from repro.core.vamana import VamanaConfig
@@ -143,9 +141,9 @@ def test_elastic_checkpoint_reshard(tmp_path):
         tree = {{"w": jax.device_put(arr, sh8)}}
         mgr = CheckpointManager("{tmp_path}", keep=2)
         mgr.save(1, tree, async_=False)
-        mesh4 = jax.make_mesh((4,), ("y",),
-                              axis_types=(jax.sharding.AxisType.Auto,),
-                              devices=jax.devices()[:4])
+        from repro.launch.mesh import axis_types_kw
+        mesh4 = jax.make_mesh((4,), ("y",), devices=jax.devices()[:4],
+                              **axis_types_kw(1))
         sh4 = NamedSharding(mesh4, P(None, "y"))
         restored, _ = mgr.restore(
             {{"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}},

@@ -72,6 +72,72 @@ def test_gather_l2_sweep(n, dim, b, k):
     assert (np.isinf(np.asarray(d_pl)) == ~finite).all()
 
 
+@pytest.mark.parametrize("metric", ["l2", "sqeuclidean", "ip", "cosine"])
+def test_gather_score_metrics(metric):
+    """Metric-parameterized fused gather→score vs oracle and core distances."""
+    from repro.core import distances
+
+    key = jax.random.PRNGKey(17)
+    corpus = jax.random.normal(key, (120, 48))
+    qs = jax.random.normal(jax.random.fold_in(key, 1), (3, 48))
+    ids = jax.random.randint(jax.random.fold_in(key, 2), (3, 20), -1, 120)
+    d_ref = ref.gather_score_ref(corpus, qs, ids, metric=metric)
+    d_pl = ops.gather_score(corpus, qs, ids, metric=metric, use_pallas=True,
+                            interpret=True)
+    finite = np.isfinite(np.asarray(d_ref))
+    np.testing.assert_allclose(np.asarray(d_pl)[finite],
+                               np.asarray(d_ref)[finite], rtol=1e-4, atol=1e-4)
+    assert (np.isinf(np.asarray(d_pl)) == ~finite).all()
+    # the engine's EmbeddingMetric path computes the same values
+    em = distances.EmbeddingMetric(corpus, metric)
+    d_em = em.dists_batch(qs, ids)
+    np.testing.assert_allclose(np.asarray(d_ref)[finite],
+                               np.asarray(d_em)[finite], rtol=1e-3, atol=1e-4)
+
+
+def test_merge_pool_batch_payload():
+    """Pool merge carries the expanded payload; XLA path == stable oracle,
+    Pallas path matches on distances (ties may reorder)."""
+    key = jax.random.PRNGKey(3)
+    b, P, K = 4, 16, 24
+    pi = jax.random.randint(key, (b, P), 0, 500)
+    pd = jnp.sort(jax.random.uniform(jax.random.fold_in(key, 1), (b, P)), 1)
+    pf = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.5, (b, P))
+    ci = jax.random.randint(jax.random.fold_in(key, 3), (b, K), -1, 500)
+    cd = jnp.where(ci >= 0,
+                   jax.random.uniform(jax.random.fold_in(key, 4), (b, K)),
+                   jnp.inf)
+    ri, rd, rf = ref.merge_pool_batch_ref(pi, pd, pf, ci, cd)
+    xi, xd, xf = ops.merge_pool_batch(pi, pd, pf, ci, cd)
+    assert (np.asarray(xi) == np.asarray(ri)).all()
+    np.testing.assert_array_equal(np.asarray(xd), np.asarray(rd))
+    assert (np.asarray(xf) == np.asarray(rf)).all()
+    gi, gd, gf = ops.merge_pool_batch(pi, pd, pf, ci, cd, use_pallas=True,
+                                      interpret=True)
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(rd), atol=1e-6)
+    assert (np.asarray(gi) == np.asarray(ri)).all()
+    assert (np.asarray(gf) == np.asarray(rf)).all()
+
+
+def test_merge_pool_batch_masked_wave_noop():
+    """An all-masked candidate wave must leave the pool bit-identical —
+    the batched engine relies on this to freeze finished queries."""
+    key = jax.random.PRNGKey(9)
+    b, P, K = 3, 12, 8
+    pi = jax.random.randint(key, (b, P), -1, 100)
+    pd = jnp.sort(jnp.where(pi >= 0,
+                            jax.random.uniform(jax.random.fold_in(key, 1),
+                                               (b, P)), jnp.inf), axis=1)
+    pi = jnp.where(jnp.isfinite(pd), jnp.abs(pi), -1)
+    pf = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.5, (b, P))
+    ci = jnp.full((b, K), -1, pi.dtype)
+    cd = jnp.full((b, K), jnp.inf)
+    oi, od, of = ops.merge_pool_batch(pi, pd, pf, ci, cd)
+    assert (np.asarray(oi) == np.asarray(pi)).all()
+    np.testing.assert_array_equal(np.asarray(od), np.asarray(pd))
+    assert (np.asarray(of) == np.asarray(pf)).all()
+
+
 @pytest.mark.parametrize("L,K", [(16, 24), (8, 8), (32, 7), (4, 60)])
 def test_beam_merge_sweep(L, K):
     key = jax.random.PRNGKey(L * 100 + K)

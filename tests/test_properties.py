@@ -2,11 +2,15 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core import distances
-from repro.kernels import ref
-from repro.train.optimizer import dequantize_blockwise, quantize_blockwise
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import distances  # noqa: E402
+from repro.kernels import ref  # noqa: E402
+from repro.train.optimizer import (  # noqa: E402
+    dequantize_blockwise, quantize_blockwise)
 
 settings.register_profile("ci", max_examples=15, deadline=None)
 settings.load_profile("ci")

@@ -1,0 +1,76 @@
+"""Serving engine: exact budget, batch-vs-single parity, cache accounting.
+
+Uses deliberately tiny towers/corpus so the whole file stays test-suite
+cheap while still exercising the real path: tower embed -> cheap-only index
+build -> batched stage 1 on device -> host-driven stage 2 draining the
+expensive tower in batches.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import qwen3_0_6b
+from repro.models import transformer as T
+from repro.serve import BiMetricEngine, EmbedTower
+
+
+@pytest.fixture(scope="module")
+def engine_parts():
+    key = jax.random.PRNGKey(0)
+    cheap_cfg = qwen3_0_6b.smoke()
+    exp_cfg = T.TransformerConfig(
+        name="exp-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        head_dim=16, d_ff=128, vocab=cheap_cfg.vocab, embed_dim=32)
+    cheap = EmbedTower(T.init_params(key, cheap_cfg), cheap_cfg)
+    expensive = EmbedTower(
+        T.init_params(jax.random.fold_in(key, 1), exp_cfg), exp_cfg)
+    corpus = np.random.default_rng(0).integers(
+        0, cheap_cfg.vocab, (96, 10), dtype=np.int32)
+    return cheap, expensive, corpus
+
+
+def _fresh_engine(engine_parts):
+    cheap, expensive, corpus = engine_parts
+    return BiMetricEngine(cheap, expensive, corpus)
+
+
+def test_quota_exact_and_batch_single_parity(engine_parts):
+    eng = _fresh_engine(engine_parts)
+    qs = eng.corpus_tokens[[3, 40, 77]].copy()
+    ids_b, dd_b, stats_b = eng.query_batch(qs, quota=15, k=5)
+    assert ids_b.shape == (3, 5)
+    assert all(s.D_calls <= 15 for s in stats_b)
+
+    # per-query accounting parity: a fresh engine, one query at a time
+    eng2 = _fresh_engine(engine_parts)
+    for i in range(3):
+        ids1, dd1, s1 = eng2.query(qs[i], quota=15, k=5)
+        ok = (ids_b[i] >= 0) & np.isfinite(dd_b[i])
+        assert (ids1 == ids_b[i][ok]).all()
+        np.testing.assert_allclose(dd1, dd_b[i][ok], rtol=1e-5)
+        assert s1.D_calls == stats_b[i].D_calls
+
+
+def test_cache_saves_tower_batches_not_accounting(engine_parts):
+    eng = _fresh_engine(engine_parts)
+    q = eng.corpus_tokens[7]
+    ids1, dd1, s1 = eng.query(q, quota=12, k=5)
+    ids2, dd2, s2 = eng.query(q, quota=12, k=5)
+    assert (ids1 == ids2).all()
+    np.testing.assert_array_equal(dd1, dd2)
+    assert s1.D_calls == s2.D_calls  # budget accounting is cache-blind
+    assert s2.tower_batches == 0  # but the tower is not re-run
+    assert s1.tower_batches > 0
+
+
+def test_quota_zero_spends_nothing(engine_parts):
+    eng = _fresh_engine(engine_parts)
+    ids, dd, st = eng.query(eng.corpus_tokens[0], quota=0, k=5)
+    assert ids.size == 0 and st.D_calls == 0 and st.tower_batches == 0
+
+
+def test_rerank_exact_budget(engine_parts):
+    eng = _fresh_engine(engine_parts)
+    ids, dd, st = eng.rerank_query(eng.corpus_tokens[11], quota=16, k=5)
+    assert st.D_calls <= 16
+    assert (np.diff(dd) >= 0).all()
