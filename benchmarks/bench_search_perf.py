@@ -28,13 +28,24 @@ Two scenarios, matching the two halves of the paper's search:
   noisier; ``expand_width=6`` both raises recall and cuts steps here.
 
 Also kernel-vs-oracle microbenches (interpret mode measures the correctness
-path; on TPU the Pallas kernels replace the XLA fallbacks).
+path; on TPU the Pallas kernels replace the XLA fallbacks), and a
+``sharded`` scenario: the same quota-bounded search run device-parallel at
+2/4/8 forced host devices (``--xla_force_host_platform_device_count``, in a
+subprocess so this process keeps its device view), parity-checked bit-exact
+against the single-device engine. On a CPU host the shards share the same
+cores, so this tracks collective overhead, not a real speedup — the
+trajectory artifact is what CI gates on.
 
 Writes ``BENCH_search_perf.json`` (via benchmarks/run.py, or directly when
 executed as a script) — the machine-readable perf trajectory artifact.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+import tempfile
 import time
 
 import jax
@@ -52,6 +63,8 @@ K = 10
 QUOTA = 128  # stage-2 scenario budget
 E_QUOTA = 2  # wave width under a quota (recall-safe)
 E_UNBOUNDED = 6  # wave width for convergence-bounded search
+SHARD_COUNTS = (2, 4, 8)  # forced host devices for the sharded scenario
+SHARD_BATCH = 32
 
 
 def _time(fn, *args, reps=7):
@@ -130,6 +143,79 @@ def _scenario(name, setup, em, queries, true_ids, *, quota, expand_width,
     return {"expand_width": expand_width, "quota": quota, "batches": batches}
 
 
+_SHARDED_PROG = """
+import os, sys, json, time
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=" + sys.argv[2])
+sys.path.insert(0, "src")
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core.beam import sharded_greedy_search
+
+data = np.load(sys.argv[1])
+emb, adj = jnp.asarray(data["emb"]), jnp.asarray(data["adj"])
+qs, entries = jnp.asarray(data["qs"]), jnp.asarray(data["entries"])
+quota, beam, e = int(data["quota"]), int(data["beam"]), int(data["e"])
+
+def timed(shards):
+    f = lambda q: sharded_greedy_search(
+        emb, adj, q, entries, shards=shards, metric="l2", beam_width=beam,
+        pool_size=beam, quota=quota, expand_width=e, max_steps=4 * quota)
+    r = jax.block_until_ready(f(qs))  # compile
+    best = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(qs))
+        best = min(best, time.perf_counter() - t0)
+    return best, r
+
+base_wall, base = timed(1)
+out = {"devices": int(sys.argv[2]), "unsharded_us_per_query":
+       base_wall / qs.shape[0] * 1e6, "shards": {}}
+for s in (int(x) for x in sys.argv[3].split(",")):
+    wall, r = timed(s)
+    parity = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(base, r))
+    assert parity, f"sharded engine diverged at shards={s}"
+    out["shards"][str(s)] = {
+        "us_per_query": wall / qs.shape[0] * 1e6,
+        "speedup_vs_unsharded": base_wall / wall,
+        "parity_bit_exact": parity,
+    }
+print("RESULT_JSON=" + json.dumps(out))
+"""
+
+
+def _sharded_scenario(setup, em, queries) -> dict:
+    """Device-parallel engine at 2/4/8 forced host devices (subprocess)."""
+    b = SHARD_BATCH
+    entries = jnp.broadcast_to(
+        jnp.array([setup.index_d.medoid], jnp.int32), (b, 1))
+    ndev = max(SHARD_COUNTS)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "sharded_bench.npz")
+        np.savez(path, emb=np.asarray(em.embeddings),
+                 adj=np.asarray(setup.index_d.adjacency),
+                 qs=np.asarray(queries[:b]), entries=np.asarray(entries),
+                 quota=QUOTA, beam=BEAM, e=E_QUOTA)
+        res = subprocess.run(
+            [sys.executable, "-c", _SHARDED_PROG, path, str(ndev),
+             ",".join(str(s) for s in SHARD_COUNTS)],
+            capture_output=True, text=True, timeout=1800,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    if res.returncode != 0:
+        raise RuntimeError(f"sharded scenario failed: {res.stderr[-2000:]}")
+    line = next(ln for ln in res.stdout.splitlines()
+                if ln.startswith("RESULT_JSON="))
+    out = json.loads(line[len("RESULT_JSON="):])
+    for s, row in sorted(out["shards"].items(), key=lambda kv: int(kv[0])):
+        emit(f"perf/sharded_s{s}_b{b}", row["us_per_query"],
+             f"us_per_query;x_vs_unsharded={row['speedup_vs_unsharded']:.2f}"
+             f";parity={row['parity_bit_exact']}")
+    return out
+
+
 def run() -> dict:
     setup = Setup(n=4096, n_queries=max(BATCH_SIZES))
     em_d = distances.EmbeddingMetric(setup.data.corpus_d)
@@ -143,6 +229,7 @@ def run() -> dict:
     stage1 = _scenario(
         "stage1_unbounded", setup, em_d, setup.data.queries_d, true_d,
         quota=_legacy_beam.NO_QUOTA, expand_width=E_UNBOUNDED, max_steps=128)
+    sharded = _sharded_scenario(setup, em_D, setup.data.queries_D)
 
     # kernel micro-benches (XLA path = production CPU path; pallas path is
     # interpret-mode, correctness-only on CPU)
@@ -164,6 +251,7 @@ def run() -> dict:
         "n": setup.n,
         "stage2_quota": stage2,
         "stage1_unbounded": stage1,
+        "sharded": sharded,
         # headline: batched engine vs the retired per-query serving loop,
         # on the paper's quota-bounded cost model, at batch 32
         "speedup_at_32": stage2["batches"]["32"]["speedup_vs_perquery"],

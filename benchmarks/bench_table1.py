@@ -6,7 +6,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit
-from repro.configs import ARCHS, EXTRA_ARCHS, get_arch
+from repro.configs import get_arch
 
 
 def _count(spec) -> tuple[int, int]:

@@ -4,14 +4,22 @@ Each row: ``name,us_per_call,derived`` CSV. Additionally, every benchmark's
 emitted rows (plus whatever dict its ``run()`` returns) are written to a
 machine-readable ``BENCH_<slug>.json`` artifact so the perf trajectory is
 tracked from PR to PR (``BENCH_OUT_DIR`` overrides the destination).
+
+``--only <slug>[,<slug>...]`` runs a subset by artifact slug — the CI
+bench-gate uses ``--only search_perf`` and compares the fresh artifact
+against the committed baseline with ``scripts/check_bench.py``.
 """
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 import time
 import traceback
 
-sys.path.insert(0, "src")
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)  # the `benchmarks` package itself, in script mode
 
 
 def main() -> None:
@@ -27,6 +35,16 @@ def main() -> None:
         ("covertree", "covertree", bench_covertree.run),
         ("perf", "search_perf", bench_search_perf.run),
     ]
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None, metavar="SLUG[,SLUG...]",
+                    help="run only the benchmarks with these artifact slugs")
+    args = ap.parse_args()
+    if args.only:
+        wanted = set(args.only.split(","))
+        unknown = wanted - {slug for _, slug, _ in benches}
+        if unknown:
+            raise SystemExit(f"unknown bench slug(s): {sorted(unknown)}")
+        benches = [b for b in benches if b[1] in wanted]
     print("name,us_per_call,derived")
     failures = []
     for name, slug, fn in benches:

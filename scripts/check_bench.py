@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""CI perf gate: compare a fresh BENCH artifact against the committed baseline.
+
+Fails (exit 1) when the gated metric regresses more than ``--tolerance``
+(default 20%) below the baseline. The headline metric is
+``result.speedup_at_32`` in ``BENCH_search_perf.json`` — the batched
+engine's speedup over the retired per-query serving path at batch 32, the
+number PR 1 bought and every later PR must keep.
+
+Usage (what ``scripts/ci.sh --bench`` runs):
+
+    python benchmarks/run.py --only search_perf   # BENCH_OUT_DIR=<tmp>
+    python scripts/check_bench.py \
+        --baseline BENCH_search_perf.json \
+        --new <tmp>/BENCH_search_perf.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def lookup(payload: dict, dotted: str) -> float:
+    node = payload
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            raise KeyError(f"key {dotted!r} not found (missing {part!r})")
+        node = node[part]
+    return float(node)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_*.json artifact")
+    ap.add_argument("--new", required=True, dest="fresh",
+                    help="freshly measured BENCH_*.json artifact")
+    ap.add_argument("--key", default="result.speedup_at_32",
+                    help="dotted path of the gated metric (higher is better)")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed fractional regression below the baseline")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = lookup(json.load(f), args.key)
+    with open(args.fresh) as f:
+        new = lookup(json.load(f), args.key)
+
+    floor = base * (1.0 - args.tolerance)
+    verdict = "OK" if new >= floor else "REGRESSION"
+    print(f"bench-gate {args.key}: baseline={base:.4f} new={new:.4f} "
+          f"floor={floor:.4f} ({args.tolerance:.0%} tolerance) -> {verdict}")
+    if new < floor:
+        print(f"FAIL: {args.key} regressed {1.0 - new / base:.1%} "
+              f"(> {args.tolerance:.0%} allowed) — if this is a real, "
+              "justified tradeoff, re-measure and commit a new baseline "
+              "artifact in the same PR.", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,7 +1,24 @@
 #!/usr/bin/env bash
 # Tier-1 verification — the exact command the roadmap pins:
 #   PYTHONPATH=src python -m pytest -x -q
-# Run from the repo root (locally or in CI).
+# Run from the repo root (locally or in CI). Extra args go to pytest.
+#
+# `scripts/ci.sh --bench [check_bench args...]` instead runs the perf gate:
+# measure `benchmarks/run.py --only search_perf` into a scratch dir and
+# compare result.speedup_at_32 against the committed BENCH_search_perf.json
+# (>20% regression fails).
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+if [[ "${1:-}" == "--bench" ]]; then
+  shift
+  out="$(mktemp -d)"
+  trap 'rm -rf "$out"' EXIT
+  BENCH_OUT_DIR="$out" PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/run.py --only search_perf
+  python scripts/check_bench.py --baseline BENCH_search_perf.json \
+    --new "$out/BENCH_search_perf.json" "$@"
+  exit 0
+fi
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

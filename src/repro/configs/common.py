@@ -8,13 +8,12 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.distributed import sharding as shr
 from repro.train.optimizer import AdamWConfig, make_adamw
 
 Pytree = Any

@@ -17,7 +17,6 @@ The paper's technique does not live *inside* the GNN (see DESIGN.md
 bi-metric index (examples/gnn_corpus_search.py)."""
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 
 import jax

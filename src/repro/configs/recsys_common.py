@@ -18,7 +18,6 @@ repro/serve/engine.py for the budgeted two-stage integration.
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

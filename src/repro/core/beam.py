@@ -38,6 +38,15 @@ The step is exposed as ``plan_step`` / ``commit_scores`` so callers that
 cannot score inside a ``while_loop`` (the serving engine, whose expensive
 metric is a lazily-evaluated model forward pass) drive the identical loop
 from the host: plan on device, score through the tower, commit on device.
+
+The same plan/commit wave runs **device-parallel** over a corpus mesh
+(:func:`sharded_greedy_search`): each device owns a contiguous corpus block
+and the matching column slice of the scored bitmap, waves are scored by a
+psum of shard-local fused gathers, and the pools stay replicated — every
+device runs the identical merge on the identical replicated wave, so the
+sharded engine is *bit-exact* vs the unsharded one (pool ids/dists, n_calls
+and the scored bitmap). ``ShardCtx`` is the per-step handle; the collectives
+live in ``repro.distributed.collectives``.
 """
 from __future__ import annotations
 
@@ -54,8 +63,27 @@ Array = jax.Array
 NO_QUOTA = jnp.iinfo(jnp.int32).max // 2
 
 
+class ShardCtx(NamedTuple):
+    """Handle for running the engine inside a ``shard_map`` over a corpus mesh.
+
+    ``axis_name`` is the mesh axis the corpus (and the scored bitmap's column
+    dim) is sharded over; ``n_local`` is the contiguous block of corpus rows
+    each device owns (global rows ``[axis_index * n_local, ...)``). When a
+    ``ShardCtx`` is passed, ``BatchedSearchState.scored`` is the *local*
+    (B, n_local) column slice; everything else in the state is replicated.
+    """
+
+    axis_name: str
+    n_local: int
+
+
 class BatchedSearchState(NamedTuple):
-    """Per-query search state, batch-leading. All shapes are static."""
+    """Per-query search state, batch-leading. All shapes are static.
+
+    Under a :class:`ShardCtx`, ``scored`` is the device-local (B, n_local)
+    column slice of the global (B, N) bitmap; all other fields are
+    replicated across the shard axis (the replicated-pool invariant).
+    """
 
     pool_ids: Array  # (B, P) int32, sorted by dist; -1 pad
     pool_dists: Array  # (B, P) f32; +inf pad
@@ -82,6 +110,32 @@ def _positional_dedup(ids: Array) -> Array:
     return jnp.where(dup.any(axis=-1), -1, ids)
 
 
+def _scored_lookup(scored: Array, ids: Array, shard: ShardCtx | None) -> Array:
+    """(B, K) bool: which (valid) ids are already marked in the bitmap."""
+    if shard is None:
+        return (ids >= 0) & jnp.take_along_axis(
+            scored, jnp.maximum(ids, 0), axis=1
+        )
+    from repro.distributed import collectives
+
+    return collectives.bitmap_lookup(scored, ids, axis_name=shard.axis_name)
+
+
+def _scored_scatter(
+    scored: Array, ids: Array, mark: Array, shard: ShardCtx | None
+) -> Array:
+    """Mark the kept lanes' ids in the (local slice of the) bitmap."""
+    if shard is None:
+        rows = jnp.arange(ids.shape[0])[:, None]
+        # scatter-OR (max): padding ids all alias index 0, so a plain set()
+        # races
+        return scored.at[rows, jnp.maximum(ids, 0)].max(mark)
+    from repro.distributed import collectives
+
+    return collectives.bitmap_scatter(scored, ids, mark,
+                                      axis_name=shard.axis_name)
+
+
 def init_state(
     entry_ids: Array,
     *,
@@ -90,13 +144,16 @@ def init_state(
     quota: Array,
     scored_init: Array | None = None,
     calls_init: Array | int = 0,
+    shard: ShardCtx | None = None,
 ) -> tuple[BatchedSearchState, Array, Array]:
     """Empty pools + the entry wave, quota-masked but not yet scored.
 
     Returns ``(state, safe_entries (B, E0), keep (B, E0))``; the caller scores
     ``safe_entries`` (ids < 0 are masked) and feeds the result to
     :func:`commit_scores`. ``scored`` / ``n_calls`` already account for the
-    kept entries — a wave is paid for when it is planned.
+    kept entries — a wave is paid for when it is planned. Under a
+    :class:`ShardCtx` the bitmap is allocated as the device-local
+    (B, n_local) slice and entry marks land on their owning shard.
     """
     b, e = entry_ids.shape
     entry_ids = _positional_dedup(entry_ids.astype(jnp.int32))
@@ -107,14 +164,13 @@ def init_state(
     keep = valid & (order_idx < (quota - calls0)[:, None])
     safe = jnp.where(keep, entry_ids, -1)
 
-    rows = jnp.arange(b)[:, None]
+    n_cols = n_points if shard is None else shard.n_local
     scored = (
-        jnp.zeros((b, n_points), dtype=bool)
+        jnp.zeros((b, n_cols), dtype=bool)
         if scored_init is None
         else scored_init
     )
-    # scatter-OR (max): padding ids all alias index 0, so a plain set() races
-    scored = scored.at[rows, jnp.maximum(safe, 0)].max(keep)
+    scored = _scored_scatter(scored, safe, keep, shard)
     n_calls = calls0 + keep.sum(axis=1, dtype=jnp.int32)
 
     p = pool_size
@@ -151,6 +207,7 @@ def plan_step(
     quota: Array,
     max_steps: int,
     expand_width: int = 1,
+    shard: ShardCtx | None = None,
 ) -> tuple[BatchedSearchState, Array, Array, Array]:
     """One expansion wave: pick frontiers, gather fanout, mask to the quota.
 
@@ -159,13 +216,17 @@ def plan_step(
     advanced (a wave is paid for when planned). The caller scores ``safe``
     and calls :func:`commit_scores`. Frozen (inactive) queries plan an
     all-masked wave, which commits as an exact no-op.
+
+    Under a :class:`ShardCtx`, the already-scored lookup OR-reduces the
+    owning shard's bitmap slice across the axis and the scatter lands only
+    on the owner; all other planning math runs on replicated inputs, so the
+    planned wave is replicated (and bit-exact vs the unsharded plan).
     """
     b, p = state.pool_ids.shape
     L = beam_width
     E = expand_width
     r = adjacency.shape[1]
     quota = jnp.broadcast_to(jnp.asarray(quota, jnp.int32), (b,))
-    rows = jnp.arange(b)[:, None]
 
     active = active_mask(
         state, beam_width=L, quota=quota, max_steps=max_steps
@@ -199,15 +260,13 @@ def plan_step(
         # paid for once; E=1 keeps the historical behavior bit-exactly
         # (which scores duplicate ids inside one adjacency row twice).
         cand = _positional_dedup(cand)
-    fresh = (cand >= 0) & ~jnp.take_along_axis(
-        state.scored, jnp.maximum(cand, 0), axis=1
-    )
+    fresh = (cand >= 0) & ~_scored_lookup(state.scored, cand, shard)
     # exact quota masking: only the first `remaining` fresh ids get scored
     call_idx = jnp.cumsum(fresh.astype(jnp.int32), axis=1) - 1
     keep = fresh & (call_idx < (quota - state.n_calls)[:, None])
     safe = jnp.where(keep, cand, -1)
 
-    scored = state.scored.at[rows, jnp.maximum(safe, 0)].max(keep)
+    scored = _scored_scatter(state.scored, safe, keep, shard)
     n_calls = state.n_calls + keep.sum(axis=1, dtype=jnp.int32)
     n_steps = state.n_steps + active.astype(jnp.int32)
     state = state._replace(
@@ -257,6 +316,7 @@ def batched_greedy_search(
     calls_init: Array | int = 0,
     use_fused_merge: bool = False,
     interpret: bool = False,
+    shard: ShardCtx | None = None,
 ) -> SearchResult:
     """Greedy beam search over ``adjacency`` for a whole query batch.
 
@@ -282,8 +342,13 @@ def batched_greedy_search(
         used by the bi-metric stage-2 search (see bimetric.py).
       use_fused_merge / interpret: route pool merges through the Pallas
         bitonic kernel (TPU) instead of the stable jnp merge.
+      shard: run the loop device-parallel inside a ``shard_map`` over a
+        corpus mesh — ``dist_fn_batch`` must then be the wave-gather
+        collective and ``scored`` is the local bitmap slice (callers use
+        :func:`sharded_greedy_search`, which sets all of this up).
 
-    Returns a batch-leading SearchResult, pools sorted ascending by distance.
+    Returns a batch-leading SearchResult, pools sorted ascending by distance
+    (under ``shard``, ``scored`` is the local (B, n_local) slice).
     """
     adjacency = adjacency.astype(jnp.int32)
     n, _ = adjacency.shape
@@ -302,6 +367,7 @@ def batched_greedy_search(
         quota=quota,
         scored_init=scored_init,
         calls_init=calls_init,
+        shard=shard,
     )
     state = commit_scores(
         state, safe, keep, dist_fn_batch(query_ctx, safe),
@@ -321,6 +387,7 @@ def batched_greedy_search(
             quota=quota,
             max_steps=max_steps,
             expand_width=expand_width,
+            shard=shard,
         )
         return commit_scores(
             s, safe, keep, dist_fn_batch(query_ctx, safe),
@@ -358,6 +425,93 @@ def fused_dist_fn(
         )
 
     return fn
+
+
+def sharded_greedy_search(
+    corpus: Array,
+    adjacency: Array,
+    query_embs: Array,
+    entry_ids: Array,
+    *,
+    shards: int,
+    metric: str = "sqeuclidean",
+    mesh=None,
+    axis_name: str | None = None,
+    beam_width: int,
+    pool_size: int | None = None,
+    quota: int | Array = NO_QUOTA,
+    expand_width: int = 1,
+    max_steps: int | None = None,
+    use_pallas: bool = False,
+    use_fused_merge: bool = False,
+    interpret: bool = False,
+) -> SearchResult:
+    """Device-parallel batched greedy search over a sharded corpus.
+
+    The corpus is split into ``shards`` contiguous row blocks, one per
+    device of a 1-D mesh (built over the first ``shards`` local devices when
+    ``mesh`` is None). Inside ``shard_map`` each device gathers and scores
+    the wave lanes it owns with the fused local gather→score kernel; a psum
+    over the shard axis reconstructs the replicated wave, the already-scored
+    lookup OR-reduces the per-shard bitmap slices, and the bitmap scatter
+    lands on the owning shard. Pools, call counters and step counters are
+    replicated — every device runs the identical plan and merge, so the
+    result (including the all-gathered scored bitmap) is **bit-exact** vs
+    :func:`batched_greedy_search` with :func:`fused_dist_fn` on one device.
+
+    ``shards=1`` short-circuits to the single-device engine (today's path).
+    """
+    from jax.sharding import PartitionSpec as _P
+
+    from repro.distributed import collectives
+    from repro.distributed.sharding import (SEARCH_AXIS, search_mesh,
+                                            shard_corpus)
+    from repro.launch.mesh import shard_map
+
+    n_points = corpus.shape[0]
+    if shards == 1:
+        return batched_greedy_search(
+            fused_dist_fn(corpus, metric, use_pallas=use_pallas,
+                          interpret=interpret),
+            adjacency, query_embs, entry_ids, n_points=n_points,
+            beam_width=beam_width, pool_size=pool_size, quota=quota,
+            expand_width=expand_width, max_steps=max_steps,
+            use_fused_merge=use_fused_merge, interpret=interpret)
+
+    axis = axis_name or SEARCH_AXIS
+    stacked, n_local = shard_corpus(corpus, shards)
+    mesh = mesh if mesh is not None else search_mesh(shards, axis)
+    ctx = ShardCtx(axis_name=axis, n_local=n_local)
+    b = entry_ids.shape[0]
+    quota_arr = jnp.broadcast_to(jnp.asarray(quota, jnp.int32), (b,))
+
+    def program(local_corpus, adj, q_embs, entries, q):
+        local_corpus = local_corpus[0]  # (1, n_local, dim) block -> local rows
+
+        def dist_fn(qe, ids):
+            return collectives.wave_gather_score(
+                local_corpus, qe, ids, axis_name=axis, metric=metric,
+                use_pallas=use_pallas, interpret=interpret)
+
+        return batched_greedy_search(
+            dist_fn, adj, q_embs, entries, n_points=n_points,
+            beam_width=beam_width, pool_size=pool_size, quota=q,
+            expand_width=expand_width, max_steps=max_steps,
+            use_fused_merge=use_fused_merge, interpret=interpret, shard=ctx)
+
+    rep2, rep1 = _P(None, None), _P(None)
+    res = shard_map(
+        program,
+        mesh=mesh,
+        in_specs=(_P(axis, None, None), rep2, rep2, rep2, rep1),
+        out_specs=SearchResult(
+            pool_ids=rep2, pool_dists=rep2,
+            scored=_P(None, axis),  # local column slices -> global (B, S*nl)
+            n_calls=rep1, n_steps=rep1),
+    )(stacked, adjacency.astype(jnp.int32), query_embs,
+      entry_ids.astype(jnp.int32), quota_arr)
+    # drop the zero-padding columns (global ids >= N never get scored)
+    return res._replace(scored=res.scored[:, :n_points])
 
 
 def greedy_search(

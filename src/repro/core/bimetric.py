@@ -29,7 +29,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.beam import NO_QUOTA, batched_greedy_search
+from repro.core.beam import NO_QUOTA, batched_greedy_search, sharded_greedy_search
 from repro.core.vamana import VamanaIndex
 
 Array = jax.Array
@@ -91,6 +91,10 @@ def bimetric_search(
     beam_width_D: int | None = None,
     use_stage1: bool = True,
     expand_width: int = 1,
+    shards: int = 1,
+    corpora: tuple[Array, Array] | None = None,
+    metric: str = "l2",
+    mesh=None,
 ) -> BiMetricResult:
     """Batched bi-metric search.
 
@@ -98,40 +102,82 @@ def bimetric_search(
     (k,) ids against *one* query's context under d / D respectively (they are
     vmapped over the batch here); ``q_cheap`` and ``q_expensive`` are the
     per-query contexts (e.g. the two embeddings).
+
+    ``shards > 1`` runs both stages device-parallel over a corpus mesh; the
+    metrics must then be embedding-backed: pass
+    ``corpora=(corpus_cheap, corpus_expensive)`` (the embedding matrices that
+    induce d and D under ``metric``) and the distance callables are ignored.
+    Results are bit-exact vs the single-device path.
     """
     b = q_cheap.shape[0]
     if n_seeds is None:
         n_seeds = max(1, quota // 2)  # paper default: top-Q/2
     l1 = l_search_d or max(index.config.l_build, n_seeds)
+    if shards > 1 and corpora is None:
+        raise ValueError("shards > 1 needs corpora=(corpus_d, corpus_D) — "
+                         "only embedding-backed metrics can be sharded")
 
     if use_stage1:
-        seeds, d_calls = _stage1_batch(
-            jax.vmap(cheap_fn_batch),
-            index,
-            q_cheap,
-            n_points=n_points,
-            n_seeds=n_seeds,
-            l_search=l1,
-            expand_width=expand_width,
-        )
+        if shards > 1:
+            res1 = sharded_greedy_search(
+                corpora[0],
+                index.adjacency,
+                q_cheap,
+                _medoid_entries(index, b),
+                shards=shards,
+                metric=metric,
+                mesh=mesh,
+                beam_width=l1,
+                pool_size=max(l1, n_seeds),
+                quota=NO_QUOTA,
+                expand_width=expand_width,
+                max_steps=4 * l1,
+            )
+            seeds, d_calls = res1.pool_ids[:, :n_seeds], res1.n_calls
+        else:
+            seeds, d_calls = _stage1_batch(
+                jax.vmap(cheap_fn_batch),
+                index,
+                q_cheap,
+                n_points=n_points,
+                n_seeds=n_seeds,
+                l_search=l1,
+                expand_width=expand_width,
+            )
     else:  # "Default" ablation: start from the graph entry point only
         seeds = jnp.full((b, max(n_seeds, 1)), -1, jnp.int32)
         seeds = seeds.at[:, 0].set(jnp.asarray(index.medoid, jnp.int32))
         d_calls = jnp.zeros((b,), jnp.int32)
 
     bw = beam_width_D or max(k, min(quota, 2 * n_seeds + 8))
-    res = batched_greedy_search(
-        jax.vmap(expensive_fn_batch),
-        index.adjacency,
-        q_expensive,
-        seeds,
-        n_points=n_points,
-        beam_width=bw,
-        pool_size=max(bw, k),
-        quota=quota,
-        expand_width=expand_width,
-        max_steps=4 * quota,  # quota is the real stop; steps are a safety cap
-    )
+    if shards > 1:
+        res = sharded_greedy_search(
+            corpora[1],
+            index.adjacency,
+            q_expensive,
+            seeds,
+            shards=shards,
+            metric=metric,
+            mesh=mesh,
+            beam_width=bw,
+            pool_size=max(bw, k),
+            quota=quota,
+            expand_width=expand_width,
+            max_steps=4 * quota,
+        )
+    else:
+        res = batched_greedy_search(
+            jax.vmap(expensive_fn_batch),
+            index.adjacency,
+            q_expensive,
+            seeds,
+            n_points=n_points,
+            beam_width=bw,
+            pool_size=max(bw, k),
+            quota=quota,
+            expand_width=expand_width,
+            max_steps=4 * quota,  # quota is the real stop; steps = safety cap
+        )
     return BiMetricResult(
         ids=res.pool_ids[:, :k],
         dists=res.pool_dists[:, :k],

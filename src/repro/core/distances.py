@@ -13,7 +13,6 @@ All functions are pure jnp and jit/vmap-friendly.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -18,16 +18,16 @@ This file contains the shard_map program; mesh construction lives in
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import distances
 from repro.core.bimetric import bimetric_search_single
 from repro.core.vamana import VamanaConfig, VamanaIndex
+from repro.distributed import collectives
 
 Array = jax.Array
 
@@ -123,14 +123,10 @@ def sharded_bimetric_search(
         )
         shard = jax.lax.axis_index(model_axis)
         gids = jnp.where(ids >= 0, ids + shard * n_local, -1)
-        # tiny merge traffic: (S, B_local, k)
-        all_ids = jax.lax.all_gather(gids, model_axis)
-        all_dd = jax.lax.all_gather(dd, model_axis)
-        all_ids = jnp.moveaxis(all_ids, 0, 1).reshape(gids.shape[0], -1)
-        all_dd = jnp.moveaxis(all_dd, 0, 1).reshape(dd.shape[0], -1)
-        order = jnp.argsort(all_dd, axis=-1, stable=True)[:, :k]
-        top_ids = jnp.take_along_axis(all_ids, order, axis=-1)
-        top_dd = jnp.take_along_axis(all_dd, order, axis=-1)
+        # per-shard top-k cut before the all-gather: merge traffic is
+        # (S, B_local, k), never the shard-local pools
+        top_ids, top_dd = collectives.gather_topk_merge(
+            gids, jnp.where(ids >= 0, dd, jnp.inf), k, axis_name=model_axis)
         calls = jax.lax.psum(n_calls, model_axis)
         return top_ids, top_dd, calls
 

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import distances
-from repro.core.beam import batched_greedy_search
+from repro.core.beam import batched_greedy_search, sharded_greedy_search
 
 Array = jax.Array
 
@@ -223,6 +223,8 @@ def search(
     metric: str | None = None,
     n_entries: int = 8,
     expand_width: int = 1,
+    shards: int = 1,
+    mesh=None,
 ) -> tuple[Array, Array, Array]:
     """Standard single-metric search. Returns (ids (B,k), dists (B,k), calls (B,)).
 
@@ -230,8 +232,12 @@ def search(
     strongly clustered corpora a single entry point leaves the greedy search
     stranded in the entry's cluster (multi-entry is standard practice). The
     whole query batch runs through one batched-engine loop; ``expand_width``
-    is the step-widening throughput knob (1 = historical semantics)."""
-    em = distances.EmbeddingMetric(corpus_emb, metric or index.config.metric)
+    is the step-widening throughput knob (1 = historical semantics).
+
+    ``shards > 1`` runs the identical loop device-parallel over a corpus
+    mesh (``repro.core.beam.sharded_greedy_search``) — bit-exact results,
+    the corpus and scored bitmap split across ``shards`` devices."""
+    met = metric or index.config.metric
     L = beam_width or max(k, index.config.l_build)
     n = corpus_emb.shape[0]
     b = query_emb.shape[0]
@@ -240,16 +246,35 @@ def search(
         jnp.array([index.medoid], jnp.int32),
         (jnp.arange(max(n_entries - 1, 0), dtype=jnp.int32) * stride) % n,
     ])
-    res = batched_greedy_search(
-        em.dists_batch,
-        index.adjacency,
-        query_emb,
-        jnp.broadcast_to(entries, (b, entries.shape[0])),
-        n_points=n,
-        beam_width=L,
-        pool_size=max(L, k),
-        quota=quota if quota is not None else jnp.iinfo(jnp.int32).max // 2,
-        expand_width=expand_width,
-        max_steps=4 * L,
-    )
+    entries_b = jnp.broadcast_to(entries, (b, entries.shape[0]))
+    quota = quota if quota is not None else jnp.iinfo(jnp.int32).max // 2
+    if shards > 1:
+        res = sharded_greedy_search(
+            corpus_emb,
+            index.adjacency,
+            query_emb,
+            entries_b,
+            shards=shards,
+            metric=met,
+            mesh=mesh,
+            beam_width=L,
+            pool_size=max(L, k),
+            quota=quota,
+            expand_width=expand_width,
+            max_steps=4 * L,
+        )
+    else:
+        em = distances.EmbeddingMetric(corpus_emb, met)
+        res = batched_greedy_search(
+            em.dists_batch,
+            index.adjacency,
+            query_emb,
+            entries_b,
+            n_points=n,
+            beam_width=L,
+            pool_size=max(L, k),
+            quota=quota,
+            expand_width=expand_width,
+            max_steps=4 * L,
+        )
     return res.pool_ids[:, :k], res.pool_dists[:, :k], res.n_calls

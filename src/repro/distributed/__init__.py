@@ -1,1 +1,33 @@
+"""Device-parallel building blocks: sharding rules, collectives, pipelining.
+
+For the search engine, this package implements the **sharded corpus gather**
+(`repro.core.beam.sharded_greedy_search` is the entry point):
+
+* **Corpus placement** (``sharding.shard_corpus`` / ``sharding.search_mesh``)
+  — the corpus is split into contiguous equal row blocks, one per device of
+  a 1-D mesh (zero-padded when the device count does not divide N; pad rows
+  have global ids >= N, which never appear in an adjacency list and so are
+  never gathered or scored). Global row i lives on shard ``i // n_local``.
+* **The wave-fanout collective** (``collectives.wave_gather_score``) — each
+  plan/commit wave of the batched beam engine is a replicated (B, K) block
+  of global candidate ids; every device scores the lanes whose rows it owns
+  with the fused local gather→score kernel, emitting the psum identity 0.0
+  on foreign lanes, and one ``psum`` over the shard axis reconstructs the
+  full wave bit-exactly (each id has exactly one owner and x + 0.0 == x).
+  The per-query scored bitmap is sharded the same way: lookups OR-reduce
+  the owning shard's answer (``collectives.bitmap_lookup``), scatters land
+  only on the owner (``collectives.bitmap_scatter``).
+* **The replicated-pool invariant** — pools, call counters and step
+  counters stay replicated: every device runs the identical plan, quota
+  mask and merge on identical replicated inputs, so the sharded engine is
+  bit-exact vs the single-device engine (pool ids/dists, ``n_calls``, and
+  the all-gathered scored bitmap), and the only cross-device traffic per
+  step is the (B, K) wave psum + the (B, K) bitmap-lookup reduce. For
+  merges of *independent per-shard* candidate sets (the scatter-gather path
+  in ``repro.core.distributed``), ``collectives.gather_topk_merge`` cuts
+  each shard to its top-k before the all-gather.
+
+Also here: the model-parallel sharding rules (``sharding``), the ring
+collective-matmuls (``collectives``), and GPipe pipelining (``pipeline``).
+"""
 from repro.distributed import collectives, pipeline, sharding  # noqa: F401

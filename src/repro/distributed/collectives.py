@@ -1,9 +1,12 @@
-"""Overlapped collective-matmul primitives (compute/comm overlap).
+"""Collective primitives: overlapped matmuls and the sharded-search wave ops.
 
-Ring algorithms via ``ppermute`` that interleave one chunk of matmul with one
-chunk of neighbor exchange per step — the "collective matmul" transformation
-(Wang et al., ASPLOS'23) that XLA applies automatically in favorable cases
-and that we provide explicitly for the TP layers:
+Two families, both written against a named ``shard_map`` axis and verified on
+an 8-device host mesh in tests:
+
+**Ring collective-matmuls** — ``ppermute`` algorithms that interleave one
+chunk of matmul with one chunk of neighbor exchange per step (the "collective
+matmul" transformation, Wang et al. ASPLOS'23), provided explicitly for the
+TP layers:
 
 * ``allgather_matmul``:  computes  all_gather(x, axis) @ w  without ever
   materializing the gathered x: each ring step multiplies the resident chunk
@@ -11,8 +14,23 @@ and that we provide explicitly for the TP layers:
 * ``matmul_reducescatter``: computes reduce_scatter(x @ w) chunk-by-chunk,
   sending partial sums around the ring.
 
-Used inside shard_map with a named axis; verified numerically against the
-dense reference on an 8-device host mesh in tests.
+**Sharded-search wave collectives** — the device-parallel form of the batched
+beam engine's plan/commit step (``repro.core.beam``). Each device owns a
+contiguous corpus block of ``n_local`` rows (global rows
+``[idx * n_local, (idx + 1) * n_local)``) and the matching column slice of
+every query's scored bitmap; pools stay replicated:
+
+* ``wave_gather_score``: each shard scores the wave lanes it owns with the
+  fused local gather→score kernel (foreign/padding lanes emit the psum
+  identity 0.0) and a ``psum`` over the shard axis reconstructs the
+  replicated (B, K) wave *bit-exactly* — each global id has exactly one
+  owner and x + 0.0 == x.
+* ``bitmap_lookup`` / ``bitmap_scatter``: membership tests OR-reduce the
+  owning shard's answer across the axis; scatters land only on the owning
+  shard's local columns.
+* ``gather_topk_merge``: the scatter-gather merge — per-shard top-k cut
+  (``ops.local_topk``) before an ``all_gather``, so merge traffic is O(k)
+  per query instead of O(n_local).
 """
 from __future__ import annotations
 
@@ -20,9 +38,88 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.kernels import ops
 from repro.launch.mesh import axis_size
 
 Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# sharded-search wave collectives
+# --------------------------------------------------------------------------
+def shard_offset(axis_name: str, n_local: int) -> Array:
+    """First global corpus row owned by this device (contiguous placement)."""
+    return lax.axis_index(axis_name) * n_local
+
+
+def wave_gather_score(corpus_local: Array, queries: Array, ids: Array, *,
+                      axis_name: str, metric: str = "sqeuclidean",
+                      use_pallas: bool = False,
+                      interpret: bool = False) -> Array:
+    """Device-parallel fused gather→score of one wave of global ids.
+
+    ``corpus_local`` (n_local, dim) is this device's corpus block; ``ids``
+    (B, K) is the replicated wave. Returns the replicated (B, K) distances,
+    bit-exact vs the unsharded ``ops.gather_score`` (ids < 0 -> +inf).
+    """
+    part = ops.gather_score_local(
+        corpus_local, queries, ids,
+        shard_offset(axis_name, corpus_local.shape[0]),
+        metric=metric, use_pallas=use_pallas, interpret=interpret)
+    d = lax.psum(part, axis_name)
+    return jnp.where(ids >= 0, d, jnp.inf)
+
+
+def bitmap_lookup(scored_local: Array, ids: Array, *,
+                  axis_name: str) -> Array:
+    """Replicated membership test against the shard-column bitmap.
+
+    ``scored_local`` (B, n_local) holds this device's column slice of the
+    (B, N) scored bitmap; ``ids`` (B, K) are replicated global ids. Each
+    shard answers for the lanes it owns and an OR (psum > 0) replicates the
+    result. Lanes with id < 0 return False.
+    """
+    n_local = scored_local.shape[1]
+    loc = ids - shard_offset(axis_name, n_local)
+    owned = (ids >= 0) & (loc >= 0) & (loc < n_local)
+    hit = jnp.take_along_axis(
+        scored_local, jnp.clip(loc, 0, n_local - 1), axis=1) & owned
+    return lax.psum(hit.astype(jnp.int32), axis_name) > 0
+
+
+def bitmap_scatter(scored_local: Array, ids: Array, mark: Array, *,
+                   axis_name: str) -> Array:
+    """Set bitmap bits for the marked lanes on their owning shard (only).
+
+    The scatter is local — no collective: each device updates the columns it
+    owns and ignores foreign lanes, which keeps the (B, N) bitmap exactly
+    partitioned across the axis (no bit is ever duplicated or dropped).
+    """
+    n_local = scored_local.shape[1]
+    loc = ids - shard_offset(axis_name, n_local)
+    owned = mark & (loc >= 0) & (loc < n_local)
+    rows = jnp.arange(ids.shape[0])[:, None]
+    # scatter-OR (max): foreign/padding lanes all alias column 0, so a
+    # plain set() would race — mirrors repro.core.beam.init_state.
+    return scored_local.at[rows, jnp.clip(loc, 0, n_local - 1)].max(owned)
+
+
+def gather_topk_merge(ids_local: Array, dists_local: Array, k: int, *,
+                      axis_name: str) -> tuple[Array, Array]:
+    """Per-shard top-k cut, then all-gather + merge into a global top-k.
+
+    ``ids_local`` / ``dists_local`` (B, P) are each shard's candidates with
+    *global* ids (+inf-padded). Each shard keeps only its k best before the
+    collective, so the gather moves (S, B, k) instead of (S, B, P). Ties
+    across shards resolve to the lower shard index (the all-gather is
+    axis-ordered and the final cut is a stable top-k).
+    """
+    lids, ld = ops.local_topk(ids_local, dists_local, min(k, ids_local.shape[1]))
+    all_ids = lax.all_gather(lids, axis_name)  # (S, B, k)
+    all_d = lax.all_gather(ld, axis_name)
+    all_ids = jnp.moveaxis(all_ids, 0, 1).reshape(ids_local.shape[0], -1)
+    all_d = jnp.moveaxis(all_d, 0, 1).reshape(ids_local.shape[0], -1)
+    return ops.local_topk(all_ids, all_d, k)
 
 
 def allgather_matmul(x: Array, w: Array, axis_name: str) -> Array:

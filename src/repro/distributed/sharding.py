@@ -10,16 +10,57 @@ Axis roles (names must exist in the mesh):
 Rules are name+shape driven so the same engine covers dense LMs, MLA, MoE
 (EP when n_experts divides tp, intra-expert TP otherwise), GNN (replicated
 weights, node/edge-sharded data) and recsys (row-sharded tables).
+
+Also home to the **search-corpus placement** used by the sharded beam engine
+(``repro.core.beam.sharded_greedy_search``): ``shard_corpus`` splits the
+corpus into contiguous equal blocks (zero-padded when the row count does not
+divide), ``search_mesh`` builds the 1-D device mesh the engine's
+``shard_map`` program runs over.
 """
 from __future__ import annotations
 
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 Pytree = Any
+
+SEARCH_AXIS = "shard"  # default mesh axis name for the sharded beam engine
+
+
+def shard_corpus(corpus: jax.Array, n_shards: int) -> tuple[jax.Array, int]:
+    """Contiguous-block corpus placement for the sharded search engine.
+
+    (N, dim) -> ((S, n_local, dim), n_local) with zero-row padding when
+    ``n_shards`` does not divide N. Global row i lives on shard
+    ``i // n_local`` at local row ``i % n_local``; pad rows sit at global
+    ids >= N, which never appear in an adjacency list, so they are never
+    gathered, scored, or marked in the bitmap.
+    """
+    n, dim = corpus.shape
+    n_local = -(-n // n_shards)
+    pad = n_shards * n_local - n
+    if pad:
+        corpus = jnp.concatenate(
+            [corpus, jnp.zeros((pad, dim), corpus.dtype)])
+    return corpus.reshape(n_shards, n_local, dim), n_local
+
+
+def search_mesh(n_shards: int, axis_name: str = SEARCH_AXIS) -> Mesh:
+    """1-D mesh over the first ``n_shards`` local devices."""
+    from repro.launch.mesh import axis_types_kw
+
+    devices = jax.devices()
+    if len(devices) < n_shards:
+        raise ValueError(
+            f"shards={n_shards} needs {n_shards} devices, have {len(devices)}"
+            " (force host devices with"
+            " XLA_FLAGS=--xla_force_host_platform_device_count=K)")
+    return jax.make_mesh((n_shards,), (axis_name,),
+                         devices=devices[:n_shards], **axis_types_kw(1))
 
 # ZeRO stage for LM params: 3 = params FSDP+TP sharded (default);
 # 1 = params TP-only (replicated over data; optimizer state stays FSDP

@@ -96,6 +96,69 @@ def gather_l2(corpus: Array, queries: Array, ids: Array, *,
                         interpret=interpret)
 
 
+def _gather_score_local_kernel(off_ref, ids_ref, q_ref, row_ref, o_ref, *,
+                               metric: str, n_local: int):
+    b = pl.program_id(0)
+    k = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)
+    row = row_ref[0].astype(jnp.float32)
+    if metric in ("l2", "sqeuclidean"):
+        diff = q - row
+        d = jnp.sum(diff * diff)
+        if metric == "l2":
+            d = jnp.sqrt(d)
+    elif metric == "ip":
+        d = -jnp.sum(q * row)
+    else:  # cosine
+        qn = jax.lax.rsqrt(jnp.sum(q * q) + 1e-12)
+        rn = jax.lax.rsqrt(jnp.sum(row * row) + 1e-12)
+        d = 1.0 - jnp.sum(q * row) * qn * rn
+    loc = ids_ref[b, k] - off_ref[0]
+    owned = (ids_ref[b, k] >= 0) & (loc >= 0) & (loc < n_local)
+    # psum identity on foreign/padding lanes — see ref.gather_score_local_ref
+    o_ref[0, 0] = jnp.where(owned, d, 0.0)
+
+
+def gather_score_local(corpus_local: Array, queries: Array, ids: Array,
+                       offset: Array, *, metric: str = "sqeuclidean",
+                       interpret: bool = False) -> Array:
+    """Shard-local fused gather→score over *global* ids (see ref oracle).
+
+    ``corpus_local`` (n_local, dim) is this shard's contiguous row block
+    starting at global row ``offset`` (a traced scalar — inside ``shard_map``
+    it is ``axis_index * n_local``). Owned lanes stream their local row
+    HBM→VMEM by remapped id exactly like :func:`gather_score`; foreign and
+    padding lanes emit the psum identity 0.0.
+    """
+    if metric not in VALID_METRICS:
+        raise ValueError(f"metric must be one of {VALID_METRICS}, got {metric!r}")
+    b, dim = queries.shape
+    k = ids.shape[1]
+    n_local = corpus_local.shape[0]
+    offset = jnp.asarray(offset, jnp.int32).reshape(1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # offset, then the candidate ids
+        grid=(b, k),
+        in_specs=[
+            pl.BlockSpec((1, dim), lambda bi, ki, off, ids: (bi, 0)),
+            # the gather: local block row chosen by the remapped global id
+            pl.BlockSpec(
+                (1, dim),
+                lambda bi, ki, off, ids: (
+                    jnp.clip(ids[bi, ki] - off[0], 0, n_local - 1), 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda bi, ki, off, ids: (bi, ki)),
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_score_local_kernel, metric=metric,
+                          n_local=n_local),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=interpret,
+    )(offset, ids.astype(jnp.int32), queries, corpus_local)
+
+
 # --------------------------------------------------------------------------
 # bitonic beam merge
 # --------------------------------------------------------------------------

@@ -7,7 +7,6 @@ mathematically identical. Kernel tests run the Pallas bodies with
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +48,35 @@ def gather_score(corpus, queries, ids, *, metric="sqeuclidean",
 def gather_l2(corpus, queries, ids, *, use_pallas=False, interpret=False):
     return gather_score(corpus, queries, ids, metric="sqeuclidean",
                         use_pallas=use_pallas, interpret=interpret)
+
+
+def gather_score_local(corpus_local, queries, ids, offset, *,
+                       metric="sqeuclidean", use_pallas=False,
+                       interpret=False):
+    """Shard-local gather→score over global ids: (B, K) -> (B, K) partials.
+
+    Owned lanes (offset <= id < offset + n_local) carry the exact distance;
+    foreign and padding lanes carry the psum identity 0.0, so a
+    ``lax.psum`` over the shard axis reconstructs the unsharded
+    :func:`gather_score` wave bit-exactly (each id has one owner and
+    x + 0.0 == x). The sharded engine masks ids < 0 to +inf after the psum.
+    """
+    if use_pallas:
+        return _lt.gather_score_local(corpus_local, queries, ids, offset,
+                                      metric=metric, interpret=interpret)
+    return ref.gather_score_local_ref(corpus_local, queries, ids, offset,
+                                      metric=metric)
+
+
+def local_topk(ids, dists, k):
+    """Per-row best-``k`` by distance, ties to the lowest index (stable).
+
+    The per-shard candidate cut applied *before* an all-gather merge: each
+    shard sends only its k best (id, dist) pairs instead of its whole pool,
+    shrinking the merge collective from O(n_local) to O(k) per query.
+    """
+    neg, order = jax.lax.top_k(-dists.astype(jnp.float32), k)
+    return jnp.take_along_axis(ids, order, axis=1), -neg
 
 
 def beam_merge_topk(beam_ids, beam_dists, cand_ids, cand_dists, *,

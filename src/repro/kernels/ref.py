@@ -74,6 +74,27 @@ def l2_gather_dists_ref(corpus: Array, queries: Array, ids: Array) -> Array:
     return gather_score_ref(corpus, queries, ids, metric="sqeuclidean")
 
 
+def gather_score_local_ref(corpus_local: Array, queries: Array, ids: Array,
+                           offset: Array | int,
+                           metric: str = "sqeuclidean") -> Array:
+    """Shard-local gather→score with global-id remapping (psum identity form).
+
+    ``corpus_local`` (n_local, dim) holds global rows [offset, offset+n_local);
+    ``ids`` (B, K) are *global* ids. Lanes owned by this shard are scored with
+    the exact per-lane math of :func:`gather_score_ref`; every other lane
+    (foreign shard or padding id < 0) contributes ``0.0`` so that summing the
+    per-shard partials over the shard axis reconstructs the unsharded wave
+    bit-exactly (x + 0.0 == x; each id has exactly one owner). The caller
+    masks ids < 0 back to +inf after the psum.
+    """
+    n_local = corpus_local.shape[0]
+    loc = ids - jnp.asarray(offset, ids.dtype)
+    owned = (ids >= 0) & (loc >= 0) & (loc < n_local)
+    d = gather_score_ref(corpus_local, queries,
+                         jnp.where(owned, loc, -1), metric=metric)
+    return jnp.where(owned, d, 0.0)
+
+
 def beam_merge_topk_ref(beam_ids: Array, beam_dists: Array, cand_ids: Array,
                         cand_dists: Array) -> tuple[Array, Array]:
     """Merge (B, L) beam with (B, K) candidates, return best (B, L) by dist."""

@@ -16,7 +16,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.sharding import constrain_axis, constrain_batch, constrain_seq
+from repro.distributed.sharding import constrain_batch, constrain_seq
 from repro.models import layers
 from repro.models.moe import MoEConfig, init_moe, moe_ffn
 

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import beam, distances, vamana
+from repro.distributed import sharding
 from repro.models import transformer as T
 
 Array = jax.Array
@@ -87,17 +88,28 @@ def _active_any_j(state, quota, *, beam_width, max_steps):
 
 
 class BiMetricEngine:
-    """corpus_tokens: (N, S) int32 document tokens."""
+    """corpus_tokens: (N, S) int32 document tokens.
+
+    ``shards > 1`` runs the device-side cheap-metric searches (stage 1 and
+    the rerank baseline's stage 1) device-parallel over a corpus mesh —
+    the cheap corpus embeddings and the scored bitmap are split across
+    ``shards`` devices, pools stay replicated, results are bit-exact
+    (``repro.core.beam.sharded_greedy_search``). The stage-2 loop stays
+    host-driven and replicated: its metric is the expensive tower itself,
+    so the device side of a stage-2 wave is plan/commit bookkeeping, not a
+    corpus gather.
+    """
 
     def __init__(self, cheap: EmbedTower, expensive: EmbedTower,
                  corpus_tokens: np.ndarray,
                  index_cfg: vamana.VamanaConfig | None = None,
-                 tower_batch: int = 64):
+                 tower_batch: int = 64, shards: int = 1):
         self.cheap = cheap
         self.expensive = expensive
         self.corpus_tokens = corpus_tokens
         self.n = corpus_tokens.shape[0]
         self.tower_batch = tower_batch
+        self.shards = shards
         # --- index build: cheap metric ONLY --------------------------------
         self.emb_d = jnp.asarray(cheap.embed(corpus_tokens))
         self.index = vamana.build(self.emb_d,
@@ -106,6 +118,8 @@ class BiMetricEngine:
                                       rev_candidates=16))
         self._em_d = distances.EmbeddingMetric(self.emb_d)
         self._adjacency = self.index.adjacency.astype(jnp.int32)
+        # one mesh for the engine lifetime (stage-1 shard_map programs)
+        self._mesh = (sharding.search_mesh(shards) if shards > 1 else None)
         # lazy expensive-tower document embeddings (engine-lifetime cache)
         self._emb_D: np.ndarray | None = None
         self._emb_D_valid = np.zeros((self.n,), bool)
@@ -122,10 +136,19 @@ class BiMetricEngine:
 
     def _stage1(self, q_d: Array, *, width: int, pool: int,
                 max_steps: int) -> beam.SearchResult:
-        """Batched cheap-metric greedy search from the medoid (stage 1)."""
+        """Batched cheap-metric greedy search from the medoid (stage 1).
+
+        With ``shards > 1`` the same loop runs device-parallel over the
+        engine's corpus mesh — bit-exact vs the single-device path."""
         b = q_d.shape[0]
         entries = jnp.broadcast_to(
             jnp.asarray(self.index.medoid, jnp.int32).reshape(1, 1), (b, 1))
+        if self.shards > 1:
+            return beam.sharded_greedy_search(
+                self.emb_d, self._adjacency, q_d, entries,
+                shards=self.shards, metric=self._em_d.metric,
+                mesh=self._mesh, beam_width=width, pool_size=pool,
+                max_steps=max_steps)
         return beam.batched_greedy_search(
             self._em_d.dists_batch, self._adjacency, q_d, entries,
             n_points=self.n, beam_width=width, pool_size=pool,

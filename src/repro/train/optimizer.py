@@ -12,7 +12,7 @@ the 671B config fit 16 GB/chip HBM at 512 chips (see EXPERIMENTS.md §Dry-run).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -1,10 +1,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import distances
-from repro.core.beam import NO_QUOTA, greedy_search
+from repro.core.beam import greedy_search
 
 
 def _line_graph(n):

@@ -5,7 +5,19 @@ the batched engine is bit-exact — same pool ids, distances, scored bitmap
 and ``n_calls`` — against (a) the frozen pre-refactor implementation
 (``repro.core._legacy_beam``) and (b) the single-query wrapper, on random
 graphs, across quotas.
+
+The sharded tests extend this to a **four-way** parity: legacy per-query /
+legacy vmap-baseline / batched / device-parallel sharded engine
+(``sharded_greedy_search`` over a forced 8-device host mesh, run in a
+subprocess so the main test process keeps its single-device view), at
+shards ∈ {1, 2, 4} × quota/unbounded, plus an uneven-shard padding edge
+case (N not divisible by the device count).
 """
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -13,6 +25,8 @@ import pytest
 
 from repro.core import _legacy_beam, distances
 from repro.core.beam import (NO_QUOTA, batched_greedy_search, greedy_search)
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 
 def _random_graph(seed, n=128, r=6, dim=8, b=5):
@@ -146,3 +160,134 @@ def test_expand_width_respects_quota_and_order():
             # E > 1) every call scored exactly one distinct vertex
             assert np.asarray(res.scored[b])[valid].all()
             assert int(np.asarray(res.scored[b]).sum()) == int(calls[b])
+
+
+# ----------------------------------------------------------- sharded parity
+def _run_sharded(body: str) -> str:
+    """Run a snippet on 8 forced host devices in a clean subprocess."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from repro.core import _legacy_beam, distances
+        from repro.core.beam import (NO_QUOTA, batched_greedy_search,
+                                     sharded_greedy_search)
+
+        def random_graph(seed, n, r=6, dim=8, b=5):
+            rng = np.random.default_rng(seed)
+            adj = rng.integers(0, n, (n, r)).astype(np.int32)
+            adj[rng.random((n, r)) < 0.2] = -1
+            emb = rng.normal(size=(n, dim)).astype(np.float32)
+            qs = rng.normal(size=(b, dim)).astype(np.float32)
+            return jnp.asarray(adj), jnp.asarray(emb), jnp.asarray(qs)
+
+        def assert_same(a, b, ctx):
+            for name, x, y in zip(a._fields, a, b):
+                assert np.array_equal(np.asarray(x), np.asarray(y)), \\
+                    (ctx, name)
+    """) + textwrap.dedent(body)
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=ROOT, timeout=900)
+    assert res.returncode == 0, res.stderr[-3000:]
+    return res.stdout
+
+
+@pytest.mark.slow
+def test_sharded_four_way_parity():
+    """legacy per-query / legacy vmap / batched / sharded at {1, 2, 4} are
+    bit-exact on pool ids/dists, n_calls, n_steps and the scored bitmap."""
+    out = _run_sharded("""
+        adj, emb, qs = random_graph(seed=3, n=128)
+        em = distances.EmbeddingMetric(emb)
+        entries = jnp.broadcast_to(jnp.array([0, 64, 100], jnp.int32), (5, 3))
+
+        for QUOTA in (NO_QUOTA, 13):
+            def legacy_one(q, quota=QUOTA):
+                return _legacy_beam.greedy_search(
+                    lambda ids: em.dists(q, ids), adj, entries[0],
+                    n_points=128, beam_width=8, pool_size=16, quota=quota,
+                    max_steps=100)
+            batched = jax.jit(lambda q: batched_greedy_search(
+                em.dists_batch, adj, q, entries, n_points=128, beam_width=8,
+                pool_size=16, quota=QUOTA, max_steps=100))(qs)
+            vmapped = jax.jit(jax.vmap(legacy_one))(qs)
+            assert_same(batched, type(batched)(*vmapped), ("vmap", QUOTA))
+            for b in range(5):
+                assert_same(
+                    type(batched)(*(np.asarray(f)[b] for f in batched)),
+                    jax.jit(legacy_one)(qs[b]), ("legacy", QUOTA, b))
+            for shards in (1, 2, 4):
+                res = sharded_greedy_search(
+                    emb, adj, qs, entries, shards=shards, metric="l2",
+                    beam_width=8, pool_size=16, quota=QUOTA, max_steps=100)
+                assert_same(batched, res, ("sharded", QUOTA, shards))
+        print("FOUR_WAY_OK")
+    """)
+    assert "FOUR_WAY_OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_uneven_and_quota_matrix():
+    """shards ∈ {1, 2, 4} × quota/unbounded on corpora whose size does NOT
+    divide the shard count (zero-row padding must never be scored)."""
+    out = _run_sharded("""
+        for n in (130, 97):
+            adj, emb, qs = random_graph(seed=n, n=n)
+            em = distances.EmbeddingMetric(emb)
+            entries = jnp.broadcast_to(
+                jnp.array([0, n // 2, n - 1], jnp.int32), (5, 3))
+            for quota in (NO_QUOTA, 19):
+                base = batched_greedy_search(
+                    em.dists_batch, adj, qs, entries, n_points=n,
+                    beam_width=8, pool_size=16, quota=quota, max_steps=100)
+                assert base.scored.shape == (5, n)
+                for shards in (1, 2, 4):
+                    res = sharded_greedy_search(
+                        emb, adj, qs, entries, shards=shards, metric="l2",
+                        beam_width=8, pool_size=16, quota=quota,
+                        max_steps=100)
+                    assert res.scored.shape == (5, n)
+                    assert_same(base, res, (n, quota, shards))
+        print("UNEVEN_OK")
+    """)
+    assert "UNEVEN_OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_plumb_through_vamana_and_bimetric():
+    """The shards= knob on vamana.search / bimetric_search is bit-exact vs
+    the default single-device path (expand_width > 1 included)."""
+    out = _run_sharded("""
+        from repro.core import bimetric, vamana
+        from repro.data.synthetic import make_dataset
+        data = make_dataset(n=160, n_queries=6, dim_D=16, dim_d=8,
+                            noise=0.1, seed=5)
+        cfg = vamana.VamanaConfig(max_degree=8, l_build=12, pool_size=24,
+                                  rev_candidates=8, build_batch=64)
+        idx = vamana.build(data.corpus_d, cfg)
+        for e in (1, 2):
+            ids0, dd0, c0 = vamana.search(
+                idx, data.corpus_d, data.queries_d, k=5, beam_width=12,
+                expand_width=e)
+            ids4, dd4, c4 = vamana.search(
+                idx, data.corpus_d, data.queries_d, k=5, beam_width=12,
+                expand_width=e, shards=4)
+            assert np.array_equal(np.asarray(ids0), np.asarray(ids4))
+            assert np.array_equal(np.asarray(dd0), np.asarray(dd4))
+            assert np.array_equal(np.asarray(c0), np.asarray(c4))
+        em_d = distances.EmbeddingMetric(data.corpus_d)
+        em_D = distances.EmbeddingMetric(data.corpus_D)
+        base = bimetric.bimetric_search(
+            lambda q, i: em_d.dists(q, i), lambda q, i: em_D.dists(q, i),
+            idx, data.queries_d, data.queries_D, n_points=160, quota=48, k=5)
+        sh = bimetric.bimetric_search(
+            None, None, idx, data.queries_d, data.queries_D, n_points=160,
+            quota=48, k=5, shards=4,
+            corpora=(data.corpus_d, data.corpus_D))
+        for a, b in zip(base, sh):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        print("PLUMB_OK")
+    """)
+    assert "PLUMB_OK" in out

@@ -1,7 +1,4 @@
 """Behavioral tests of the paper's core claims on controlled data."""
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import bimetric, distances, metrics, vamana

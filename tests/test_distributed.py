@@ -131,6 +131,43 @@ def test_sharded_bimetric_search_matches_quality():
 
 
 @pytest.mark.slow
+def test_serve_engine_sharded_stage1_parity():
+    """BiMetricEngine(shards=4) answers bit-identically to the single-device
+    engine — the stage-1 corpus mesh must not perturb results or budgets."""
+    out = _run("""
+        from repro.configs import qwen3_0_6b
+        from repro.models import transformer as T
+        from repro.serve import BiMetricEngine, EmbedTower
+        key = jax.random.PRNGKey(0)
+        cheap_cfg = qwen3_0_6b.smoke()
+        exp_cfg = T.TransformerConfig(
+            name="exp-smoke", n_layers=2, d_model=64, n_heads=4,
+            n_kv_heads=4, head_dim=16, d_ff=128, vocab=cheap_cfg.vocab,
+            embed_dim=32)
+        cheap = EmbedTower(T.init_params(key, cheap_cfg), cheap_cfg)
+        expensive = EmbedTower(
+            T.init_params(jax.random.fold_in(key, 1), exp_cfg), exp_cfg)
+        corpus = np.random.default_rng(0).integers(
+            0, cheap_cfg.vocab, (96, 10), dtype=np.int32)
+        qs = corpus[[3, 40, 77]].copy()
+        eng1 = BiMetricEngine(cheap, expensive, corpus)
+        ids1, dd1, st1 = eng1.query_batch(qs, quota=15, k=5)
+        eng4 = BiMetricEngine(cheap, expensive, corpus, shards=4)
+        ids4, dd4, st4 = eng4.query_batch(qs, quota=15, k=5)
+        assert np.array_equal(ids1, ids4)
+        np.testing.assert_array_equal(dd1, dd4)
+        assert [s.d_calls for s in st1] == [s.d_calls for s in st4]
+        assert [s.D_calls for s in st1] == [s.D_calls for s in st4]
+        r1, rd1, _ = eng1.rerank_query_batch(qs, quota=20, k=5)
+        r4, rd4, _ = eng4.rerank_query_batch(qs, quota=20, k=5)
+        assert np.array_equal(r1, r4)
+        np.testing.assert_array_equal(rd1, rd4)
+        print("SERVE_SHARDED_OK")
+    """)
+    assert "SERVE_SHARDED_OK" in out
+
+
+@pytest.mark.slow
 def test_elastic_checkpoint_reshard(tmp_path):
     """Save on an 8-device mesh, restore onto a 4-device mesh."""
     out = _run(f"""

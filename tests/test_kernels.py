@@ -73,6 +73,40 @@ def test_gather_l2_sweep(n, dim, b, k):
 
 
 @pytest.mark.parametrize("metric", ["l2", "sqeuclidean", "ip", "cosine"])
+@pytest.mark.parametrize("offset,n_local", [(0, 40), (40, 40), (80, 40),
+                                            (100, 33)])
+def test_gather_score_local_shard(metric, offset, n_local):
+    """Shard-local gather→score (Pallas interpret vs ref): owned lanes carry
+    the exact unsharded distance, foreign/padding lanes the psum identity 0,
+    and summing all shards' partials reconstructs the full wave."""
+    key = jax.random.PRNGKey(29)
+    n = 120
+    corpus = jax.random.normal(key, (n, 24))
+    qs = jax.random.normal(jax.random.fold_in(key, 1), (3, 24))
+    ids = jax.random.randint(jax.random.fold_in(key, 2), (3, 20), -1, n)
+    local = corpus[offset:offset + n_local]
+    d_ref = ref.gather_score_local_ref(local, qs, ids, offset, metric=metric)
+    d_pl = ops.gather_score_local(local, qs, ids, jnp.int32(offset),
+                                  metric=metric, use_pallas=True,
+                                  interpret=True)
+    np.testing.assert_allclose(np.asarray(d_pl), np.asarray(d_ref),
+                               rtol=1e-4, atol=1e-4)
+    loc = np.asarray(ids) - offset
+    owned = (np.asarray(ids) >= 0) & (loc >= 0) & (loc < local.shape[0])
+    assert (np.asarray(d_ref)[~owned] == 0.0).all()
+    full = np.asarray(ref.gather_score_ref(corpus, qs, ids, metric=metric))
+    np.testing.assert_array_equal(np.asarray(d_ref)[owned], full[owned])
+    # psum reconstruction: partials over a full 3-shard partition sum to the
+    # unsharded wave exactly on owned lanes (0 elsewhere)
+    parts = sum(
+        np.asarray(ref.gather_score_local_ref(corpus[s:s + 40], qs, ids, s,
+                                              metric=metric))
+        for s in (0, 40, 80))
+    valid = np.asarray(ids) >= 0
+    np.testing.assert_array_equal(parts[valid], full[valid])
+
+
+@pytest.mark.parametrize("metric", ["l2", "sqeuclidean", "ip", "cosine"])
 def test_gather_score_metrics(metric):
     """Metric-parameterized fused gather→score vs oracle and core distances."""
     from repro.core import distances
