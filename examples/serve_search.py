@@ -1,6 +1,9 @@
-"""Serving example: the BiMetricEngine with model-backed metrics and a
-request batcher — the paper's "small local model + expensive API model"
-deployment, including exact budget accounting per request.
+"""Serving example: the async BiMetricEngine with model-backed metrics —
+the paper's "small local model + expensive API model" deployment, including
+exact budget accounting per request. Requests go through the engine's own
+admission pipeline (``submit`` → padded waves → double-buffered tower
+drain), so independent requests overlap the expensive-tower forward passes
+with the device plan/commit of the next wave.
 
     PYTHONPATH=src python examples/serve_search.py
 """
@@ -13,7 +16,7 @@ import numpy as np
 
 from repro.configs import qwen3_0_6b
 from repro.models import transformer as T
-from repro.serve import Batcher, BiMetricEngine, EmbedTower
+from repro.serve import BiMetricEngine, EmbedTower
 
 
 def main() -> None:
@@ -29,30 +32,25 @@ def main() -> None:
 
     rng = np.random.default_rng(0)
     corpus = rng.integers(0, cheap_cfg.vocab, (256, 16), dtype=np.int32)
-    engine = BiMetricEngine(cheap, expensive, corpus)
+    engine = BiMetricEngine(cheap, expensive, corpus, max_batch=4,
+                            max_wait_ms=50.0)
     print("index built with the cheap tower only (0 expensive calls)")
 
     emb_D = expensive.embed(corpus)  # eval-only ground truth
 
-    def handler(requests):
-        for r in requests:
-            ids, dd, stats = engine.query(r.tokens, quota=r.quota)
-            r.result.put((ids, dd, stats))
-
-    batcher = Batcher(handler, max_batch=4)
     futures = []
     for _ in range(6):
         q = corpus[rng.integers(0, 256)].copy()
         q[:8] = rng.integers(0, cheap_cfg.vocab, 8)
-        futures.append((q, batcher.submit(q, quota=32)))
+        futures.append((q, engine.submit(q, quota=32)))
     for i, (q, fut) in enumerate(futures):
-        ids, dd, stats = fut.get(timeout=120)
+        ids, dd, stats = fut.result(timeout=300)
         q_emb = expensive.embed(q[None])[0]
         true10 = np.argsort(np.linalg.norm(emb_D - q_emb, axis=1))[:10]
         rec = len(set(ids.tolist()) & set(true10.tolist())) / 10
         print(f"req{i}: recall@10={rec:.2f} D_calls={stats.D_calls} "
               f"d_calls={stats.d_calls}")
-    batcher.close()
+    engine.close()
 
 
 if __name__ == "__main__":

@@ -1,63 +1,149 @@
 #!/usr/bin/env python
-"""CI perf gate: compare a fresh BENCH artifact against the committed baseline.
+"""CI perf gate: compare fresh BENCH artifacts against committed baselines.
 
-Fails (exit 1) when the gated metric regresses more than ``--tolerance``
-(default 20%) below the baseline. The headline metric is
-``result.speedup_at_32`` in ``BENCH_search_perf.json`` — the batched
-engine's speedup over the retired per-query serving path at batch 32, the
-number PR 1 bought and every later PR must keep.
+Two modes:
 
-Usage (what ``scripts/ci.sh --bench`` runs):
+* **manifest** (what ``scripts/ci.sh --bench`` runs) — gate every entry of
+  ``benchmarks/gates.json``: for each gate, read the committed baseline
+  artifact from ``--baseline-dir`` (default: repo root) and the freshly
+  measured one from ``--new-dir``, and fail (exit 1) when any gated metric
+  regresses beyond its tolerance. ``--list-slugs`` prints the
+  comma-joined ``benchmarks/run.py --only`` slugs the manifest needs, so
+  the CI script measures exactly the gated artifacts.
 
-    python benchmarks/run.py --only search_perf   # BENCH_OUT_DIR=<tmp>
-    python scripts/check_bench.py \
-        --baseline BENCH_search_perf.json \
-        --new <tmp>/BENCH_search_perf.json
+      python scripts/check_bench.py --manifest benchmarks/gates.json \\
+          --baseline-dir . --new-dir <tmp>
+
+* **single-key** (legacy) — one artifact, one dotted key:
+
+      python scripts/check_bench.py --baseline BENCH_search_perf.json \\
+          --new <tmp>/BENCH_search_perf.json [--key K] [--tolerance T]
+
+Dotted keys index dicts by name and lists by integer position, e.g.
+``result.('bimetric', 256).0`` is recall@10 inside the fig-1 payload.
+A gate's ``direction`` is "higher" (default: regression = new below
+baseline*(1-tol)) or "lower" (regression = new above baseline*(1+tol)).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 
-def lookup(payload: dict, dotted: str) -> float:
+def lookup(payload, dotted: str) -> float:
     node = payload
     for part in dotted.split("."):
+        if isinstance(node, list):
+            try:
+                node = node[int(part)]
+                continue
+            except (ValueError, IndexError):
+                raise KeyError(
+                    f"key {dotted!r}: {part!r} is not a valid list index")
         if not isinstance(node, dict) or part not in node:
             raise KeyError(f"key {dotted!r} not found (missing {part!r})")
         node = node[part]
     return float(node)
 
 
+def check_one(base: float, new: float, *, key: str, direction: str,
+              tolerance: float, artifact: str = "") -> bool:
+    """Print the verdict line; returns True when the gate passes."""
+    if direction == "higher":
+        floor = base * (1.0 - tolerance)
+        ok = new >= floor
+        bound = f"floor={floor:.4f}"
+        regress = 1.0 - new / base if base else 0.0
+    elif direction == "lower":
+        ceil = base * (1.0 + tolerance)
+        ok = new <= ceil
+        bound = f"ceil={ceil:.4f}"
+        regress = new / base - 1.0 if base else 0.0
+    else:
+        raise ValueError(f"unknown direction {direction!r}")
+    tag = f"{artifact}:{key}" if artifact else key
+    verdict = "OK" if ok else "REGRESSION"
+    print(f"bench-gate {tag}: baseline={base:.4f} new={new:.4f} "
+          f"{bound} ({tolerance:.0%} tolerance, {direction} is better) "
+          f"-> {verdict}")
+    if not ok:
+        print(f"FAIL: {tag} regressed {regress:.1%} "
+              f"(> {tolerance:.0%} allowed) — if this is a real, justified "
+              "tradeoff, re-measure and commit a new baseline artifact in "
+              "the same PR.", file=sys.stderr)
+    return ok
+
+
+def run_manifest(manifest_path: str, baseline_dir: str, new_dir: str) -> int:
+    with open(manifest_path) as f:
+        gates = json.load(f)["gates"]
+    loaded: dict[str, dict] = {}
+
+    def artifact_json(root: str, name: str) -> dict:
+        path = os.path.join(root, name)
+        if path not in loaded:
+            with open(path) as f:
+                loaded[path] = json.load(f)
+        return loaded[path]
+
+    failures = 0
+    for gate in gates:
+        art = gate["artifact"]
+        base = lookup(artifact_json(baseline_dir, art), gate["key"])
+        new = lookup(artifact_json(new_dir, art), gate["key"])
+        if not check_one(base, new, key=gate["key"],
+                         direction=gate.get("direction", "higher"),
+                         tolerance=float(gate.get("tolerance", 0.2)),
+                         artifact=art):
+            failures += 1
+    print(f"bench-gate: {len(gates) - failures}/{len(gates)} gates passed")
+    return 1 if failures else 0
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--baseline", required=True,
-                    help="committed BENCH_*.json artifact")
-    ap.add_argument("--new", required=True, dest="fresh",
-                    help="freshly measured BENCH_*.json artifact")
+    ap.add_argument("--manifest", default=None,
+                    help="gate manifest (benchmarks/gates.json); enables "
+                         "manifest mode")
+    ap.add_argument("--baseline-dir", default=".",
+                    help="directory of committed baseline artifacts")
+    ap.add_argument("--new-dir", default=None,
+                    help="directory of freshly measured artifacts")
+    ap.add_argument("--list-slugs", action="store_true",
+                    help="print the comma-joined run.py --only slugs the "
+                         "manifest gates need, and exit")
+    ap.add_argument("--baseline", default=None,
+                    help="[single-key mode] committed BENCH_*.json artifact")
+    ap.add_argument("--new", default=None, dest="fresh",
+                    help="[single-key mode] freshly measured BENCH_*.json")
     ap.add_argument("--key", default="result.speedup_at_32",
-                    help="dotted path of the gated metric (higher is better)")
+                    help="[single-key mode] dotted path of the gated metric")
     ap.add_argument("--tolerance", type=float, default=0.20,
-                    help="allowed fractional regression below the baseline")
+                    help="[single-key mode] allowed fractional regression")
     args = ap.parse_args(argv)
 
+    if args.manifest:
+        if args.list_slugs:
+            with open(args.manifest) as f:
+                gates = json.load(f)["gates"]
+            slugs = list(dict.fromkeys(g["slug"] for g in gates))
+            print(",".join(slugs))
+            return 0
+        if args.new_dir is None:
+            ap.error("--manifest mode needs --new-dir")
+        return run_manifest(args.manifest, args.baseline_dir, args.new_dir)
+
+    if not (args.baseline and args.fresh):
+        ap.error("either --manifest or --baseline/--new is required")
     with open(args.baseline) as f:
         base = lookup(json.load(f), args.key)
     with open(args.fresh) as f:
         new = lookup(json.load(f), args.key)
-
-    floor = base * (1.0 - args.tolerance)
-    verdict = "OK" if new >= floor else "REGRESSION"
-    print(f"bench-gate {args.key}: baseline={base:.4f} new={new:.4f} "
-          f"floor={floor:.4f} ({args.tolerance:.0%} tolerance) -> {verdict}")
-    if new < floor:
-        print(f"FAIL: {args.key} regressed {1.0 - new / base:.1%} "
-              f"(> {args.tolerance:.0%} allowed) — if this is a real, "
-              "justified tradeoff, re-measure and commit a new baseline "
-              "artifact in the same PR.", file=sys.stderr)
-        return 1
-    return 0
+    ok = check_one(base, new, key=args.key, direction="higher",
+                   tolerance=args.tolerance)
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

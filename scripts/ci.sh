@@ -4,9 +4,11 @@
 # Run from the repo root (locally or in CI). Extra args go to pytest.
 #
 # `scripts/ci.sh --bench [check_bench args...]` instead runs the perf gate:
-# measure `benchmarks/run.py --only search_perf` into a scratch dir and
-# compare result.speedup_at_32 against the committed BENCH_search_perf.json
-# (>20% regression fails).
+# measure every artifact named by the gate manifest (benchmarks/gates.json)
+# into a scratch dir with `benchmarks/run.py --only <slugs>`, then compare
+# each gated metric against the committed baselines with
+# `scripts/check_bench.py --manifest` (regression beyond a gate's tolerance
+# fails the job).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -14,10 +16,12 @@ if [[ "${1:-}" == "--bench" ]]; then
   shift
   out="$(mktemp -d)"
   trap 'rm -rf "$out"' EXIT
+  slugs="$(python scripts/check_bench.py --manifest benchmarks/gates.json \
+    --list-slugs)"
   BENCH_OUT_DIR="$out" PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python benchmarks/run.py --only search_perf
-  python scripts/check_bench.py --baseline BENCH_search_perf.json \
-    --new "$out/BENCH_search_perf.json" "$@"
+    python benchmarks/run.py --only "$slugs"
+  python scripts/check_bench.py --manifest benchmarks/gates.json \
+    --baseline-dir . --new-dir "$out" "$@"
   exit 0
 fi
 

@@ -185,17 +185,35 @@ def init_state(
     return state, safe, keep
 
 
+def _per_query(v: int | Array, b: int) -> Array:
+    """Broadcast a scalar-or-(B,) knob to a (B,) int32 vector."""
+    return jnp.broadcast_to(jnp.asarray(v, jnp.int32), (b,))
+
+
 def active_mask(
-    state: BatchedSearchState, *, beam_width: int, quota: Array, max_steps: int
+    state: BatchedSearchState,
+    *,
+    beam_width: int | Array,
+    quota: Array,
+    max_steps: int | Array,
 ) -> Array:
-    """(B,) — which queries still have an open frontier, budget and steps."""
-    L = beam_width
-    frontier = (~state.expanded[:, :L]) & jnp.isfinite(state.pool_dists[:, :L])
-    quota = jnp.asarray(quota, jnp.int32)
+    """(B,) — which queries still have an open frontier, budget and steps.
+
+    ``beam_width`` and ``max_steps`` may be scalars or per-query (B,)
+    vectors — mixed-configuration batches (the serving engine's request
+    waves) give every query *its own* beam prefix and step cap, so a query
+    behaves bit-exactly as if it ran alone regardless of its wave-mates.
+    """
+    b, p = state.pool_ids.shape
+    L = _per_query(beam_width, b)
+    in_beam = jnp.arange(p)[None, :] < L[:, None]
+    frontier = (~state.expanded) & jnp.isfinite(state.pool_dists) & in_beam
+    quota = _per_query(quota, b)
+    steps = _per_query(max_steps, b)
     return (
         frontier.any(axis=1)
         & (state.n_calls < quota)
-        & (state.n_steps < max_steps)
+        & (state.n_steps < steps)
     )
 
 
@@ -203,9 +221,9 @@ def plan_step(
     state: BatchedSearchState,
     adjacency: Array,
     *,
-    beam_width: int,
+    beam_width: int | Array,
     quota: Array,
-    max_steps: int,
+    max_steps: int | Array,
     expand_width: int = 1,
     shard: ShardCtx | None = None,
 ) -> tuple[BatchedSearchState, Array, Array, Array]:
@@ -223,7 +241,7 @@ def plan_step(
     planned wave is replicated (and bit-exact vs the unsharded plan).
     """
     b, p = state.pool_ids.shape
-    L = beam_width
+    L = _per_query(beam_width, b)
     E = expand_width
     r = adjacency.shape[1]
     quota = jnp.broadcast_to(jnp.asarray(quota, jnp.int32), (b,))
@@ -235,7 +253,7 @@ def plan_step(
     open_ = (
         (~state.expanded)
         & jnp.isfinite(state.pool_dists)
-        & (jnp.arange(p)[None, :] < L)
+        & (jnp.arange(p)[None, :] < L[:, None])
     )
     rank = jnp.cumsum(open_.astype(jnp.int32), axis=1) - 1
     sel = open_ & (rank < E) & active[:, None]
@@ -307,11 +325,11 @@ def batched_greedy_search(
     entry_ids: Array,
     *,
     n_points: int,
-    beam_width: int,
+    beam_width: int | Array,
     pool_size: int | None = None,
     quota: int | Array = NO_QUOTA,
     expand_width: int = 1,
-    max_steps: int | None = None,
+    max_steps: int | Array | None = None,
     scored_init: Array | None = None,
     calls_init: Array | int = 0,
     use_fused_merge: bool = False,
@@ -330,14 +348,17 @@ def batched_greedy_search(
         (usually the (B, dim) query embeddings; may be None).
       entry_ids: (B, E0) int32 starting vertices (deduped here; -1 pads ok).
       n_points: N (for the scored bitmap).
-      beam_width: L — expansion happens within the best-L prefix.
+      beam_width: L — expansion happens within the best-L prefix. Scalar or
+        (B,) for mixed per-query widths (a (B,) beam width requires an
+        explicit static ``pool_size``).
       pool_size: P >= L — how many best-scored vertices to retain.
       quota: max distance calls per query (incl. entry scoring); scalar or
         (B,) for mixed per-query budgets.
       expand_width: E — frontier vertices expanded per query per step. 1 is
         bit-exact to the per-query engine; >1 trades exact expansion order
         for ~E-fold fewer steps.
-      max_steps: cap on per-query expansions (defaults to a safe bound).
+      max_steps: cap on per-query expansions (defaults to a safe bound);
+        scalar or (B,) for mixed per-query caps.
       scored_init / calls_init: continue an earlier search's accounting —
         used by the bi-metric stage-2 search (see bimetric.py).
       use_fused_merge / interpret: route pool merges through the Pallas
@@ -355,9 +376,26 @@ def batched_greedy_search(
     assert n == n_points
     b, e0 = entry_ids.shape
     L = beam_width
-    P = max(pool_size or 0, L, e0)
-    if max_steps is None:
-        max_steps = 4 * L + 16
+    if isinstance(L, int) or getattr(L, "ndim", 0) == 0:
+        L = int(L)
+        P = max(pool_size or 0, L, e0)
+        if max_steps is None:
+            max_steps = 4 * L + 16
+    else:
+        if pool_size is None:
+            raise ValueError(
+                "a per-query (B,) beam_width needs an explicit pool_size")
+        if max_steps is None:
+            raise ValueError(
+                "a per-query (B,) beam_width needs an explicit max_steps")
+        # keep the scalar branch's P >= L invariant when the widths are
+        # concrete (eager callers); under a trace the caller must guarantee
+        # pool_size >= max(beam_width) — sharded_greedy_search does
+        try:
+            bw_cap = int(jnp.max(jnp.asarray(L)))
+        except jax.errors.ConcretizationTypeError:
+            bw_cap = 0
+        P = max(pool_size, bw_cap, e0)
     quota = jnp.broadcast_to(jnp.asarray(quota, jnp.int32), (b,))
 
     state, safe, keep = init_state(
@@ -437,11 +475,11 @@ def sharded_greedy_search(
     metric: str = "sqeuclidean",
     mesh=None,
     axis_name: str | None = None,
-    beam_width: int,
+    beam_width: int | Array,
     pool_size: int | None = None,
     quota: int | Array = NO_QUOTA,
     expand_width: int = 1,
-    max_steps: int | None = None,
+    max_steps: int | Array | None = None,
     use_pallas: bool = False,
     use_fused_merge: bool = False,
     interpret: bool = False,
@@ -482,10 +520,19 @@ def sharded_greedy_search(
     stacked, n_local = shard_corpus(corpus, shards)
     mesh = mesh if mesh is not None else search_mesh(shards, axis)
     ctx = ShardCtx(axis_name=axis, n_local=n_local)
-    b = entry_ids.shape[0]
+    b, e0 = entry_ids.shape
     quota_arr = jnp.broadcast_to(jnp.asarray(quota, jnp.int32), (b,))
+    # static shape params from the per-query knobs (scalar knobs keep the
+    # historical values exactly); the (B,) vectors ride in as operands so a
+    # mixed-width batch does not retrace per composition
+    bw_max = int(jnp.max(jnp.asarray(beam_width)))
+    pool = max(pool_size or 0, bw_max, e0)
+    if max_steps is None:
+        max_steps = 4 * bw_max + 16
+    bw_arr = _per_query(beam_width, b)
+    ms_arr = _per_query(max_steps, b)
 
-    def program(local_corpus, adj, q_embs, entries, q):
+    def program(local_corpus, adj, q_embs, entries, q, bw, ms):
         local_corpus = local_corpus[0]  # (1, n_local, dim) block -> local rows
 
         def dist_fn(qe, ids):
@@ -495,23 +542,179 @@ def sharded_greedy_search(
 
         return batched_greedy_search(
             dist_fn, adj, q_embs, entries, n_points=n_points,
-            beam_width=beam_width, pool_size=pool_size, quota=q,
-            expand_width=expand_width, max_steps=max_steps,
+            beam_width=bw, pool_size=pool, quota=q,
+            expand_width=expand_width, max_steps=ms,
             use_fused_merge=use_fused_merge, interpret=interpret, shard=ctx)
 
     rep2, rep1 = _P(None, None), _P(None)
     res = shard_map(
         program,
         mesh=mesh,
-        in_specs=(_P(axis, None, None), rep2, rep2, rep2, rep1),
+        in_specs=(_P(axis, None, None), rep2, rep2, rep2, rep1, rep1, rep1),
         out_specs=SearchResult(
             pool_ids=rep2, pool_dists=rep2,
             scored=_P(None, axis),  # local column slices -> global (B, S*nl)
             n_calls=rep1, n_steps=rep1),
     )(stacked, adjacency.astype(jnp.int32), query_embs,
-      entry_ids.astype(jnp.int32), quota_arr)
+      entry_ids.astype(jnp.int32), quota_arr, bw_arr, ms_arr)
     # drop the zero-padding columns (global ids >= N never get scored)
     return res._replace(scored=res.scored[:, :n_points])
+
+
+class ShardedStepper:
+    """Host-driven plan/commit stepping with the search state resident on a
+    corpus mesh — the device side of the serving engine's stage 2.
+
+    The serving engine cannot score inside a ``while_loop`` (its expensive
+    metric is a lazily-evaluated model forward pass), so it drives
+    :func:`plan_step` / :func:`commit_scores` from the host. This class is
+    the sharded form of that drive loop: each method is a jitted
+    ``shard_map`` program over the corpus mesh in which the per-query scored
+    bitmap lives as (B, n_local) column slices — the bitmap lookup OR-reduces
+    the owning shard's answer and the scatter lands on the owner only
+    (``repro.distributed.collectives``), exactly like stage 1's
+    :func:`sharded_greedy_search`. Pools, call and step counters stay
+    replicated, every device plans the identical wave, and the host sees
+    replicated ``safe`` / ``keep`` lanes to drain through the tower — so the
+    sharded stage 2 is **bit-exact** vs the single-device drive loop.
+
+    State produced by :meth:`init` must be threaded through :meth:`plan` /
+    :meth:`commit` unmodified — its ``scored`` leaf carries the mesh
+    sharding between calls; everything stays on device until the final pools
+    are read off. ``beam_width`` / ``max_steps`` / ``quota`` are (B,)
+    operands, so mixed per-query budgets in one wave do not retrace.
+    """
+
+    def __init__(self, *, shards: int, n_points: int, mesh=None,
+                 axis_name: str | None = None):
+        from repro.distributed.sharding import SEARCH_AXIS, search_mesh
+
+        self.shards = shards
+        self.n_points = n_points
+        self.axis_name = axis_name or SEARCH_AXIS
+        self.mesh = mesh if mesh is not None else search_mesh(
+            shards, self.axis_name)
+        self.n_local = -(-n_points // shards)
+        self.ctx = ShardCtx(axis_name=self.axis_name, n_local=self.n_local)
+        self._programs: dict = {}
+
+    # ------------------------------------------------------------- internals
+    def _specs(self):
+        from jax.sharding import PartitionSpec as _P
+
+        rep2, rep1 = _P(None, None), _P(None)
+        state_spec = BatchedSearchState(
+            pool_ids=rep2, pool_dists=rep2, expanded=rep2,
+            scored=_P(None, self.axis_name), n_calls=rep1, n_steps=rep1)
+        return rep2, rep1, state_spec
+
+    def _program(self, key, build):
+        if key not in self._programs:
+            self._programs[key] = build()
+        return self._programs[key]
+
+    # -------------------------------------------------------------- step API
+    def init(self, entry_ids: Array, quota: Array, *, pool_size: int
+             ) -> tuple[BatchedSearchState, Array, Array]:
+        """Sharded :func:`init_state`: the entry wave, bitmap column-sharded."""
+        from repro.launch.mesh import shard_map
+
+        rep2, rep1, state_spec = self._specs()
+
+        def build():
+            def f(entries, q):
+                return init_state(
+                    entries, n_points=self.n_points, pool_size=pool_size,
+                    quota=q, shard=self.ctx)
+
+            return jax.jit(shard_map(
+                f, mesh=self.mesh, in_specs=(rep2, rep1),
+                out_specs=(state_spec, rep2, rep2)))
+
+        return self._program(("init", pool_size), build)(
+            jnp.asarray(entry_ids, jnp.int32), _per_query(
+                quota, entry_ids.shape[0]))
+
+    def plan(self, state: BatchedSearchState, adjacency: Array, quota: Array,
+             beam_width: Array, max_steps: Array, *, expand_width: int = 1
+             ) -> tuple[BatchedSearchState, Array, Array, Array]:
+        """Sharded :func:`plan_step` (owner-only bitmap scatter, psum lookup)."""
+        from repro.launch.mesh import shard_map
+
+        rep2, rep1, state_spec = self._specs()
+
+        def build():
+            def f(s, adj, q, bw, ms):
+                return plan_step(
+                    s, adj, beam_width=bw, quota=q, max_steps=ms,
+                    expand_width=expand_width, shard=self.ctx)
+
+            return jax.jit(shard_map(
+                f, mesh=self.mesh,
+                in_specs=(state_spec, rep2, rep1, rep1, rep1),
+                out_specs=(state_spec, rep2, rep2, rep1)))
+
+        b = state.pool_ids.shape[0]
+        return self._program(("plan", expand_width), build)(
+            state, adjacency.astype(jnp.int32), _per_query(quota, b),
+            _per_query(beam_width, b), _per_query(max_steps, b))
+
+    def commit(self, state: BatchedSearchState, safe: Array, keep: Array,
+               dists: Array) -> BatchedSearchState:
+        """Sharded :func:`commit_scores` (replicated merge, bitmap untouched)."""
+        from repro.launch.mesh import shard_map
+
+        rep2, _, state_spec = self._specs()
+
+        def build():
+            return jax.jit(shard_map(
+                commit_scores, mesh=self.mesh,
+                in_specs=(state_spec, rep2, rep2, rep2),
+                out_specs=state_spec))
+
+        return self._program(("commit",), build)(
+            state, safe, keep, jnp.asarray(dists, jnp.float32))
+
+    def active_any(self, state: BatchedSearchState, quota: Array,
+                   beam_width: Array, max_steps: Array) -> bool:
+        """Replicated ``active_mask(...).any()`` — the host loop condition."""
+        from jax.sharding import PartitionSpec as _P
+
+        from repro.launch.mesh import shard_map
+
+        _, rep1, state_spec = self._specs()
+
+        def build():
+            def f(s, q, bw, ms):
+                return active_mask(
+                    s, beam_width=bw, quota=q, max_steps=ms).any()
+
+            return jax.jit(shard_map(
+                f, mesh=self.mesh,
+                in_specs=(state_spec, rep1, rep1, rep1), out_specs=_P()))
+
+        b = state.pool_ids.shape[0]
+        return bool(self._program(("active",), build)(
+            state, _per_query(quota, b), _per_query(beam_width, b),
+            _per_query(max_steps, b)))
+
+    def scored_count(self, state: BatchedSearchState) -> Array:
+        """(B,) global popcount of the partitioned bitmap (psum of locals) —
+        the partition invariant: no bit duplicated across shards, none lost."""
+        from repro.distributed import collectives
+        from repro.launch.mesh import shard_map
+
+        _, rep1, state_spec = self._specs()
+
+        def build():
+            def f(s):
+                return collectives.bitmap_count(
+                    s.scored, axis_name=self.axis_name)
+
+            return jax.jit(shard_map(
+                f, mesh=self.mesh, in_specs=(state_spec,), out_specs=rep1))
+
+        return self._program(("count",), build)(state)
 
 
 def greedy_search(

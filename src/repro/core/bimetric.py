@@ -84,7 +84,7 @@ def bimetric_search(
     q_expensive: Array,
     *,
     n_points: int,
-    quota: int,
+    quota: int | Array,
     k: int = 10,
     n_seeds: int | None = None,
     l_search_d: int | None = None,
@@ -103,6 +103,12 @@ def bimetric_search(
     vmapped over the batch here); ``q_cheap`` and ``q_expensive`` are the
     per-query contexts (e.g. the two embeddings).
 
+    ``quota`` may be a per-query (B,) vector — mixed budgets in one batch
+    with exact per-query accounting (what the serving engine's request waves
+    do). The pool/beam shapes are static, so a (B,) quota needs explicit
+    ``n_seeds`` and ``beam_width_D``; each query still freezes at *its own*
+    budget, bit-exact vs running it alone.
+
     ``shards > 1`` runs both stages device-parallel over a corpus mesh; the
     metrics must then be embedding-backed: pass
     ``corpora=(corpus_cheap, corpus_expensive)`` (the embedding matrices that
@@ -110,7 +116,13 @@ def bimetric_search(
     Results are bit-exact vs the single-device path.
     """
     b = q_cheap.shape[0]
+    scalar_quota = jnp.ndim(quota) == 0  # python/numpy scalars alike
+    if scalar_quota:
+        quota = int(quota)
     if n_seeds is None:
+        if not scalar_quota:
+            raise ValueError(
+                "a per-query (B,) quota needs an explicit n_seeds")
         n_seeds = max(1, quota // 2)  # paper default: top-Q/2
     l1 = l_search_d or max(index.config.l_build, n_seeds)
     if shards > 1 and corpora is None:
@@ -149,7 +161,16 @@ def bimetric_search(
         seeds = seeds.at[:, 0].set(jnp.asarray(index.medoid, jnp.int32))
         d_calls = jnp.zeros((b,), jnp.int32)
 
-    bw = beam_width_D or max(k, min(quota, 2 * n_seeds + 8))
+    if beam_width_D is None:
+        if not scalar_quota:
+            raise ValueError(
+                "a per-query (B,) quota needs an explicit beam_width_D")
+        bw = max(k, min(quota, 2 * n_seeds + 8))
+    else:
+        bw = beam_width_D
+    # the quota is the real stop; steps = per-query safety cap
+    max_steps_D = (4 * quota if scalar_quota
+                   else 4 * jnp.asarray(quota, jnp.int32))
     if shards > 1:
         res = sharded_greedy_search(
             corpora[1],
@@ -163,7 +184,7 @@ def bimetric_search(
             pool_size=max(bw, k),
             quota=quota,
             expand_width=expand_width,
-            max_steps=4 * quota,
+            max_steps=max_steps_D,
         )
     else:
         res = batched_greedy_search(
@@ -176,7 +197,7 @@ def bimetric_search(
             pool_size=max(bw, k),
             quota=quota,
             expand_width=expand_width,
-            max_steps=4 * quota,  # quota is the real stop; steps = safety cap
+            max_steps=max_steps_D,
         )
     return BiMetricResult(
         ids=res.pool_ids[:, :k],

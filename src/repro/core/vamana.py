@@ -219,7 +219,7 @@ def search(
     *,
     k: int,
     beam_width: int | None = None,
-    quota: int | None = None,
+    quota: int | Array | None = None,
     metric: str | None = None,
     n_entries: int = 8,
     expand_width: int = 1,
@@ -233,6 +233,8 @@ def search(
     stranded in the entry's cluster (multi-entry is standard practice). The
     whole query batch runs through one batched-engine loop; ``expand_width``
     is the step-widening throughput knob (1 = historical semantics).
+    ``quota`` may be a per-query (B,) vector for mixed call budgets in one
+    batch (each query freezes at its own budget, bit-exact vs running alone).
 
     ``shards > 1`` runs the identical loop device-parallel over a corpus
     mesh (``repro.core.beam.sharded_greedy_search``) — bit-exact results,

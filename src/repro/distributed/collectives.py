@@ -27,7 +27,12 @@ every query's scored bitmap; pools stay replicated:
   owner and x + 0.0 == x.
 * ``bitmap_lookup`` / ``bitmap_scatter``: membership tests OR-reduce the
   owning shard's answer across the axis; scatters land only on the owning
-  shard's local columns.
+  shard's local columns. Both stage 1's in-``while_loop`` engine and the
+  serving engine's host-driven stage 2 (``repro.core.beam.ShardedStepper``)
+  run their bitmap traffic through these two ops.
+* ``bitmap_count``: per-query psum popcount of the partitioned bitmap — the
+  partition invariant (each bit owned by exactly one shard) makes the psum
+  of local counts the exact global count.
 * ``gather_topk_merge``: the scatter-gather merge — per-shard top-k cut
   (``ops.local_topk``) before an ``all_gather``, so merge traffic is O(k)
   per query instead of O(n_local).
@@ -102,6 +107,19 @@ def bitmap_scatter(scored_local: Array, ids: Array, mark: Array, *,
     # scatter-OR (max): foreign/padding lanes all alias column 0, so a
     # plain set() would race — mirrors repro.core.beam.init_state.
     return scored_local.at[rows, jnp.clip(loc, 0, n_local - 1)].max(owned)
+
+
+def bitmap_count(scored_local: Array, *, axis_name: str) -> Array:
+    """(B,) replicated global popcount of the shard-partitioned bitmap.
+
+    ``scored_local`` (B, n_local) is this device's column slice. Because the
+    scatter discipline keeps the global (B, N) bitmap exactly partitioned
+    (every bit has one owner — see :func:`bitmap_scatter`), the psum of the
+    local row counts *is* the global count; tests use this as the partition
+    invariant for the sharded stage-2 drive loop.
+    """
+    return lax.psum(
+        scored_local.sum(axis=1, dtype=jnp.int32), axis_name)
 
 
 def gather_topk_merge(ids_local: Array, dists_local: Array, k: int, *,

@@ -1,2 +1,30 @@
-from repro.serve.batcher import Batcher  # noqa: F401
-from repro.serve.engine import BiMetricEngine, EmbedTower  # noqa: F401
+"""Bi-metric serving: admission → plan/commit → drain, as one async pipeline.
+
+The engine (``repro.serve.engine.BiMetricEngine``) serves the paper's
+two-tower deployment. The historical standalone ``serve/batcher.py`` thread
+loop is retired — request batching is now the engine's own admission stage:
+
+* **admission** — ``submit()`` enqueues single requests; an admission thread
+  pools up to ``max_batch`` of them (flushing after ``max_wait_ms``, so a
+  partial wave never waits behind an empty queue) and pads the group into a
+  fixed-shape *wave*. Padding rows carry quota 0; every budget knob is a
+  per-query vector in the core engine, so padding and wave-mates never
+  perturb a request's answer.
+* **plan/commit (device lane)** — each wave's cheap-tower embed, stage-1
+  search and stage-2 bookkeeping (``plan_step`` / ``commit_scores``) run on
+  device; with ``shards > 1`` they run inside the corpus mesh
+  (``repro.core.beam.ShardedStepper``), the scored bitmap column-sharded
+  exactly like stage 1.
+* **drain (tower lane)** — the expensive-tower forward passes: the query
+  embed and one batched drain per stage-2 wave, against an engine-lifetime
+  document-embedding cache.
+
+**Double-buffer invariant**: at most ``max_inflight`` (default 2) waves are
+in flight, and a wave is on exactly one lane at a time — so the tower drain
+of wave *i* overlaps the device plan/commit of wave *i+1*, while the two
+lanes never race on one wave's state. Results are bit-exact vs the
+synchronous ``query_batch`` path (which drives the identical wave coroutine
+inline), at any shard count.
+"""
+from repro.serve.engine import (BiMetricEngine, EmbedTower,  # noqa: F401
+                                ServeFuture, ServeStats)

@@ -11,19 +11,41 @@
   batched-engine run under d on device. Stage 2 drives the *same* core hot
   loop (``repro.core.beam.plan_step`` / ``commit_scores``) from the host:
   each wave is planned on device for every query at once, the union of
-  documents the wave needs is drained through the expensive tower in
-  ``serve/batcher.py``-style batched forward passes, and the scores are
-  committed back on device. Per-query accounting is identical to running
-  each query alone (a document counts against a query's quota the first
-  time that query scores it), while the tower only ever embeds a document
-  once per engine lifetime — the cross-query cache is pure compute savings.
+  documents the wave needs is drained through the expensive tower in batched
+  forward passes, and the scores are committed back on device. Per-query
+  accounting is identical to running each query alone (a document counts
+  against a query's quota the first time that query scores it), while the
+  tower only ever embeds a document once per engine lifetime — the
+  cross-query cache is pure compute savings.
+
+Two ways to drive it:
+
+* **synchronous** — :meth:`BiMetricEngine.query_batch` /
+  :meth:`BiMetricEngine.query` run one request batch to completion inline;
+* **asynchronous** — :meth:`BiMetricEngine.submit` hands a single request to
+  the engine's admission queue and returns a :class:`ServeFuture`. An
+  admission thread pads/pools pending requests into fixed-shape *waves*
+  (up to ``max_batch`` requests, flushed after ``max_wait_ms``), and the
+  waves are pipelined through two lanes — a *device lane* (cheap-tower
+  embed, stage-1 search, stage-2 plan/commit bookkeeping) and a *tower
+  lane* (expensive-tower forward passes) — with ``max_inflight`` waves (the
+  double buffer) in flight at once, so the expensive-tower drain of wave
+  *i* overlaps the device plan/commit of wave *i+1*. Both drives run the
+  **identical** per-wave coroutine, and every per-query knob (quota, seeds,
+  beam width, step cap) is a per-query vector in the core engine — so async
+  results are bit-exact vs the synchronous path, and a request's answer
+  never depends on its wave-mates or on padding.
 
 ``EmbedTower`` wraps (params, config, pooling); swap in any LM arch config.
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import functools
+import queue
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -64,9 +86,62 @@ class ServeStats:
     tower_batches: int = 0
 
 
-@functools.partial(
-    jax.jit, static_argnames=("beam_width", "max_steps", "expand_width"))
-def _plan_step_j(state, adjacency, quota, *, beam_width, max_steps,
+class ServeFuture(concurrent.futures.Future):
+    """Result handle for one :meth:`BiMetricEngine.submit` request.
+
+    A stdlib :class:`concurrent.futures.Future`; ``result(timeout)`` blocks
+    for (ids, D-dists, stats) — the :meth:`query` return shape. The engine
+    resolves exactly once; a user-side ``cancel()`` race is swallowed (the
+    wave still computes — admission has no preemption)."""
+
+    def _resolve(self, value) -> None:
+        try:
+            self.set_result(value)
+        except concurrent.futures.InvalidStateError:
+            pass  # cancelled by the caller; the computed wave is discarded
+
+    def _fail(self, exc: BaseException) -> None:
+        try:
+            self.set_exception(exc)
+        except concurrent.futures.InvalidStateError:
+            pass
+
+
+@dataclasses.dataclass
+class _Request:
+    tokens: np.ndarray
+    quota: int
+    k: int
+    future: ServeFuture
+
+
+@dataclasses.dataclass
+class _Wave:
+    """One padded fixed-shape request wave ping-ponging between the lanes."""
+
+    requests: list
+    gen: object  # the running _wave_gen coroutine
+    started: bool = False
+    pending: object = None  # tower lane's answer, sent into the coroutine
+    pending_item: object = None  # tower-lane work item yielded by the gen
+    tower_exc: BaseException | None = None
+
+
+_STOP = object()  # lane-queue sentinel
+
+
+# ---------------------------------------------------------------------------
+# jitted device-lane steps (shards == 1). beam_width / max_steps / quota ride
+# as (B,) operands so mixed per-query budgets in one wave do not retrace.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n_points", "pool_size"))
+def _init_j(entry_ids, quota, *, n_points, pool_size):
+    return beam.init_state(
+        entry_ids, n_points=n_points, pool_size=pool_size, quota=quota)
+
+
+@functools.partial(jax.jit, static_argnames=("expand_width",))
+def _plan_step_j(state, adjacency, quota, beam_width, max_steps, *,
                  expand_width):
     return beam.plan_step(
         state, adjacency, beam_width=beam_width, quota=quota,
@@ -74,15 +149,19 @@ def _plan_step_j(state, adjacency, quota, *, beam_width, max_steps,
 
 
 @jax.jit
-def _score_commit_j(state, safe, keep, doc_embs, q_D):
-    """L2 under D from gathered doc embeddings; commit the wave."""
+def _wave_dists_j(doc_embs, q_D):
+    """L2 under D from gathered doc embeddings (masked lanes fixed later)."""
     diff = doc_embs.astype(jnp.float32) - q_D[:, None, :].astype(jnp.float32)
-    d = jnp.sqrt(jnp.sum(diff * diff, axis=-1))
-    return beam.commit_scores(state, safe, keep, d)
+    return jnp.sqrt(jnp.sum(diff * diff, axis=-1))
 
 
-@functools.partial(jax.jit, static_argnames=("beam_width", "max_steps"))
-def _active_any_j(state, quota, *, beam_width, max_steps):
+@jax.jit
+def _commit_j(state, safe, keep, dists):
+    return beam.commit_scores(state, safe, keep, dists)
+
+
+@jax.jit
+def _active_any_j(state, quota, beam_width, max_steps):
     return beam.active_mask(
         state, beam_width=beam_width, quota=quota, max_steps=max_steps).any()
 
@@ -90,26 +169,36 @@ def _active_any_j(state, quota, *, beam_width, max_steps):
 class BiMetricEngine:
     """corpus_tokens: (N, S) int32 document tokens.
 
-    ``shards > 1`` runs the device-side cheap-metric searches (stage 1 and
-    the rerank baseline's stage 1) device-parallel over a corpus mesh —
-    the cheap corpus embeddings and the scored bitmap are split across
-    ``shards`` devices, pools stay replicated, results are bit-exact
-    (``repro.core.beam.sharded_greedy_search``). The stage-2 loop stays
-    host-driven and replicated: its metric is the expensive tower itself,
-    so the device side of a stage-2 wave is plan/commit bookkeeping, not a
-    corpus gather.
+    ``shards > 1`` runs the device side of **both** stages device-parallel
+    over a corpus mesh. Stage 1 is :func:`repro.core.beam.sharded_greedy_search`
+    (corpus + scored bitmap split across ``shards`` devices, pools
+    replicated). Stage 2 keeps its host drive loop — the metric is the
+    expensive tower itself — but all its bookkeeping (plan, bitmap
+    lookup/scatter, commit) runs inside the mesh via
+    :class:`repro.core.beam.ShardedStepper`, so the (B, N) scored-bitmap
+    scatter, the hottest stage-2 op, shards exactly like stage 1. Results
+    are bit-exact vs ``shards=1``.
+
+    ``max_batch`` / ``max_wait_ms`` / ``max_inflight`` configure the async
+    admission pipeline (see :meth:`submit`); they are inert for the
+    synchronous ``query*`` paths.
     """
 
     def __init__(self, cheap: EmbedTower, expensive: EmbedTower,
                  corpus_tokens: np.ndarray,
                  index_cfg: vamana.VamanaConfig | None = None,
-                 tower_batch: int = 64, shards: int = 1):
+                 tower_batch: int = 64, shards: int = 1,
+                 max_batch: int = 8, max_wait_ms: float = 5.0,
+                 max_inflight: int = 2):
         self.cheap = cheap
         self.expensive = expensive
         self.corpus_tokens = corpus_tokens
         self.n = corpus_tokens.shape[0]
         self.tower_batch = tower_batch
         self.shards = shards
+        self.max_batch = max_batch
+        self.max_wait = max_wait_ms / 1e3
+        self.max_inflight = max(1, max_inflight)
         # --- index build: cheap metric ONLY --------------------------------
         self.emb_d = jnp.asarray(cheap.embed(corpus_tokens))
         self.index = vamana.build(self.emb_d,
@@ -118,28 +207,37 @@ class BiMetricEngine:
                                       rev_candidates=16))
         self._em_d = distances.EmbeddingMetric(self.emb_d)
         self._adjacency = self.index.adjacency.astype(jnp.int32)
-        # one mesh for the engine lifetime (stage-1 shard_map programs)
+        # one mesh for the engine lifetime; stage 2 steps through the same
+        # mesh as stage 1 (ShardedStepper = the in-mesh plan/commit programs)
         self._mesh = (sharding.search_mesh(shards) if shards > 1 else None)
+        self._stepper = (beam.ShardedStepper(
+            shards=shards, n_points=self.n, mesh=self._mesh)
+            if shards > 1 else None)
         # lazy expensive-tower document embeddings (engine-lifetime cache)
         self._emb_D: np.ndarray | None = None
         self._emb_D_valid = np.zeros((self.n,), bool)
+        self._cache_lock = threading.Lock()
+        # async pipeline state (threads start lazily on the first submit)
+        self._lifecycle_lock = threading.Lock()
+        self._started = False
+        self._closed = False
+        self._threads: list[threading.Thread] = []
+        self._admit_q: queue.Queue | None = None
+        self._device_q: queue.Queue | None = None
+        self._tower_q: queue.Queue | None = None
+        self._inflight_slots: threading.Semaphore | None = None
+        self._inflight = 0
+        self._inflight_lock = threading.Lock()
 
     # ------------------------------------------------------------ internals
-    def _embed_queries(self, query_tokens: np.ndarray):
-        """(B, S) tokens -> cheap (B, dim_d) on device, expensive (B, dim_D).
-
-        Query-side embeddings are not charged to the quota: the budget counts
-        *document* scorings (the paper's cost model)."""
-        q_d = jnp.asarray(self.cheap.embed(query_tokens))
-        q_D = jnp.asarray(self.expensive.embed(query_tokens))
-        return q_d, q_D
-
-    def _stage1(self, q_d: Array, *, width: int, pool: int,
-                max_steps: int) -> beam.SearchResult:
+    def _stage1(self, q_d: Array, *, width, pool: int,
+                max_steps) -> beam.SearchResult:
         """Batched cheap-metric greedy search from the medoid (stage 1).
 
-        With ``shards > 1`` the same loop runs device-parallel over the
-        engine's corpus mesh — bit-exact vs the single-device path."""
+        ``width`` / ``max_steps`` may be per-query (B,) vectors (request
+        waves mix budgets); ``pool`` is the static pool size. With
+        ``shards > 1`` the same loop runs device-parallel over the engine's
+        corpus mesh — bit-exact vs the single-device path."""
         b = q_d.shape[0]
         entries = jnp.broadcast_to(
             jnp.asarray(self.index.medoid, jnp.int32).reshape(1, 1), (b, 1))
@@ -156,70 +254,154 @@ class BiMetricEngine:
 
     def _drain_tower(self, ids: np.ndarray) -> int:
         """Embed not-yet-cached docs through the expensive tower; returns the
-        number of forward batches drained."""
-        need = np.unique(ids[(ids >= 0) & ~self._emb_D_valid[np.maximum(ids, 0)]])
-        if need.size == 0:
-            return 0
-        embs = self.expensive.embed(self.corpus_tokens[need],
-                                    batch=self.tower_batch)
-        if self._emb_D is None:
-            self._emb_D = np.zeros((self.n, embs.shape[1]), embs.dtype)
-        self._emb_D[need] = embs
-        self._emb_D_valid[need] = True
-        return -(-need.size // self.tower_batch)
+        number of forward batches drained. Serialized by the cache lock (the
+        tower lane is single-file by construction; the lock also covers
+        synchronous callers running concurrently with the pipeline)."""
+        with self._cache_lock:
+            need = np.unique(
+                ids[(ids >= 0) & ~self._emb_D_valid[np.maximum(ids, 0)]])
+            if need.size == 0:
+                return 0
+            embs = self.expensive.embed(self.corpus_tokens[need],
+                                        batch=self.tower_batch)
+            if self._emb_D is None:
+                self._emb_D = np.zeros((self.n, embs.shape[1]), embs.dtype)
+            self._emb_D[need] = embs
+            self._emb_D_valid[need] = True
+            return -(-need.size // self.tower_batch)
 
-    # ---------------------------------------------------------------- query
-    def query_batch(self, query_tokens: np.ndarray, *, quota: int,
-                    k: int = 10, n_seeds: int | None = None,
-                    expand_width: int = 1,
-                    ) -> tuple[np.ndarray, np.ndarray, list[ServeStats]]:
-        """Two-stage bi-metric search for a whole batch of (B, S) queries.
+    def reset_doc_cache(self) -> None:
+        """Drop the expensive-tower document cache (benchmark hygiene)."""
+        with self._cache_lock:
+            self._emb_D = None
+            self._emb_D_valid[:] = False
 
-        Returns (ids (B, k), D-dists (B, k), per-query stats); unfilled
-        result slots are id -1 / dist +inf.
+    def _doc_embs(self, safe_np: np.ndarray, dim: int) -> np.ndarray:
+        """(B, K, dim_D) gather from the host cache; rows a wave needs are
+        guaranteed drained before the wave re-enters the device lane."""
+        emb = self._emb_D
+        if emb is None:
+            return np.zeros(safe_np.shape + (dim,), np.float32)
+        return emb[np.maximum(safe_np, 0)]
+
+    # -------------------------------------------------------- wave coroutine
+    def _wave_gen(self, query_tokens: np.ndarray, quota, k, n_seeds,
+                  expand_width: int):
+        """The two-stage search for one wave, as a coroutine.
+
+        Yields tower-lane work items — ``("embed_queries", tokens)`` then one
+        ``("drain", ids)`` per stage-2 wave — and receives the answer via
+        ``send`` (the expensive query embeddings / the drained batch count).
+        Device-lane work (cheap embed, stage 1, plan/commit bookkeeping)
+        runs between yields. Returns ``(ids, dists, stats)`` via
+        ``StopIteration.value``. Both the synchronous ``query_batch`` and
+        the async pipeline drive exactly this generator, which is what makes
+        them bit-exact to each other.
         """
         b = query_tokens.shape[0]
-        q_d, q_D = self._embed_queries(query_tokens)
-        n_seeds = n_seeds or max(1, quota // 2)
-        width1 = max(32, n_seeds)
+        quota_np = np.broadcast_to(
+            np.asarray(quota, np.int32), (b,)).copy()
+        n_seeds_np = (np.maximum(1, quota_np // 2) if n_seeds is None
+                      else np.broadcast_to(
+                          np.asarray(n_seeds, np.int32), (b,)).copy())
+        k_np = np.broadcast_to(np.asarray(k, np.int32), (b,))
 
-        # stage 1 — one batched cheap-metric search on device
-        res1 = self._stage1(q_d, width=width1, pool=max(width1, n_seeds),
-                            max_steps=4 * width1)
-        seeds = res1.pool_ids[:, :n_seeds]
+        q_d = jnp.asarray(self.cheap.embed(query_tokens))
+        q_D = yield ("embed_queries", query_tokens)
+
+        # stage 1 — one batched cheap-metric search on device; per-query
+        # width/steps so a request's answer never depends on its wave-mates.
+        # quota-0 rows (admission padding, or an explicit quota=0 request)
+        # can never spend a D call, so they run a width-1, zero-step stage 1
+        # — the padded partial-wave flush costs one lane, not a full search
+        width1 = np.where(quota_np > 0, np.maximum(32, n_seeds_np), 1
+                          ).astype(np.int32)
+        pool1 = int(max(width1.max(), n_seeds_np.max()))
+        res1 = self._stage1(
+            q_d, width=jnp.asarray(width1), pool=pool1,
+            max_steps=jnp.asarray(4 * width1 * (quota_np > 0)))
+        lane = np.arange(res1.pool_ids.shape[1], dtype=np.int32)
+        seeds = jnp.where(
+            jnp.asarray(lane[None, :] < n_seeds_np[:, None]),
+            res1.pool_ids, -1)[:, :int(n_seeds_np.max())]
         d_calls = np.asarray(res1.n_calls)
 
         # stage 2 — the core hot loop, host-driven: plan on device, drain the
         # tower for the wave's union of fresh docs, commit scores on device.
-        L = max(k, min(quota, 2 * max(n_seeds, 1) + 8))
-        P = max(L, k)
-        max_steps = 4 * quota
-        quota_arr = jnp.full((b,), quota, jnp.int32)
+        L = np.maximum(
+            k_np, np.minimum(quota_np, 2 * np.maximum(n_seeds_np, 1) + 8))
+        P = int(max(L.max(), k_np.max()))
+        max_steps = 4 * quota_np
+        quota_j = jnp.asarray(quota_np)
+        L_j = jnp.asarray(L)
+        ms_j = jnp.asarray(max_steps)
         tower_batches = 0
 
-        state, safe, keep = beam.init_state(
-            seeds, n_points=self.n, pool_size=P, quota=quota_arr)
+        stepper = self._stepper
+        if stepper is not None:
+            state, safe, keep = stepper.init(seeds, quota_j, pool_size=P)
+        else:
+            state, safe, keep = _init_j(
+                seeds, quota_j, n_points=self.n, pool_size=P)
         while True:
             safe_np = np.asarray(safe)
-            tower_batches += self._drain_tower(safe_np[np.asarray(keep)])
-            doc_embs = jnp.asarray(
-                (self._emb_D if self._emb_D is not None
-                 else np.zeros((self.n, q_D.shape[1]), np.float32)
-                 )[np.maximum(safe_np, 0)])
-            state = _score_commit_j(state, safe, keep, doc_embs, q_D)
-            if not bool(_active_any_j(state, quota_arr, beam_width=L,
-                                      max_steps=max_steps)):
-                break
-            state, safe, keep, _ = _plan_step_j(
-                state, self._adjacency, quota_arr, beam_width=L,
-                max_steps=max_steps, expand_width=expand_width)
+            tower_batches += yield ("drain", safe_np[np.asarray(keep)])
+            doc_embs = jnp.asarray(self._doc_embs(safe_np, q_D.shape[1]))
+            dists = _wave_dists_j(doc_embs, q_D)
+            if stepper is not None:
+                state = stepper.commit(state, safe, keep, dists)
+                if not stepper.active_any(state, quota_j, L_j, ms_j):
+                    break
+                state, safe, keep, _ = stepper.plan(
+                    state, self._adjacency, quota_j, L_j, ms_j,
+                    expand_width=expand_width)
+            else:
+                state = _commit_j(state, safe, keep, dists)
+                if not bool(_active_any_j(state, quota_j, L_j, ms_j)):
+                    break
+                state, safe, keep, _ = _plan_step_j(
+                    state, self._adjacency, quota_j, L_j, ms_j,
+                    expand_width=expand_width)
 
-        ids = np.asarray(state.pool_ids[:, :k], np.int64)
-        dd = np.asarray(state.pool_dists[:, :k], np.float64)
+        kmax = int(k_np.max())
+        ids = np.asarray(state.pool_ids[:, :kmax], np.int64)
+        dd = np.asarray(state.pool_dists[:, :kmax], np.float64)
         D_calls = np.asarray(state.n_calls)
         stats = [ServeStats(d_calls=int(d_calls[i]), D_calls=int(D_calls[i]),
                             tower_batches=tower_batches) for i in range(b)]
         return ids, dd, stats
+
+    def _service_tower(self, item):
+        """Run one tower-lane work item (the expensive-tower forward passes)."""
+        kind, payload = item
+        if kind == "embed_queries":
+            # query-side embeddings are not charged to the quota: the budget
+            # counts *document* scorings (the paper's cost model)
+            return jnp.asarray(self.expensive.embed(payload))
+        return self._drain_tower(payload)  # "drain"
+
+    def _drive_sync(self, gen):
+        """Run a wave coroutine to completion, servicing tower work inline."""
+        try:
+            item = next(gen)
+            while True:
+                item = gen.send(self._service_tower(item))
+        except StopIteration as stop:
+            return stop.value
+
+    # ---------------------------------------------------------------- query
+    def query_batch(self, query_tokens: np.ndarray, *, quota,
+                    k: int = 10, n_seeds=None, expand_width: int = 1,
+                    ) -> tuple[np.ndarray, np.ndarray, list[ServeStats]]:
+        """Two-stage bi-metric search for a whole batch of (B, S) queries.
+
+        ``quota`` (and ``n_seeds``) may be scalars or per-query (B,)
+        vectors — mixed budgets run in one wave with exact per-query
+        accounting. Returns (ids (B, k), D-dists (B, k), per-query stats);
+        unfilled result slots are id -1 / dist +inf.
+        """
+        return self._drive_sync(
+            self._wave_gen(query_tokens, quota, k, n_seeds, expand_width))
 
     def query(self, query_tokens: np.ndarray, *, quota: int, k: int = 10,
               n_seeds: int | None = None,
@@ -230,7 +412,175 @@ class BiMetricEngine:
         ok = (ids[0] >= 0) & np.isfinite(dd[0])
         return ids[0][ok], dd[0][ok], stats[0]
 
+    # ------------------------------------------------------- async pipeline
+    def submit(self, tokens: np.ndarray, *, quota: int, k: int = 10
+               ) -> ServeFuture:
+        """Queue one (S,) request; returns a :class:`ServeFuture` resolving
+        to the :meth:`query` result shape. Starts the pipeline threads on
+        first use. Raises ``RuntimeError`` after :meth:`close`."""
+        fut = ServeFuture()
+        req = _Request(tokens=np.asarray(tokens), quota=int(quota),
+                       k=int(k), future=fut)
+        # check-closed + enqueue under the lifecycle lock: close() flips
+        # _closed under the same lock before it posts the sentinel, so a
+        # request can never land behind the sentinel unresolved
+        with self._lifecycle_lock:
+            self._ensure_started_locked()
+            self._admit_q.put(req)
+        return fut
+
+    def close(self, timeout: float | None = 60.0) -> None:
+        """Drain and stop the pipeline. Every request admitted before the
+        call still resolves; the admission queue is flushed into final
+        (possibly partial) waves before the lanes shut down. Idempotent."""
+        with self._lifecycle_lock:
+            already = self._closed
+            self._closed = True
+            started = self._started
+        if already or not started:
+            return
+        self._admit_q.put(_STOP)
+        for t in self._threads:
+            t.join(timeout)
+
+    def _ensure_started_locked(self) -> None:
+        """Start the lanes on first use; caller holds ``_lifecycle_lock``."""
+        if self._closed:
+            raise RuntimeError("engine pipeline is closed")
+        if self._started:
+            return
+        self._admit_q = queue.Queue()
+        self._device_q = queue.Queue()
+        self._tower_q = queue.Queue()
+        self._inflight_slots = threading.Semaphore(self.max_inflight)
+        self._threads = [
+            threading.Thread(target=loop, daemon=True, name=name)
+            for name, loop in (("serve-admission", self._admission_loop),
+                               ("serve-device", self._device_loop),
+                               ("serve-tower", self._tower_loop))]
+        for t in self._threads:
+            t.start()
+        self._started = True
+
+    def _make_wave(self, requests: list) -> _Wave:
+        """Pad a request group to the fixed (max_batch, S) wave shape.
+
+        Padding rows carry quota 0 (they plan all-masked waves and never
+        touch the tower) and k 1; because every budget knob is per-query in
+        the core engine, padding never perturbs a real request's answer.
+        """
+        b, s = self.max_batch, self.corpus_tokens.shape[1]
+        tokens = np.zeros((b, s), self.corpus_tokens.dtype)
+        quota = np.zeros((b,), np.int32)
+        k = np.ones((b,), np.int32)
+        for i, r in enumerate(requests):
+            tokens[i], quota[i], k[i] = r.tokens, r.quota, r.k
+        return _Wave(requests=requests,
+                     gen=self._wave_gen(tokens, quota, k, None, 1))
+
+    def _admission_loop(self) -> None:
+        stopping = False
+        while not stopping:
+            first = self._admit_q.get()
+            if first is _STOP:
+                break
+            batch = [first]
+            deadline = time.monotonic() + self.max_wait
+            while len(batch) < self.max_batch:
+                try:
+                    r = self._admit_q.get(
+                        timeout=max(deadline - time.monotonic(), 0.0))
+                except queue.Empty:
+                    break  # max_wait_ms flush: dispatch the partial wave
+                if r is _STOP:
+                    stopping = True
+                    break
+                batch.append(r)
+            self._inflight_slots.acquire()  # the double buffer: ≤ max_inflight
+            with self._inflight_lock:
+                self._inflight += 1
+            try:
+                wave = self._make_wave(batch)
+            except BaseException as exc:  # noqa: BLE001 — e.g. bad token shape
+                # a malformed request must fail its own wave, not kill the
+                # admission thread (which would wedge every later submit)
+                for r in batch:
+                    r.future._fail(exc)
+                self._retire_wave()
+                continue
+            self._device_q.put(wave)
+        self._device_q.put(_STOP)
+
+    def _finish_wave(self, wave: _Wave, value) -> None:
+        ids, dd, stats = value
+        for i, r in enumerate(wave.requests):
+            row_ids, row_dd = ids[i, :r.k], dd[i, :r.k]
+            ok = (row_ids >= 0) & np.isfinite(row_dd)
+            r.future._resolve((row_ids[ok], row_dd[ok], stats[i]))
+
+    def _fail_wave(self, wave: _Wave, exc: BaseException) -> None:
+        for r in wave.requests:
+            r.future._fail(exc)
+
+    def _retire_wave(self) -> int:
+        with self._inflight_lock:
+            self._inflight -= 1
+            left = self._inflight
+        self._inflight_slots.release()
+        return left
+
+    def _device_loop(self) -> None:
+        draining = False
+        while True:
+            item = self._device_q.get()
+            if item is _STOP:
+                draining = True
+                with self._inflight_lock:
+                    if self._inflight == 0:
+                        break
+                continue
+            wave: _Wave = item
+            try:
+                if wave.tower_exc is not None:
+                    raise wave.tower_exc
+                if wave.started:
+                    tower_item = wave.gen.send(wave.pending)
+                else:
+                    tower_item = next(wave.gen)
+                    wave.started = True
+                wave.pending = None
+                wave.pending_item = tower_item
+                self._tower_q.put(wave)
+                continue
+            except StopIteration as stop:
+                self._finish_wave(wave, stop.value)
+            except BaseException as exc:  # noqa: BLE001 — fail the futures
+                self._fail_wave(wave, exc)
+            if self._retire_wave() == 0 and draining:
+                break
+        self._tower_q.put(_STOP)
+
+    def _tower_loop(self) -> None:
+        while True:
+            wave = self._tower_q.get()
+            if wave is _STOP:
+                break
+            try:
+                wave.pending = self._service_tower(wave.pending_item)
+            except BaseException as exc:  # noqa: BLE001 — surfaced on device
+                wave.tower_exc = exc
+            self._device_q.put(wave)
+
     # --------------------------------------------------------------- rerank
+    def _embed_queries(self, query_tokens: np.ndarray):
+        """(B, S) tokens -> cheap (B, dim_d) on device, expensive (B, dim_D).
+
+        Query-side embeddings are not charged to the quota: the budget counts
+        *document* scorings (the paper's cost model)."""
+        q_d = jnp.asarray(self.cheap.embed(query_tokens))
+        q_D = jnp.asarray(self.expensive.embed(query_tokens))
+        return q_d, q_D
+
     def rerank_query_batch(self, query_tokens: np.ndarray, *, quota: int,
                            k: int = 10,
                            ) -> tuple[np.ndarray, np.ndarray, list[ServeStats]]:
@@ -247,7 +597,6 @@ class BiMetricEngine:
         dd = np.sqrt((diff * diff).sum(-1))
         dd = np.where(cand >= 0, dd, np.inf)
         order = np.argsort(dd, axis=1, kind="stable")[:, :k]
-        rows = np.arange(b)[:, None]
         d_calls = np.asarray(res1.n_calls)
         n_D = (cand >= 0).sum(1)
         stats = [ServeStats(d_calls=int(d_calls[i]), D_calls=int(n_D[i]),

@@ -1,0 +1,226 @@
+"""Async serving pipeline: admission/batcher edge cases and parity suites.
+
+The engine's async path (``submit`` → padded waves → double-buffered
+tower drain) must be *bit-exact* vs the synchronous ``query_batch`` drive
+of the same requests — both run the identical wave coroutine, and every
+budget knob is a per-query vector in the core engine, so padding and
+wave-mates cannot perturb a request's answer. The sharded suite (8 forced
+host devices, subprocess) pins the same parity with stage 2's bookkeeping
+running inside the corpus mesh at shards ∈ {1, 2, 4}.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import qwen3_0_6b
+from repro.models import transformer as T
+from repro.serve import BiMetricEngine, EmbedTower
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.fixture(scope="module")
+def engine_parts():
+    key = jax.random.PRNGKey(0)
+    cheap_cfg = qwen3_0_6b.smoke()
+    exp_cfg = T.TransformerConfig(
+        name="exp-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        head_dim=16, d_ff=128, vocab=cheap_cfg.vocab, embed_dim=32)
+    cheap = EmbedTower(T.init_params(key, cheap_cfg), cheap_cfg)
+    expensive = EmbedTower(
+        T.init_params(jax.random.fold_in(key, 1), exp_cfg), exp_cfg)
+    corpus = np.random.default_rng(0).integers(
+        0, cheap_cfg.vocab, (96, 10), dtype=np.int32)
+    return cheap, expensive, corpus
+
+
+def _fresh_engine(engine_parts, **kw):
+    cheap, expensive, corpus = engine_parts
+    return BiMetricEngine(cheap, expensive, corpus, **kw)
+
+
+def _assert_request_parity(fut_result, ids_row, dd_row, stat):
+    ids1, dd1, s1 = fut_result
+    ok = (ids_row >= 0) & np.isfinite(dd_row)
+    assert np.array_equal(ids1, ids_row[ok])
+    np.testing.assert_array_equal(dd1, dd_row[ok])
+    assert s1.D_calls == stat.D_calls
+    assert s1.d_calls == stat.d_calls
+
+
+def test_async_bit_exact_vs_query_batch(engine_parts):
+    """One full wave of submits == the synchronous query_batch, bit for bit."""
+    eng = _fresh_engine(engine_parts, max_batch=3, max_wait_ms=500.0)
+    qs = eng.corpus_tokens[[3, 40, 77]].copy()
+    ids_b, dd_b, st_b = eng.query_batch(qs, quota=15, k=5)
+    futs = [eng.submit(qs[i], quota=15, k=5) for i in range(3)]
+    for i, f in enumerate(futs):
+        _assert_request_parity(f.result(timeout=300), ids_b[i], dd_b[i],
+                               st_b[i])
+    eng.close()
+
+
+def test_mixed_quotas_in_one_wave(engine_parts):
+    """Mixed budgets share a wave with exact per-query accounting — equal to
+    the per-query-quota sync batch AND to each request running alone."""
+    eng = _fresh_engine(engine_parts, max_batch=3, max_wait_ms=500.0)
+    qs = eng.corpus_tokens[[3, 40, 77]].copy()
+    quotas = np.array([4, 15, 9], np.int32)
+    ids_m, dd_m, st_m = eng.query_batch(qs, quota=quotas, k=5)
+    assert [s.D_calls for s in st_m] == [4, 15, 9]
+    futs = [eng.submit(qs[i], quota=int(quotas[i]), k=5) for i in range(3)]
+    for i, f in enumerate(futs):
+        _assert_request_parity(f.result(timeout=300), ids_m[i], dd_m[i],
+                               st_m[i])
+    eng.close()
+    solo = _fresh_engine(engine_parts)
+    for i, q in enumerate(quotas):
+        ids1, dd1, s1 = solo.query(qs[i], quota=int(q), k=5)
+        ok = (ids_m[i] >= 0) & np.isfinite(dd_m[i])
+        assert np.array_equal(ids1, ids_m[i][ok])
+        assert s1.D_calls == st_m[i].D_calls
+
+
+def test_max_wait_flush_partial_wave(engine_parts):
+    """A lone request must not wait for a full wave: the max_wait_ms deadline
+    flushes a padded partial wave, and padding never perturbs the answer."""
+    eng = _fresh_engine(engine_parts, max_batch=8, max_wait_ms=5.0)
+    q = eng.corpus_tokens[7]
+    ids_a, dd_a, st_a = eng.submit(q, quota=12, k=5).result(timeout=300)
+    eng.close()
+    ref = _fresh_engine(engine_parts)
+    ids_s, dd_s, st_s = ref.query(q, quota=12, k=5)
+    assert np.array_equal(ids_a, ids_s)
+    np.testing.assert_array_equal(dd_a, dd_s)
+    assert st_a.D_calls == st_s.D_calls and st_a.d_calls == st_s.d_calls
+
+
+def test_single_request_latency_parity(engine_parts):
+    """submit() of one request answers what query() answers (and within a
+    sane wall-clock envelope of it — the pipeline adds admission wait, not
+    asymptotics). Generous bound: this box is 2 cores and noisy."""
+    eng = _fresh_engine(engine_parts, max_batch=4, max_wait_ms=5.0)
+    q = eng.corpus_tokens[11]
+    eng.submit(q, quota=12, k=5).result(timeout=300)  # warm both drives
+    t0 = time.perf_counter()
+    r_async = eng.submit(q, quota=12, k=5).result(timeout=300)
+    t_async = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    r_sync = eng.query(q, quota=12, k=5)
+    t_sync = time.perf_counter() - t0
+    eng.close()
+    assert np.array_equal(r_async[0], r_sync[0])
+    np.testing.assert_array_equal(r_async[1], r_sync[1])
+    assert r_async[2].D_calls == r_sync[2].D_calls
+    assert t_async < 20 * max(t_sync, 1e-3) + 1.0
+
+
+def test_clean_shutdown_with_inflight_requests(engine_parts):
+    """close() drains: every admitted request resolves, close is idempotent,
+    and submit after close raises instead of hanging."""
+    eng = _fresh_engine(engine_parts, max_batch=2, max_wait_ms=1.0)
+    qs = eng.corpus_tokens[[3, 9, 40, 55, 77]].copy()
+    futs = [eng.submit(qs[i], quota=10, k=5) for i in range(5)]
+    eng.close()  # immediately — several waves still in flight
+    for f in futs:
+        ids, dd, st = f.result(timeout=60)  # resolved, not abandoned
+        assert st.D_calls <= 10
+    eng.close()  # idempotent
+    with pytest.raises(RuntimeError):
+        eng.submit(qs[0], quota=5)
+
+
+def test_malformed_request_fails_only_its_wave(engine_parts):
+    """A bad request (wrong token length) fails its own future; the
+    admission thread survives and later requests still serve."""
+    eng = _fresh_engine(engine_parts, max_batch=2, max_wait_ms=1.0)
+    bad = eng.submit(np.zeros((7,), np.int32), quota=5)  # corpus S is 10
+    with pytest.raises(ValueError):
+        bad.result(timeout=60)
+    ids, dd, st = eng.submit(
+        eng.corpus_tokens[3], quota=10, k=5).result(timeout=300)
+    assert st.D_calls <= 10 and ids.size > 0
+    eng.close()
+
+
+def test_quota_zero_async(engine_parts):
+    eng = _fresh_engine(engine_parts, max_batch=2, max_wait_ms=1.0)
+    ids, dd, st = eng.submit(
+        eng.corpus_tokens[0], quota=0, k=5).result(timeout=300)
+    eng.close()
+    assert ids.size == 0 and st.D_calls == 0
+
+
+def _run(body: str) -> str:
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp
+        import numpy as np
+    """) + textwrap.dedent(body)
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=ROOT, timeout=900)
+    assert res.returncode == 0, res.stderr[-3000:]
+    return res.stdout
+
+
+@pytest.mark.slow
+def test_sharded_stage2_async_parity():
+    """shards ∈ {1, 2, 4}: stage 2's plan/commit bookkeeping runs inside the
+    corpus mesh (column-sharded scored bitmap) and both drives stay
+    bit-exact vs the single-device engine; the bitmap partition invariant
+    (psum of local popcounts == n scored) holds under the stepper."""
+    out = _run("""
+        from repro.configs import qwen3_0_6b
+        from repro.core import beam
+        from repro.models import transformer as T
+        from repro.serve import BiMetricEngine, EmbedTower
+        key = jax.random.PRNGKey(0)
+        cheap_cfg = qwen3_0_6b.smoke()
+        exp_cfg = T.TransformerConfig(
+            name="exp-smoke", n_layers=2, d_model=64, n_heads=4,
+            n_kv_heads=4, head_dim=16, d_ff=128, vocab=cheap_cfg.vocab,
+            embed_dim=32)
+        cheap = EmbedTower(T.init_params(key, cheap_cfg), cheap_cfg)
+        expensive = EmbedTower(
+            T.init_params(jax.random.fold_in(key, 1), exp_cfg), exp_cfg)
+        corpus = np.random.default_rng(0).integers(
+            0, cheap_cfg.vocab, (97, 10), dtype=np.int32)  # uneven N
+        qs = corpus[[3, 40, 77]].copy()
+        quotas = np.array([6, 15, 11], np.int32)
+        base = BiMetricEngine(cheap, expensive, corpus)
+        ids0, dd0, st0 = base.query_batch(qs, quota=quotas, k=5)
+        for s in (2, 4):
+            eng = BiMetricEngine(cheap, expensive, corpus, shards=s,
+                                 max_batch=3, max_wait_ms=500.0)
+            ids, dd, st = eng.query_batch(qs, quota=quotas, k=5)
+            assert np.array_equal(ids0, ids), s
+            np.testing.assert_array_equal(dd0, dd)
+            assert [x.D_calls for x in st] == [x.D_calls for x in st0]
+            assert [x.d_calls for x in st] == [x.d_calls for x in st0]
+            futs = [eng.submit(qs[i], quota=int(quotas[i]), k=5)
+                    for i in range(3)]
+            for i, f in enumerate(futs):
+                rids, rdd, rst = f.result(timeout=600)
+                ok = (ids0[i] >= 0) & np.isfinite(dd0[i])
+                assert np.array_equal(rids, ids0[i][ok]), (s, i)
+                np.testing.assert_array_equal(rdd, dd0[i][ok])
+                assert rst.D_calls == st0[i].D_calls
+            eng.close()
+            # partition invariant on the stepper's column-sharded bitmap
+            stepper = eng._stepper
+            seeds = jnp.asarray(ids0[:, :3], jnp.int32)
+            state, safe, keep = stepper.init(
+                seeds, jnp.asarray(quotas), pool_size=8)
+            counts = np.asarray(stepper.scored_count(state))
+            assert (counts == np.asarray(state.n_calls)).all(), counts
+        print("SHARDED_ASYNC_OK")
+    """)
+    assert "SHARDED_ASYNC_OK" in out
