@@ -36,11 +36,29 @@ against the single-device engine. On a CPU host the shards share the same
 cores, so this tracks collective overhead, not a real speedup — the
 trajectory artifact is what CI gates on.
 
+The ``dedup`` scenario compares the engine's two dedup-state backends at
+quota 256 on a large random-graph corpus (bit-exact parity asserted):
+
+* ``fused_loop`` — one jitted ``while_loop`` (the stage-1 / bi-metric
+  shape). XLA aliases the loop carry, so the (B, N) bitmap's scatter is
+  in-place and cheap; the sorted set pays an O(quota) merge per step. The
+  bitmap wins this shape on CPU at small/medium N (which is why the fused
+  engine's ``dedup="auto"`` keeps it); at the scenario's 1M rows the
+  bitmap's O(B·N) init/materialization starts to tell and the two roughly
+  tie — recorded for honesty either way.
+* ``serve_drive`` — the serving engine's host-driven stage-2 plan/commit
+  shape: separate jitted dispatches per step, exactly like
+  ``serve.engine``. The non-donated (B, N) bitmap is round-tripped (copied)
+  through every dispatch while the sorted set moves (B, quota) — this is
+  the path the quota-proportional state was built for, and its
+  ``speedup_at_quota_256`` is the gated headline.
+
 Writes ``BENCH_search_perf.json`` (via benchmarks/run.py, or directly when
 executed as a script) — the machine-readable perf trajectory artifact.
 """
 from __future__ import annotations
 
+import functools
 import json
 import os
 import subprocess
@@ -53,7 +71,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Setup, emit, write_bench_json
-from repro.core import _legacy_beam, distances, metrics
+from repro.core import _legacy_beam, beam, distances, metrics
 from repro.core.beam import batched_greedy_search
 from repro.kernels import ops
 
@@ -65,6 +83,16 @@ E_QUOTA = 2  # wave width under a quota (recall-safe)
 E_UNBOUNDED = 6  # wave width for convergence-bounded search
 SHARD_COUNTS = (2, 4, 8)  # forced host devices for the sharded scenario
 SHARD_BATCH = 32
+# dedup-backend scenario: a corpus big enough that the (B, N) bitmap's
+# round-trips through the host-driven dispatches dominate the fixed
+# dispatch cost (at 1M rows each step copies ~2 x 32MB of bitmap; the
+# sorted set moves ~32KB) — the quota-proportional win is ~9x here and
+# grows with N
+DEDUP_N = 1 << 20
+DEDUP_QUOTA = 256
+DEDUP_BATCH = 32
+DEDUP_DEGREE = 16
+DEDUP_DIM = 16
 
 
 def _time(fn, *args, reps=7):
@@ -216,6 +244,120 @@ def _sharded_scenario(setup, em, queries) -> dict:
     return out
 
 
+@functools.partial(jax.jit, static_argnames=(
+    "n_points", "pool_size", "dedup", "set_capacity"))
+def _dedup_init_j(entry_ids, quota, *, n_points, pool_size, dedup,
+                  set_capacity):
+    return beam.init_state(
+        entry_ids, n_points=n_points, pool_size=pool_size, quota=quota,
+        dedup=dedup, set_capacity=set_capacity)
+
+
+@jax.jit
+def _dedup_plan_j(state, adjacency, quota, beam_width, max_steps):
+    return beam.plan_step(
+        state, adjacency, beam_width=beam_width, quota=quota,
+        max_steps=max_steps)
+
+
+_dedup_commit_j = jax.jit(beam.commit_scores)
+_dedup_active_j = jax.jit(lambda s, q, bw, ms: beam.active_mask(
+    s, beam_width=bw, quota=q, max_steps=ms).any())
+
+
+def _dedup_scenario() -> dict:
+    """Sorted-set vs bitmap dedup state at quota 256 (both drive shapes)."""
+    n, b, quota = DEDUP_N, DEDUP_BATCH, DEDUP_QUOTA
+    rng = np.random.default_rng(0)
+    adj = jnp.asarray(rng.integers(0, n, (n, DEDUP_DEGREE), dtype=np.int32))
+    emb = jnp.asarray(rng.normal(size=(n, DEDUP_DIM)).astype(np.float32))
+    qs = jnp.asarray(rng.normal(size=(b, DEDUP_DIM)).astype(np.float32))
+    em = distances.EmbeddingMetric(emb)
+    entries = jnp.zeros((b, 1), jnp.int32)
+    seeds = jnp.asarray(rng.integers(0, n, (b, 8), dtype=np.int32))
+    out = {"n": n, "quota": quota, "batch": b}
+
+    # --- fused_loop: one while_loop program per backend (stage-1 shape) ---
+    def fused(backend):
+        return jax.jit(lambda q: batched_greedy_search(
+            em.dists_batch, adj, q, entries, n_points=n, beam_width=BEAM,
+            pool_size=BEAM, quota=quota, expand_width=E_QUOTA,
+            max_steps=4 * quota, dedup=backend))
+
+    f_bm, f_ss = fused("bitmap"), fused("sorted")
+    wall = {"bitmap": _time(f_bm, qs, reps=5),
+            "sorted": _time(f_ss, qs, reps=5)}
+    r_bm, r_ss = f_bm(qs), f_ss(qs)
+    parity = all(np.array_equal(np.asarray(x), np.asarray(y))
+                 for x, y in zip(r_bm, r_ss))
+    assert parity, "dedup backends diverged in the fused loop"
+    out["fused_loop"] = {
+        "us_per_query_bitmap": wall["bitmap"] / b * 1e6,
+        "us_per_query_sorted": wall["sorted"] / b * 1e6,
+        "speedup_sorted_vs_bitmap": wall["bitmap"] / wall["sorted"],
+        "parity_bit_exact": parity,
+    }
+    emit("perf/dedup_fused_q256", wall["sorted"] / b * 1e6,
+         f"us_per_query_sorted;x_vs_bitmap="
+         f"{out['fused_loop']['speedup_sorted_vs_bitmap']:.2f}")
+
+    # --- serve_drive: host-driven plan/commit dispatches (stage-2 shape) --
+    qv = jnp.full((b,), quota, jnp.int32)
+    bw = jnp.full((b,), BEAM, jnp.int32)
+    ms = jnp.full((b,), 4 * quota, jnp.int32)
+
+    def drive(backend):
+        cap = quota if backend == "sorted" else None
+        state, safe, keep = _dedup_init_j(
+            seeds, qv, n_points=n, pool_size=BEAM, dedup=backend,
+            set_capacity=cap)
+        while True:
+            dists = em.dists_batch(qs, safe)
+            state = _dedup_commit_j(state, safe, keep, dists)
+            if not bool(_dedup_active_j(state, qv, bw, ms)):
+                break
+            state, safe, keep, _ = _dedup_plan_j(state, adj, qv, bw, ms)
+        return jax.block_until_ready(state)
+
+    def best_of(fn, reps=5):
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    s_bm = drive("bitmap")  # compile
+    s_ss = drive("sorted")
+    dwall = {"bitmap": best_of(lambda: drive("bitmap")),
+             "sorted": best_of(lambda: drive("sorted"))}
+    dparity = (
+        np.array_equal(np.asarray(s_bm.pool_ids), np.asarray(s_ss.pool_ids))
+        and np.array_equal(np.asarray(s_bm.pool_dists),
+                           np.asarray(s_ss.pool_dists))
+        and np.array_equal(np.asarray(s_bm.n_calls),
+                           np.asarray(s_ss.n_calls))
+        and np.array_equal(np.asarray(s_bm.n_steps),
+                           np.asarray(s_ss.n_steps))
+        and np.array_equal(
+            np.asarray(s_bm.scored),
+            np.asarray(beam.scored_set_to_bitmap(s_ss.scored, n))))
+    assert dparity, "dedup backends diverged in the serve drive"
+    speedup = dwall["bitmap"] / dwall["sorted"]
+    out["serve_drive"] = {
+        "us_per_query_bitmap": dwall["bitmap"] / b * 1e6,
+        "us_per_query_sorted": dwall["sorted"] / b * 1e6,
+        "speedup_sorted_vs_bitmap": speedup,
+        "parity_bit_exact": dparity,
+    }
+    # the gated headline: quota-proportional state on the serving stage-2
+    # dispatch shape, where the (B, N) bitmap is copied every step
+    out["speedup_at_quota_256"] = speedup
+    emit("perf/dedup_serve_drive_q256", dwall["sorted"] / b * 1e6,
+         f"us_per_query_sorted;x_vs_bitmap={speedup:.2f}")
+    return out
+
+
 def run() -> dict:
     setup = Setup(n=4096, n_queries=max(BATCH_SIZES))
     em_d = distances.EmbeddingMetric(setup.data.corpus_d)
@@ -230,6 +372,7 @@ def run() -> dict:
         "stage1_unbounded", setup, em_d, setup.data.queries_d, true_d,
         quota=_legacy_beam.NO_QUOTA, expand_width=E_UNBOUNDED, max_steps=128)
     sharded = _sharded_scenario(setup, em_D, setup.data.queries_D)
+    dedup = _dedup_scenario()
 
     # kernel micro-benches (XLA path = production CPU path; pallas path is
     # interpret-mode, correctness-only on CPU)
@@ -252,6 +395,7 @@ def run() -> dict:
         "stage2_quota": stage2,
         "stage1_unbounded": stage1,
         "sharded": sharded,
+        "dedup": dedup,
         # headline: batched engine vs the retired per-query serving loop,
         # on the paper's quota-bounded cost model, at batch 32
         "speedup_at_32": stage2["batches"]["32"]["speedup_vs_perquery"],

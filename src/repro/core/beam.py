@@ -14,10 +14,38 @@ single fixed-shape update:
   survivors with one batched distance call, and merge (beam ‖ fanout) back
   into the pools in one call (``repro.kernels.ops.merge_pool_batch`` — the
   stable jnp merge off-TPU, the fused Pallas bitonic kernel on TPU);
-* the per-query bitmap of scored vertices provides exact dedup — a vertex's
-  distance is computed at most once per step wave, so counting scored
-  candidates counts distance-function *calls* exactly (the paper's cost
-  model);
+* per-query *dedup state* provides exact dedup — a vertex's distance is
+  computed at most once per step wave, so counting scored candidates counts
+  distance-function *calls* exactly (the paper's cost model). Two backends
+  implement it behind ``_scored_lookup`` / ``_scored_scatter``:
+
+  - ``bitmap`` — the dense (B, N) bool bitmap: O(1) lookup/scatter per
+    lane, O(B·N) state. The only choice when the call budget is unbounded
+    (graph construction, stage-1 proxy search).
+  - ``sorted`` — a :class:`ScoredSet`: per-query **ascending id arrays of
+    static capacity C = quota** (+ a count), lookup via ``searchsorted``,
+    insertion via the same tie-stable top-k merge as the pools
+    (``repro.kernels.ops.sorted_set_merge``). The bi-metric quota guarantee
+    — one insertion per counted distance call, ``n_calls <= quota`` — means
+    the set never overflows, so quota-bounded searches carry
+    O(B·quota) dedup state instead of O(B·N) (NMSLIB's visited-set trick,
+    sized to the budget rather than the corpus).
+
+  ``dedup="auto"`` (the default) is drive-shape aware — see
+  :func:`resolve_dedup`: host-driven dispatch loops (the serving engine's
+  stage 2, where the non-donated bitmap would be copied every step) pick
+  ``sorted`` exactly when the quota bound is static and smaller than the
+  corpus; fused ``while_loop`` programs keep the bitmap (XLA aliases the
+  carry, so on CPU the bitmap's step cost is O(wave) regardless of N —
+  force ``dedup="sorted"`` when the bitmap's *memory* is the problem;
+  note the fused entry points still materialize the (B, N) bitmap once at
+  loop exit for ``SearchResult.scored``, so when even that single
+  allocation is too large, drive :func:`init_state` / :func:`plan_step` /
+  :func:`commit_scores` directly, as the serving engine does — that path
+  never materializes it).
+  Both backends are **bit-exact** to each other: same pool ids/dists,
+  ``n_calls``, ``n_steps`` and scored set (the sorted backend materializes
+  the equivalent bitmap once, after the loop, for :class:`SearchResult`);
 * an explicit ``quota`` bounds the number of distance calls per query:
   candidates that would exceed the quota are masked out (never scored, never
   used), so the search is *exactly* budget-feasible per query, not just in
@@ -40,13 +68,21 @@ metric is a lazily-evaluated model forward pass) drive the identical loop
 from the host: plan on device, score through the tower, commit on device.
 
 The same plan/commit wave runs **device-parallel** over a corpus mesh
-(:func:`sharded_greedy_search`): each device owns a contiguous corpus block
-and the matching column slice of the scored bitmap, waves are scored by a
-psum of shard-local fused gathers, and the pools stay replicated — every
-device runs the identical merge on the identical replicated wave, so the
-sharded engine is *bit-exact* vs the unsharded one (pool ids/dists, n_calls
-and the scored bitmap). ``ShardCtx`` is the per-step handle; the collectives
-live in ``repro.distributed.collectives``.
+(:func:`sharded_greedy_search`): each device owns a contiguous corpus block,
+waves are scored by a psum of shard-local fused gathers, and the pools stay
+replicated — every device runs the identical merge on the identical
+replicated wave, so the sharded engine is *bit-exact* vs the unsharded one
+(pool ids/dists, n_calls and the scored set). The dedup backends shard
+differently: the ``bitmap`` is **column-sharded** — each device holds the
+(B, N/shards) slice of the columns it owns, lookups psum-OR the owner's
+answer, scatters land on the owner only — while the ``sorted`` set is
+**replicated like the pools** — (B, quota) per device, every membership op
+collective-free. That is the memory trade: column-sharding divides the
+O(B·N) bitmap across the mesh but pays a collective per lookup; the
+replicated set costs O(B·quota) per device (independent of N *and* of the
+shard count) and removes the dedup collective from the wave entirely.
+``ShardCtx`` is the per-step handle; the collectives live in
+``repro.distributed.collectives``.
 """
 from __future__ import annotations
 
@@ -54,6 +90,7 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.kernels import ops
@@ -77,18 +114,55 @@ class ShardCtx(NamedTuple):
     n_local: int
 
 
+class ScoredSet(NamedTuple):
+    """Quota-proportional dedup state: per-query sorted membership arrays.
+
+    ``ids`` (B, C) int32 ascending with ``repro.kernels.ops.SET_PAD``
+    padding; the static capacity C must be >= every per-query quota, so the
+    engine's exact quota accounting (one insertion per counted call,
+    ``n_calls <= quota``) guarantees no entry is ever dropped. ``count``
+    (B,) is the set's occupancy — insertions so far, i.e. ``n_calls``
+    minus any ``calls_init``; the search itself never branches on it (the
+    quota mask already bounds insertions), it exists as the overflow
+    diagnostic: ``count <= capacity`` must hold at every step. Duplicate
+    ids inside one E=1 adjacency row occupy one slot each, exactly
+    mirroring their ``n_calls`` cost. C = 0 is a valid zero-capacity set
+    (quota-0 rows): every op degenerates to a no-op.
+
+    Under a :class:`ShardCtx` the set is **replicated** across the shard
+    axis, like the pools — membership ops are collective-free.
+    """
+
+    ids: Array  # (B, C) int32 ascending; SET_PAD padded
+    count: Array  # (B,) int32 insertions so far
+
+    @property
+    def capacity(self) -> int:
+        return self.ids.shape[1]
+
+
+def empty_scored_set(batch: int, capacity: int) -> ScoredSet:
+    return ScoredSet(
+        ids=jnp.full((batch, capacity), ops.SET_PAD, jnp.int32),
+        count=jnp.zeros((batch,), jnp.int32),
+    )
+
+
 class BatchedSearchState(NamedTuple):
     """Per-query search state, batch-leading. All shapes are static.
 
-    Under a :class:`ShardCtx`, ``scored`` is the device-local (B, n_local)
-    column slice of the global (B, N) bitmap; all other fields are
+    ``scored`` is the dedup state: the dense (B, N) bool bitmap *or* a
+    :class:`ScoredSet` (the quota-proportional sorted backend) — every
+    consumer dispatches on the type. Under a :class:`ShardCtx` the bitmap
+    form is the device-local (B, n_local) column slice of the global (B, N)
+    bitmap while the sorted form stays replicated; all other fields are
     replicated across the shard axis (the replicated-pool invariant).
     """
 
     pool_ids: Array  # (B, P) int32, sorted by dist; -1 pad
     pool_dists: Array  # (B, P) f32; +inf pad
     expanded: Array  # (B, P) bool
-    scored: Array  # (B, N) bool bitmap — dedup + exact call counting
+    scored: Array | ScoredSet  # dedup state + exact call counting
     n_calls: Array  # (B,) int32
     n_steps: Array  # (B,) int32
 
@@ -110,8 +184,112 @@ def _positional_dedup(ids: Array) -> Array:
     return jnp.where(dup.any(axis=-1), -1, ids)
 
 
-def _scored_lookup(scored: Array, ids: Array, shard: ShardCtx | None) -> Array:
-    """(B, K) bool: which (valid) ids are already marked in the bitmap."""
+def _static_quota_bound(quota) -> int | None:
+    """max(quota) as a static int, or None when quota is a traced value.
+
+    Python ints, numpy scalars/arrays and *concrete* jax arrays all have a
+    static bound; a tracer (e.g. a jitted operand) does not — note that
+    merely wrapping a constant in ``jnp`` ops inside a trace stages it, so
+    the tracer check must come before any conversion.
+    """
+    if isinstance(quota, jax.core.Tracer):
+        return None
+    return int(np.max(np.asarray(quota)))
+
+
+def resolve_dedup(
+    dedup: str,
+    set_capacity: int | None,
+    quota,
+    n_points: int,
+    scored_init=None,
+    *,
+    drive: str = "host",
+) -> tuple[str, int | None]:
+    """Pick the dedup backend -> ``("bitmap", None) | ("sorted", capacity)``.
+
+    ``"auto"`` selects ``sorted`` exactly when the quota bound is *static*
+    (concrete at trace time) and smaller than the corpus — the regime where
+    O(quota) membership state beats the O(N) bitmap; a traced quota (no
+    static bound), an unbounded quota, or a continued bitmap
+    (``scored_init``) falls back to ``bitmap``. An explicit backend is
+    honored as given; ``sorted`` derives its capacity from the static quota
+    bound when ``set_capacity`` is None.
+
+    ``drive`` qualifies the auto rule by loop shape. ``"host"`` (the
+    serving engine's dispatch-per-step stage 2) applies the rule above: the
+    non-donated bitmap is round-tripped through every dispatch, so
+    quota-proportional state wins by the corpus/quota ratio — ~9x at
+    quota 256 on a 1M-row corpus (the gated BENCH_search_perf dedup
+    scenario). ``"fused"`` (one jitted
+    ``while_loop`` — :func:`batched_greedy_search` and the stage-1 /
+    bi-metric paths) keeps the bitmap on auto: XLA aliases the loop carry,
+    making the bitmap's per-step cost O(wave) regardless of N, and the
+    sorted merge measures slower there on CPU at every N that fits memory
+    (recorded in the same bench scenario). Explicit ``dedup="sorted"``
+    still opts a fused loop into O(quota) state — the right call when the
+    bitmap itself is the memory problem (huge N × batch, or accelerator
+    HBM budgets).
+    """
+    if dedup == "bitmap":
+        return "bitmap", None
+    if dedup == "auto" and drive == "fused" and not isinstance(
+            scored_init, ScoredSet):
+        return "bitmap", None
+    if scored_init is not None and not isinstance(scored_init, ScoredSet):
+        if dedup == "sorted":
+            raise ValueError(
+                "dedup='sorted' cannot continue a bitmap scored_init")
+        return "bitmap", None
+    if isinstance(scored_init, ScoredSet):
+        return "sorted", scored_init.capacity
+    if dedup not in ("sorted", "auto"):
+        raise ValueError(f"unknown dedup backend {dedup!r}")
+    qmax = _static_quota_bound(quota)
+    if set_capacity is None:
+        if qmax is None:
+            if dedup == "sorted":
+                raise ValueError(
+                    "dedup='sorted' with a traced quota needs an explicit "
+                    "static set_capacity")
+            return "bitmap", None  # auto: no static quota bound -> bitmap
+        set_capacity = qmax
+    elif qmax is not None and qmax <= NO_QUOTA // 2 and set_capacity < qmax:
+        # an undersized set would silently drop scored ids (dedup holes)
+        raise ValueError(f"set_capacity={set_capacity} < quota bound {qmax}")
+    set_capacity = max(int(set_capacity), 0)
+    if dedup == "auto" and set_capacity >= n_points:
+        return "bitmap", None  # the bitmap is the smaller structure
+    return "sorted", set_capacity
+
+
+def scored_set_to_bitmap(sset: ScoredSet, n_points: int) -> Array:
+    """Materialize the (B, N) bool bitmap a ScoredSet is equivalent to.
+
+    One scatter outside the hot loop — used to keep ``SearchResult.scored``
+    backend-independent (bit-identical across backends).
+    """
+    b, c = sset.ids.shape
+    bitmap = jnp.zeros((b, n_points), dtype=bool)
+    if c == 0:
+        return bitmap
+    rows = jnp.arange(b)[:, None]
+    valid = sset.ids != ops.SET_PAD
+    # pads clip onto column n-1 with valid=False, so .max() is a no-op there
+    return bitmap.at[rows, jnp.clip(sset.ids, 0, n_points - 1)].max(valid)
+
+
+def _scored_lookup(
+    scored: Array | ScoredSet, ids: Array, shard: ShardCtx | None
+) -> Array:
+    """(B, K) bool: which (valid) ids are already in the dedup state."""
+    if isinstance(scored, ScoredSet):
+        if shard is None:
+            return ops.sorted_set_lookup(scored.ids, ids)
+        from repro.distributed import collectives
+
+        return collectives.member_lookup(
+            scored.ids, ids, axis_name=shard.axis_name)
     if shard is None:
         return (ids >= 0) & jnp.take_along_axis(
             scored, jnp.maximum(ids, 0), axis=1
@@ -122,9 +300,22 @@ def _scored_lookup(scored: Array, ids: Array, shard: ShardCtx | None) -> Array:
 
 
 def _scored_scatter(
-    scored: Array, ids: Array, mark: Array, shard: ShardCtx | None
-) -> Array:
-    """Mark the kept lanes' ids in the (local slice of the) bitmap."""
+    scored: Array | ScoredSet, ids: Array, mark: Array,
+    shard: ShardCtx | None,
+) -> Array | ScoredSet:
+    """Mark the kept lanes' ids in the dedup state (backend dispatch)."""
+    if isinstance(scored, ScoredSet):
+        if shard is None:
+            merged = ops.sorted_set_merge(
+                scored.ids, jnp.where(mark, ids, ops.SET_PAD))
+        else:
+            from repro.distributed import collectives
+
+            merged = collectives.member_insert(
+                scored.ids, ids, mark, axis_name=shard.axis_name)
+        return ScoredSet(
+            ids=merged,
+            count=scored.count + mark.sum(axis=1, dtype=jnp.int32))
     if shard is None:
         rows = jnp.arange(ids.shape[0])[:, None]
         # scatter-OR (max): padding ids all alias index 0, so a plain set()
@@ -142,18 +333,26 @@ def init_state(
     n_points: int,
     pool_size: int,
     quota: Array,
-    scored_init: Array | None = None,
+    scored_init: Array | ScoredSet | None = None,
     calls_init: Array | int = 0,
     shard: ShardCtx | None = None,
+    dedup: str = "bitmap",
+    set_capacity: int | None = None,
 ) -> tuple[BatchedSearchState, Array, Array]:
     """Empty pools + the entry wave, quota-masked but not yet scored.
 
     Returns ``(state, safe_entries (B, E0), keep (B, E0))``; the caller scores
     ``safe_entries`` (ids < 0 are masked) and feeds the result to
     :func:`commit_scores`. ``scored`` / ``n_calls`` already account for the
-    kept entries — a wave is paid for when it is planned. Under a
+    kept entries — a wave is paid for when it is planned.
+
+    ``dedup`` selects the dedup backend *concretely* (``"bitmap"`` or
+    ``"sorted"`` — resolve ``"auto"`` first via :func:`resolve_dedup`);
+    ``set_capacity`` is the sorted backend's static capacity (>= the max
+    quota; 0 is a valid zero-capacity set for all-quota-0 batches). Under a
     :class:`ShardCtx` the bitmap is allocated as the device-local
-    (B, n_local) slice and entry marks land on their owning shard.
+    (B, n_local) column slice (entry marks land on their owning shard)
+    while the sorted set is replicated.
     """
     b, e = entry_ids.shape
     entry_ids = _positional_dedup(entry_ids.astype(jnp.int32))
@@ -164,12 +363,15 @@ def init_state(
     keep = valid & (order_idx < (quota - calls0)[:, None])
     safe = jnp.where(keep, entry_ids, -1)
 
-    n_cols = n_points if shard is None else shard.n_local
-    scored = (
-        jnp.zeros((b, n_cols), dtype=bool)
-        if scored_init is None
-        else scored_init
-    )
+    if scored_init is not None:
+        scored = scored_init
+    elif dedup == "sorted":
+        if set_capacity is None:
+            raise ValueError("dedup='sorted' needs a static set_capacity")
+        scored = empty_scored_set(b, int(set_capacity))
+    else:
+        n_cols = n_points if shard is None else shard.n_local
+        scored = jnp.zeros((b, n_cols), dtype=bool)
     scored = _scored_scatter(scored, safe, keep, shard)
     n_calls = calls0 + keep.sum(axis=1, dtype=jnp.int32)
 
@@ -330,11 +532,13 @@ def batched_greedy_search(
     quota: int | Array = NO_QUOTA,
     expand_width: int = 1,
     max_steps: int | Array | None = None,
-    scored_init: Array | None = None,
+    scored_init: Array | ScoredSet | None = None,
     calls_init: Array | int = 0,
     use_fused_merge: bool = False,
     interpret: bool = False,
     shard: ShardCtx | None = None,
+    dedup: str = "auto",
+    set_capacity: int | None = None,
 ) -> SearchResult:
     """Greedy beam search over ``adjacency`` for a whole query batch.
 
@@ -365,11 +569,21 @@ def batched_greedy_search(
         bitonic kernel (TPU) instead of the stable jnp merge.
       shard: run the loop device-parallel inside a ``shard_map`` over a
         corpus mesh — ``dist_fn_batch`` must then be the wave-gather
-        collective and ``scored`` is the local bitmap slice (callers use
-        :func:`sharded_greedy_search`, which sets all of this up).
+        collective and the bitmap form of ``scored`` is the local column
+        slice (callers use :func:`sharded_greedy_search`, which sets all of
+        this up).
+      dedup / set_capacity: dedup-state backend — ``"auto"`` (default)
+        resolves via :func:`resolve_dedup` with ``drive="fused"`` (this is
+        one jitted while_loop, where the aliased bitmap carry wins on CPU);
+        ``"bitmap"`` / ``"sorted"`` force a backend (``"sorted"`` = the
+        O(quota)-state :class:`ScoredSet`, the memory-bound choice). The
+        backends are bit-exact to each other; ``SearchResult.scored`` is
+        always the (B, N) bitmap (the sorted backend materializes it once,
+        after the loop).
 
     Returns a batch-leading SearchResult, pools sorted ascending by distance
-    (under ``shard``, ``scored`` is the local (B, n_local) slice).
+    (under ``shard`` with the bitmap backend, ``scored`` is the local
+    (B, n_local) slice).
     """
     adjacency = adjacency.astype(jnp.int32)
     n, _ = adjacency.shape
@@ -396,6 +610,8 @@ def batched_greedy_search(
         except jax.errors.ConcretizationTypeError:
             bw_cap = 0
         P = max(pool_size, bw_cap, e0)
+    dedup, set_capacity = resolve_dedup(
+        dedup, set_capacity, quota, n_points, scored_init, drive="fused")
     quota = jnp.broadcast_to(jnp.asarray(quota, jnp.int32), (b,))
 
     state, safe, keep = init_state(
@@ -406,6 +622,8 @@ def batched_greedy_search(
         scored_init=scored_init,
         calls_init=calls_init,
         shard=shard,
+        dedup=dedup,
+        set_capacity=set_capacity,
     )
     state = commit_scores(
         state, safe, keep, dist_fn_batch(query_ctx, safe),
@@ -433,10 +651,15 @@ def batched_greedy_search(
         )
 
     final = lax.while_loop(cond, body, state)
+    scored = final.scored
+    if isinstance(scored, ScoredSet):
+        # one scatter outside the hot loop keeps the result's scored field
+        # backend-independent (bit-identical to the bitmap backend's)
+        scored = scored_set_to_bitmap(scored, n_points)
     return SearchResult(
         final.pool_ids,
         final.pool_dists,
-        final.scored,
+        scored,
         final.n_calls,
         final.n_steps,
     )
@@ -483,6 +706,8 @@ def sharded_greedy_search(
     use_pallas: bool = False,
     use_fused_merge: bool = False,
     interpret: bool = False,
+    dedup: str = "auto",
+    set_capacity: int | None = None,
 ) -> SearchResult:
     """Device-parallel batched greedy search over a sharded corpus.
 
@@ -490,12 +715,19 @@ def sharded_greedy_search(
     device of a 1-D mesh (built over the first ``shards`` local devices when
     ``mesh`` is None). Inside ``shard_map`` each device gathers and scores
     the wave lanes it owns with the fused local gather→score kernel; a psum
-    over the shard axis reconstructs the replicated wave, the already-scored
-    lookup OR-reduces the per-shard bitmap slices, and the bitmap scatter
-    lands on the owning shard. Pools, call counters and step counters are
-    replicated — every device runs the identical plan and merge, so the
-    result (including the all-gathered scored bitmap) is **bit-exact** vs
-    :func:`batched_greedy_search` with :func:`fused_dist_fn` on one device.
+    over the shard axis reconstructs the replicated wave. Pools, call
+    counters and step counters are replicated — every device runs the
+    identical plan and merge, so the result (including the scored set) is
+    **bit-exact** vs :func:`batched_greedy_search` with
+    :func:`fused_dist_fn` on one device.
+
+    Dedup state under the mesh (``dedup`` resolves like the unsharded
+    engine's): the ``bitmap`` backend column-shards the (B, N) bitmap —
+    lookups psum-OR the owning shard's answer, scatters land on the owner —
+    while the ``sorted`` backend keeps the (B, quota) :class:`ScoredSet`
+    replicated like the pools, so its per-device dedup state is independent
+    of both N and the shard count and its membership ops are
+    collective-free.
 
     ``shards=1`` short-circuits to the single-device engine (today's path).
     """
@@ -514,7 +746,12 @@ def sharded_greedy_search(
             adjacency, query_embs, entry_ids, n_points=n_points,
             beam_width=beam_width, pool_size=pool_size, quota=quota,
             expand_width=expand_width, max_steps=max_steps,
-            use_fused_merge=use_fused_merge, interpret=interpret)
+            use_fused_merge=use_fused_merge, interpret=interpret,
+            dedup=dedup, set_capacity=set_capacity)
+    # resolve the backend on the host (quota is concrete here) so the mesh
+    # program is built against one concrete dedup structure
+    dedup, set_capacity = resolve_dedup(
+        dedup, set_capacity, quota, n_points, drive="fused")
 
     axis = axis_name or SEARCH_AXIS
     stacked, n_local = shard_corpus(corpus, shards)
@@ -544,21 +781,26 @@ def sharded_greedy_search(
             dist_fn, adj, q_embs, entries, n_points=n_points,
             beam_width=bw, pool_size=pool, quota=q,
             expand_width=expand_width, max_steps=ms,
-            use_fused_merge=use_fused_merge, interpret=interpret, shard=ctx)
+            use_fused_merge=use_fused_merge, interpret=interpret, shard=ctx,
+            dedup=dedup, set_capacity=set_capacity)
 
     rep2, rep1 = _P(None, None), _P(None)
+    # bitmap: local column slices -> global (B, S*nl); sorted: the program
+    # materializes the replicated (B, N) bitmap from the replicated set
+    scored_spec = _P(None, axis) if dedup == "bitmap" else rep2
     res = shard_map(
         program,
         mesh=mesh,
         in_specs=(_P(axis, None, None), rep2, rep2, rep2, rep1, rep1, rep1),
         out_specs=SearchResult(
-            pool_ids=rep2, pool_dists=rep2,
-            scored=_P(None, axis),  # local column slices -> global (B, S*nl)
+            pool_ids=rep2, pool_dists=rep2, scored=scored_spec,
             n_calls=rep1, n_steps=rep1),
     )(stacked, adjacency.astype(jnp.int32), query_embs,
       entry_ids.astype(jnp.int32), quota_arr, bw_arr, ms_arr)
-    # drop the zero-padding columns (global ids >= N never get scored)
-    return res._replace(scored=res.scored[:, :n_points])
+    if dedup == "bitmap":
+        # drop the zero-padding columns (global ids >= N never get scored)
+        res = res._replace(scored=res.scored[:, :n_points])
+    return res
 
 
 class ShardedStepper:
@@ -569,20 +811,28 @@ class ShardedStepper:
     metric is a lazily-evaluated model forward pass), so it drives
     :func:`plan_step` / :func:`commit_scores` from the host. This class is
     the sharded form of that drive loop: each method is a jitted
-    ``shard_map`` program over the corpus mesh in which the per-query scored
-    bitmap lives as (B, n_local) column slices — the bitmap lookup OR-reduces
-    the owning shard's answer and the scatter lands on the owner only
-    (``repro.distributed.collectives``), exactly like stage 1's
+    ``shard_map`` program over the corpus mesh. The dedup state follows the
+    backend chosen at :meth:`init`: the ``bitmap`` form lives as
+    (B, n_local) column slices — the lookup OR-reduces the owning shard's
+    answer, the scatter lands on the owner only
+    (``repro.distributed.collectives``) — while the ``sorted``
+    :class:`ScoredSet` form is replicated like the pools, shrinking the
+    per-device dedup state from (B, n_local) to (B, quota) and making every
+    membership op collective-free; both exactly like stage 1's
     :func:`sharded_greedy_search`. Pools, call and step counters stay
     replicated, every device plans the identical wave, and the host sees
     replicated ``safe`` / ``keep`` lanes to drain through the tower — so the
-    sharded stage 2 is **bit-exact** vs the single-device drive loop.
+    sharded stage 2 is **bit-exact** vs the single-device drive loop under
+    either backend.
 
     State produced by :meth:`init` must be threaded through :meth:`plan` /
     :meth:`commit` unmodified — its ``scored`` leaf carries the mesh
-    sharding between calls; everything stays on device until the final pools
-    are read off. ``beam_width`` / ``max_steps`` / ``quota`` are (B,)
-    operands, so mixed per-query budgets in one wave do not retrace.
+    sharding (or replication) between calls; everything stays on device
+    until the final pools are read off. ``beam_width`` / ``max_steps`` /
+    ``quota`` are (B,) operands, so mixed per-query budgets in one wave do
+    not retrace; the sorted backend's capacity is a static shape, so
+    callers should quantize it (the engine rounds up to a power of two) to
+    keep retraces bounded.
     """
 
     def __init__(self, *, shards: int, n_points: int, mesh=None,
@@ -599,14 +849,21 @@ class ShardedStepper:
         self._programs: dict = {}
 
     # ------------------------------------------------------------- internals
-    def _specs(self):
+    def _specs(self, dedup: str = "bitmap"):
         from jax.sharding import PartitionSpec as _P
 
         rep2, rep1 = _P(None, None), _P(None)
+        scored_spec = (
+            ScoredSet(ids=rep2, count=rep1)  # replicated, like the pools
+            if dedup == "sorted" else _P(None, self.axis_name))
         state_spec = BatchedSearchState(
             pool_ids=rep2, pool_dists=rep2, expanded=rep2,
-            scored=_P(None, self.axis_name), n_calls=rep1, n_steps=rep1)
+            scored=scored_spec, n_calls=rep1, n_steps=rep1)
         return rep2, rep1, state_spec
+
+    @staticmethod
+    def _dedup_of(state: BatchedSearchState) -> str:
+        return "sorted" if isinstance(state.scored, ScoredSet) else "bitmap"
 
     def _program(self, key, build):
         if key not in self._programs:
@@ -614,34 +871,43 @@ class ShardedStepper:
         return self._programs[key]
 
     # -------------------------------------------------------------- step API
-    def init(self, entry_ids: Array, quota: Array, *, pool_size: int
+    def init(self, entry_ids: Array, quota: Array, *, pool_size: int,
+             dedup: str = "bitmap", set_capacity: int | None = None,
              ) -> tuple[BatchedSearchState, Array, Array]:
-        """Sharded :func:`init_state`: the entry wave, bitmap column-sharded."""
+        """Sharded :func:`init_state`: the entry wave, dedup state
+        column-sharded (bitmap) or replicated (sorted). ``dedup`` must be
+        concrete here — the engine resolves "auto" and quantizes
+        ``set_capacity`` before calling."""
         from repro.launch.mesh import shard_map
 
-        rep2, rep1, state_spec = self._specs()
+        rep2, rep1, state_spec = self._specs(dedup)
 
         def build():
             def f(entries, q):
                 return init_state(
                     entries, n_points=self.n_points, pool_size=pool_size,
-                    quota=q, shard=self.ctx)
+                    quota=q, shard=self.ctx, dedup=dedup,
+                    set_capacity=set_capacity)
 
             return jax.jit(shard_map(
                 f, mesh=self.mesh, in_specs=(rep2, rep1),
                 out_specs=(state_spec, rep2, rep2)))
 
-        return self._program(("init", pool_size), build)(
+        return self._program(("init", pool_size, dedup, set_capacity),
+                             build)(
             jnp.asarray(entry_ids, jnp.int32), _per_query(
                 quota, entry_ids.shape[0]))
 
     def plan(self, state: BatchedSearchState, adjacency: Array, quota: Array,
              beam_width: Array, max_steps: Array, *, expand_width: int = 1
              ) -> tuple[BatchedSearchState, Array, Array, Array]:
-        """Sharded :func:`plan_step` (owner-only bitmap scatter, psum lookup)."""
+        """Sharded :func:`plan_step` (owner-only scatter + psum lookup for
+        the bitmap backend; collective-free replicated membership for the
+        sorted backend)."""
         from repro.launch.mesh import shard_map
 
-        rep2, rep1, state_spec = self._specs()
+        dedup = self._dedup_of(state)
+        rep2, rep1, state_spec = self._specs(dedup)
 
         def build():
             def f(s, adj, q, bw, ms):
@@ -655,16 +921,17 @@ class ShardedStepper:
                 out_specs=(state_spec, rep2, rep2, rep1)))
 
         b = state.pool_ids.shape[0]
-        return self._program(("plan", expand_width), build)(
+        return self._program(("plan", expand_width, dedup), build)(
             state, adjacency.astype(jnp.int32), _per_query(quota, b),
             _per_query(beam_width, b), _per_query(max_steps, b))
 
     def commit(self, state: BatchedSearchState, safe: Array, keep: Array,
                dists: Array) -> BatchedSearchState:
-        """Sharded :func:`commit_scores` (replicated merge, bitmap untouched)."""
+        """Sharded :func:`commit_scores` (replicated merge, dedup untouched)."""
         from repro.launch.mesh import shard_map
 
-        rep2, _, state_spec = self._specs()
+        dedup = self._dedup_of(state)
+        rep2, _, state_spec = self._specs(dedup)
 
         def build():
             return jax.jit(shard_map(
@@ -672,7 +939,7 @@ class ShardedStepper:
                 in_specs=(state_spec, rep2, rep2, rep2),
                 out_specs=state_spec))
 
-        return self._program(("commit",), build)(
+        return self._program(("commit", dedup), build)(
             state, safe, keep, jnp.asarray(dists, jnp.float32))
 
     def active_any(self, state: BatchedSearchState, quota: Array,
@@ -682,7 +949,8 @@ class ShardedStepper:
 
         from repro.launch.mesh import shard_map
 
-        _, rep1, state_spec = self._specs()
+        dedup = self._dedup_of(state)
+        _, rep1, state_spec = self._specs(dedup)
 
         def build():
             def f(s, q, bw, ms):
@@ -694,27 +962,33 @@ class ShardedStepper:
                 in_specs=(state_spec, rep1, rep1, rep1), out_specs=_P()))
 
         b = state.pool_ids.shape[0]
-        return bool(self._program(("active",), build)(
+        return bool(self._program(("active", dedup), build)(
             state, _per_query(quota, b), _per_query(beam_width, b),
             _per_query(max_steps, b)))
 
     def scored_count(self, state: BatchedSearchState) -> Array:
-        """(B,) global popcount of the partitioned bitmap (psum of locals) —
-        the partition invariant: no bit duplicated across shards, none lost."""
+        """(B,) distinct scored ids. Bitmap backend: psum of local popcounts
+        — the partition invariant (no bit duplicated across shards, none
+        lost). Sorted backend: the replicated set's unique count — the
+        replication invariant (every device computes the same answer)."""
         from repro.distributed import collectives
         from repro.launch.mesh import shard_map
 
-        _, rep1, state_spec = self._specs()
+        dedup = self._dedup_of(state)
+        _, rep1, state_spec = self._specs(dedup)
 
         def build():
             def f(s):
+                if isinstance(s.scored, ScoredSet):
+                    return collectives.member_count(
+                        s.scored.ids, axis_name=self.axis_name)
                 return collectives.bitmap_count(
                     s.scored, axis_name=self.axis_name)
 
             return jax.jit(shard_map(
                 f, mesh=self.mesh, in_specs=(state_spec,), out_specs=rep1))
 
-        return self._program(("count",), build)(state)
+        return self._program(("count", dedup), build)(state)
 
 
 def greedy_search(

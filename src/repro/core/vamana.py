@@ -238,11 +238,19 @@ def search(
 
     ``shards > 1`` runs the identical loop device-parallel over a corpus
     mesh (``repro.core.beam.sharded_greedy_search``) — bit-exact results,
-    the corpus and scored bitmap split across ``shards`` devices."""
+    the corpus (and any column-sharded dedup state) split across ``shards``
+    devices."""
     met = metric or index.config.metric
     L = beam_width or max(k, index.config.l_build)
     n = corpus_emb.shape[0]
     b = query_emb.shape[0]
+    if (quota is not None and jnp.ndim(quota) == 0
+            and not isinstance(quota, jax.core.Tracer)):
+        # normalize numpy scalars / 0-d arrays once at the boundary so the
+        # static dedup-backend resolution sees a concrete bound; (B,)
+        # vectors pass through as per-query budgets, and traced scalars
+        # stay traced (they degrade to the bitmap backend downstream)
+        quota = int(quota)
     stride = max(1, n // max(n_entries, 1))
     entries = jnp.concatenate([
         jnp.array([index.medoid], jnp.int32),

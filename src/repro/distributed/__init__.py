@@ -14,18 +14,30 @@ For the search engine, this package implements the **sharded corpus gather**
   with the fused local gather→score kernel, emitting the psum identity 0.0
   on foreign lanes, and one ``psum`` over the shard axis reconstructs the
   full wave bit-exactly (each id has exactly one owner and x + 0.0 == x).
-  The per-query scored bitmap is sharded the same way: lookups OR-reduce
-  the owning shard's answer (``collectives.bitmap_lookup``), scatters land
-  only on the owner (``collectives.bitmap_scatter``).
+  The dedup state follows the backend (see ``repro.core.beam``):
+
+  - the dense scored **bitmap** is column-sharded the same way — lookups
+    OR-reduce the owning shard's answer (``collectives.bitmap_lookup``),
+    scatters land only on the owner (``collectives.bitmap_scatter``) — at
+    (B, N/shards) per device plus one lookup collective per wave;
+  - the quota-proportional **sorted set** (``repro.core.beam.ScoredSet``,
+    auto-selected for quota-bounded searches) is *replicated like the
+    pools*: (B, quota) per device regardless of N and the shard count, and
+    its membership ops (``collectives.member_lookup`` /
+    ``member_insert`` / ``member_count``) are collective-free — the
+    dedup traffic leaves the wave entirely. That is the trade: divided
+    O(B·N) state + a per-wave collective, vs replicated O(B·quota) state
+    and none.
 * **The replicated-pool invariant** — pools, call counters and step
   counters stay replicated: every device runs the identical plan, quota
   mask and merge on identical replicated inputs, so the sharded engine is
   bit-exact vs the single-device engine (pool ids/dists, ``n_calls``, and
-  the all-gathered scored bitmap), and the only cross-device traffic per
-  step is the (B, K) wave psum + the (B, K) bitmap-lookup reduce. For
-  merges of *independent per-shard* candidate sets (the scatter-gather path
-  in ``repro.core.distributed``), ``collectives.gather_topk_merge`` cuts
-  each shard to its top-k before the all-gather.
+  the scored set), and the only cross-device traffic per step is the
+  (B, K) wave psum (+ the (B, K) bitmap-lookup reduce under the bitmap
+  backend). For merges of *independent per-shard* candidate sets (the
+  scatter-gather path in ``repro.core.distributed``),
+  ``collectives.gather_topk_merge`` cuts each shard to its top-k before
+  the all-gather.
 
 Also here: the model-parallel sharding rules (``sharding``), the ring
 collective-matmuls (``collectives``), and GPipe pipelining (``pipeline``).

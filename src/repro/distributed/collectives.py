@@ -33,6 +33,14 @@ every query's scored bitmap; pools stay replicated:
 * ``bitmap_count``: per-query psum popcount of the partitioned bitmap — the
   partition invariant (each bit owned by exactly one shard) makes the psum
   of local counts the exact global count.
+* ``member_lookup`` / ``member_insert`` / ``member_count``: the same three
+  operations against the **quota-proportional sorted dedup set**
+  (``repro.core.beam.ScoredSet``). Unlike the column-sharded bitmap, the
+  (B, quota) set is *replicated* like the pools — every device holds the
+  identical ascending id rows — so all three are collective-free local ops:
+  the per-device dedup state shrinks from (B, N/shards) to (B, quota) and
+  the bitmap-lookup psum disappears from the wave entirely. The axis
+  argument is accepted (and ignored) so call sites stay backend-agnostic.
 * ``gather_topk_merge``: the scatter-gather merge — per-shard top-k cut
   (``ops.local_topk``) before an ``all_gather``, so merge traffic is O(k)
   per query instead of O(n_local).
@@ -122,6 +130,40 @@ def bitmap_count(scored_local: Array, *, axis_name: str) -> Array:
         scored_local.sum(axis=1, dtype=jnp.int32), axis_name)
 
 
+def member_lookup(set_ids: Array, ids: Array, *, axis_name: str) -> Array:
+    """Membership test against the replicated sorted dedup set.
+
+    ``set_ids`` (B, C) are the ascending id rows of a
+    ``repro.core.beam.ScoredSet`` — replicated across the axis like the
+    pools, so the lookup is one local ``searchsorted`` per row with no
+    collective at all (compare :func:`bitmap_lookup`'s psum-OR).
+    """
+    del axis_name  # replicated state: no collective needed
+    return ops.sorted_set_lookup(set_ids, ids)
+
+
+def member_insert(set_ids: Array, ids: Array, mark: Array, *,
+                  axis_name: str) -> Array:
+    """Insert the marked lanes' ids into the replicated sorted set.
+
+    Every device performs the identical merge on identical replicated
+    inputs, which *is* the replication invariant — the sorted-set analogue
+    of :func:`bitmap_scatter`'s owner-only discipline.
+    """
+    del axis_name
+    return ops.sorted_set_merge(
+        set_ids, jnp.where(mark, ids, ops.SET_PAD))
+
+
+def member_count(set_ids: Array, *, axis_name: str) -> Array:
+    """(B,) distinct scored ids in the replicated set — the exact number
+    :func:`bitmap_count` psums out of the partitioned bitmap, computed
+    locally (duplicate slots from the E=1 duplicate-lane quirk collapse).
+    """
+    del axis_name
+    return ops.sorted_set_unique_count(set_ids)
+
+
 def gather_topk_merge(ids_local: Array, dists_local: Array, k: int, *,
                       axis_name: str) -> tuple[Array, Array]:
     """Per-shard top-k cut, then all-gather + merge into a global top-k.
@@ -130,9 +172,10 @@ def gather_topk_merge(ids_local: Array, dists_local: Array, k: int, *,
     *global* ids (+inf-padded). Each shard keeps only its k best before the
     collective, so the gather moves (S, B, k) instead of (S, B, P). Ties
     across shards resolve to the lower shard index (the all-gather is
-    axis-ordered and the final cut is a stable top-k).
+    axis-ordered and the final cut is a stable top-k). Pools narrower than
+    ``k`` are padded to width k with (-1, +inf) sentinels by the cut itself.
     """
-    lids, ld = ops.local_topk(ids_local, dists_local, min(k, ids_local.shape[1]))
+    lids, ld = ops.local_topk(ids_local, dists_local, k)
     all_ids = lax.all_gather(lids, axis_name)  # (S, B, k)
     all_d = lax.all_gather(ld, axis_name)
     all_ids = jnp.moveaxis(all_ids, 0, 1).reshape(ids_local.shape[0], -1)

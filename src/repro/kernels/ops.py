@@ -74,9 +74,82 @@ def local_topk(ids, dists, k):
     The per-shard candidate cut applied *before* an all-gather merge: each
     shard sends only its k best (id, dist) pairs instead of its whole pool,
     shrinking the merge collective from O(n_local) to O(k) per query.
+
+    ``k`` may exceed the row width (small shard pools): the cut is clamped
+    to the width and the result padded with (-1, +inf) sentinel lanes, which
+    sort last in any downstream merge and are dropped by its final cut.
     """
-    neg, order = jax.lax.top_k(-dists.astype(jnp.float32), k)
-    return jnp.take_along_axis(ids, order, axis=1), -neg
+    width = ids.shape[1]
+    kk = min(k, width)
+    neg, order = jax.lax.top_k(-dists.astype(jnp.float32), kk)
+    out_ids = jnp.take_along_axis(ids, order, axis=1)
+    out_dists = -neg
+    if kk < k:
+        b = ids.shape[0]
+        out_ids = jnp.concatenate(
+            [out_ids, jnp.full((b, k - kk), -1, out_ids.dtype)], axis=1)
+        out_dists = jnp.concatenate(
+            [out_dists, jnp.full((b, k - kk), jnp.inf, out_dists.dtype)],
+            axis=1)
+    return out_ids, out_dists
+
+
+# Padding sentinel for the sorted-membership dedup arrays: larger than any
+# real vertex id, so pads always sort to the tail of an ascending row.
+SET_PAD = jnp.iinfo(jnp.int32).max
+
+
+def sorted_set_merge(set_ids, new_ids):
+    """Insert a wave of ids into per-row ascending membership arrays.
+
+    ``set_ids`` (B, C) int32 ascending with :data:`SET_PAD` padding;
+    ``new_ids`` (B, K) int32 with masked lanes set to ``SET_PAD``. Returns
+    the updated (B, C) ascending rows holding the C smallest of the union —
+    which is *every* real entry as long as the caller never inserts more
+    than C ids total (the quota guarantee of the beam engine: one insertion
+    per counted distance call, n_calls <= quota <= C).
+
+    The merge is the same smallest-C cut the pool merges take with
+    tie-stable ``lax.top_k`` — but on pure int keys a stable ascending
+    ``jnp.sort`` of the concatenated row computes it identically (equal
+    ids are indistinguishable) and measures ~5x faster on CPU than
+    ``top_k`` at k = C (XLA's TopK is tuned for k << width; the dedup cut
+    keeps *most* of the row). Duplicate entries (the E=1 engine's
+    duplicate-adjacency-lane quirk) are kept as distinct slots, exactly
+    mirroring their ``n_calls`` cost.
+    """
+    c = set_ids.shape[1]
+    if c == 0:  # zero-capacity set (quota-0 rows): insertion is a no-op
+        return set_ids
+    cat = jnp.concatenate([set_ids, new_ids.astype(jnp.int32)], axis=1)
+    return jnp.sort(cat, axis=1)[:, :c]
+
+
+def sorted_set_lookup(set_ids, ids):
+    """(B, K) bool membership of ``ids`` in ascending per-row sets.
+
+    One ``searchsorted`` per row (vmapped); lanes with id < 0 return False.
+    ``SET_PAD`` pads never match a real id, so no validity mask is needed.
+    """
+    c = set_ids.shape[1]
+    if c == 0:
+        return jnp.zeros(ids.shape, bool)
+    pos = jax.vmap(jnp.searchsorted)(set_ids, ids)
+    hit = jnp.take_along_axis(set_ids, jnp.minimum(pos, c - 1), axis=1) == ids
+    return (ids >= 0) & hit
+
+
+def sorted_set_unique_count(set_ids):
+    """(B,) distinct real ids per ascending row — the popcount the bitmap's
+    ``scored.sum()`` would give (duplicate slots collapse, pads don't count).
+    """
+    b, c = set_ids.shape
+    if c == 0:
+        return jnp.zeros((b,), jnp.int32)
+    first = jnp.ones((b, 1), bool)
+    distinct = jnp.concatenate(
+        [first, set_ids[:, 1:] != set_ids[:, :-1]], axis=1)
+    return (distinct & (set_ids != SET_PAD)).sum(axis=1, dtype=jnp.int32)
 
 
 def beam_merge_topk(beam_ids, beam_dists, cand_ids, cand_dists, *,

@@ -134,10 +134,21 @@ _STOP = object()  # lane-queue sentinel
 # jitted device-lane steps (shards == 1). beam_width / max_steps / quota ride
 # as (B,) operands so mixed per-query budgets in one wave do not retrace.
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("n_points", "pool_size"))
-def _init_j(entry_ids, quota, *, n_points, pool_size):
+@functools.partial(jax.jit, static_argnames=(
+    "n_points", "pool_size", "dedup", "set_capacity"))
+def _init_j(entry_ids, quota, *, n_points, pool_size, dedup, set_capacity):
     return beam.init_state(
-        entry_ids, n_points=n_points, pool_size=pool_size, quota=quota)
+        entry_ids, n_points=n_points, pool_size=pool_size, quota=quota,
+        dedup=dedup, set_capacity=set_capacity)
+
+
+def _round_capacity(quota_max: int) -> int:
+    """Static sorted-set capacity for a wave: max quota rounded up to the
+    next power of two, so heterogeneous request quotas fall into log-many
+    capacity buckets (bounded retraces) instead of one trace per distinct
+    quota. An all-quota-0 wave (admission padding only) gets a genuine
+    zero-capacity set — same program shape family, no bitmap fallback."""
+    return 0 if quota_max <= 0 else 1 << (int(quota_max) - 1).bit_length()
 
 
 @functools.partial(jax.jit, static_argnames=("expand_width",))
@@ -171,13 +182,24 @@ class BiMetricEngine:
 
     ``shards > 1`` runs the device side of **both** stages device-parallel
     over a corpus mesh. Stage 1 is :func:`repro.core.beam.sharded_greedy_search`
-    (corpus + scored bitmap split across ``shards`` devices, pools
-    replicated). Stage 2 keeps its host drive loop — the metric is the
-    expensive tower itself — but all its bookkeeping (plan, bitmap
-    lookup/scatter, commit) runs inside the mesh via
-    :class:`repro.core.beam.ShardedStepper`, so the (B, N) scored-bitmap
-    scatter, the hottest stage-2 op, shards exactly like stage 1. Results
-    are bit-exact vs ``shards=1``.
+    (corpus split across ``shards`` devices, pools replicated). Stage 2
+    keeps its host drive loop — the metric is the expensive tower itself —
+    but all its bookkeeping (plan, dedup lookup/insert, commit) runs inside
+    the mesh via :class:`repro.core.beam.ShardedStepper`. Results are
+    bit-exact vs ``shards=1``.
+
+    ``dedup`` selects stage 2's dedup-state backend: ``"sorted"`` carries a
+    quota-proportional (B, quota) sorted membership set through the wave
+    (capacity = the wave's max quota rounded up to a power of two, so mixed
+    budgets retrace at most log-many times; admission's quota-0 padding
+    rows ride along with zero insertions and an all-padding wave gets a
+    zero-capacity set), ``"bitmap"`` the dense (B, N) bitmap, and
+    ``"auto"`` (default) picks sorted whenever the wave's quota bound is
+    below N. Under ``shards > 1`` the sorted set is replicated like the
+    pools — per-device dedup state shrinks from (B, N/shards) to
+    (B, quota) and the bitmap-lookup collective leaves the wave. Both
+    backends are bit-exact to each other. Stage 1 (quota-unbounded proxy
+    search) always keeps the bitmap, per the same auto rule.
 
     ``max_batch`` / ``max_wait_ms`` / ``max_inflight`` configure the async
     admission pipeline (see :meth:`submit`); they are inert for the
@@ -189,13 +211,16 @@ class BiMetricEngine:
                  index_cfg: vamana.VamanaConfig | None = None,
                  tower_batch: int = 64, shards: int = 1,
                  max_batch: int = 8, max_wait_ms: float = 5.0,
-                 max_inflight: int = 2):
+                 max_inflight: int = 2, dedup: str = "auto"):
         self.cheap = cheap
         self.expensive = expensive
         self.corpus_tokens = corpus_tokens
         self.n = corpus_tokens.shape[0]
         self.tower_batch = tower_batch
         self.shards = shards
+        if dedup not in ("auto", "sorted", "bitmap"):
+            raise ValueError(f"unknown dedup backend {dedup!r}")
+        self.dedup = dedup
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1e3
         self.max_inflight = max(1, max_inflight)
@@ -337,12 +362,23 @@ class BiMetricEngine:
         ms_j = jnp.asarray(max_steps)
         tower_batches = 0
 
+        # dedup backend for the wave (host-driven drive: the non-donated
+        # bitmap would be copied through every dispatch, so auto favors the
+        # quota-proportional sorted set). Capacity is a static shape — the
+        # pow2 rounding keeps retraces bounded, and quota-0 padding rows
+        # never raise the wave's max.
+        dedup, cap = beam.resolve_dedup(
+            self.dedup, _round_capacity(int(quota_np.max())), quota_np,
+            self.n, drive="host")
+
         stepper = self._stepper
         if stepper is not None:
-            state, safe, keep = stepper.init(seeds, quota_j, pool_size=P)
+            state, safe, keep = stepper.init(
+                seeds, quota_j, pool_size=P, dedup=dedup, set_capacity=cap)
         else:
             state, safe, keep = _init_j(
-                seeds, quota_j, n_points=self.n, pool_size=P)
+                seeds, quota_j, n_points=self.n, pool_size=P, dedup=dedup,
+                set_capacity=cap)
         while True:
             safe_np = np.asarray(safe)
             tower_batches += yield ("drain", safe_np[np.asarray(keep)])

@@ -12,6 +12,12 @@ legacy vmap-baseline / batched / device-parallel sharded engine
 subprocess so the main test process keeps its single-device view), at
 shards ∈ {1, 2, 4} × quota/unbounded, plus an uneven-shard padding edge
 case (N not divisible by the device count).
+
+The dedup-backend suite pins the two dedup-state implementations (dense
+(B, N) bitmap vs the quota-proportional sorted membership set) bit-exact
+against each other — same pool ids/dists, ``n_calls``, ``n_steps`` and
+scored set — across quota {1, 17, N} × shards {1, 2, 4} × uneven N, plus
+the ``auto`` selection rule and the zero-capacity (quota 0) edge.
 """
 import os
 import subprocess
@@ -23,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import _legacy_beam, distances
+from repro.core import _legacy_beam, beam, distances
 from repro.core.beam import (NO_QUOTA, batched_greedy_search, greedy_search)
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
@@ -162,6 +168,114 @@ def test_expand_width_respects_quota_and_order():
             assert int(np.asarray(res.scored[b]).sum()) == int(calls[b])
 
 
+# ----------------------------------------------------- dedup-backend parity
+@pytest.mark.parametrize("n", [130, 97])
+@pytest.mark.parametrize("quota_kind", ["one", "mid", "full"])
+def test_dedup_backend_parity(n, quota_kind):
+    """bitmap vs sorted are bit-exact: pool ids/dists, n_calls, n_steps and
+    the scored set, at quota ∈ {1, 17, N} on uneven-N random graphs."""
+    quota = {"one": 1, "mid": 17, "full": n}[quota_kind]
+    adj, emb, qs = _random_graph(seed=n + quota, n=n)
+    em = distances.EmbeddingMetric(emb)
+    entries = jnp.broadcast_to(jnp.array([0, n // 2, n - 1], jnp.int32),
+                               (5, 3))
+    kw = dict(n_points=n, beam_width=8, pool_size=16, quota=quota,
+              max_steps=200)
+    bm = batched_greedy_search(em.dists_batch, adj, qs, entries,
+                               dedup="bitmap", **kw)
+    ss = batched_greedy_search(em.dists_batch, adj, qs, entries,
+                               dedup="sorted", **kw)
+    for name, a, b in zip(bm._fields, bm, ss):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (name, quota)
+    assert ss.scored.shape == (5, n)  # materialized, backend-independent
+    assert (np.asarray(ss.n_calls) <= quota).all()
+
+
+def test_dedup_auto_selection():
+    """host-driven auto -> sorted iff the quota bound is static and < N;
+    fused-loop auto keeps the aliased bitmap; explicit backends are
+    honored; undersized capacities are rejected."""
+    # fused while_loop drive: the bitmap carry aliases, auto keeps it
+    assert beam.resolve_dedup(
+        "auto", None, 17, 128, drive="fused") == ("bitmap", None)
+    assert beam.resolve_dedup(
+        "sorted", None, 17, 128, drive="fused") == ("sorted", 17)
+    # host-driven (dispatch-per-step) drive: quota-bounded -> sorted
+    assert beam.resolve_dedup("auto", None, 17, 128) == ("sorted", 17)
+    assert beam.resolve_dedup("auto", None, np.int64(17), 128) == (
+        "sorted", 17)
+    assert beam.resolve_dedup(
+        "auto", None, np.array([3, 9, 17]), 128) == ("sorted", 17)
+    assert beam.resolve_dedup("auto", None, NO_QUOTA, 128) == ("bitmap", None)
+    assert beam.resolve_dedup("auto", None, 128, 128) == ("bitmap", None)
+    assert beam.resolve_dedup("bitmap", None, 17, 128) == ("bitmap", None)
+    assert beam.resolve_dedup("sorted", None, 128, 128) == ("sorted", 128)
+    # a continued bitmap forces the bitmap backend
+    assert beam.resolve_dedup(
+        "auto", None, 17, 128, jnp.zeros((1, 128), bool)) == ("bitmap", None)
+    with pytest.raises(ValueError):
+        beam.resolve_dedup("sorted", 8, 17, 128)  # capacity < quota bound
+
+    # a traced quota has no static bound: auto falls back to the bitmap
+    picked = []
+
+    def probe(q):
+        picked.append(beam.resolve_dedup("auto", None, q, 128))
+        return q
+
+    jax.jit(probe)(jnp.asarray(17))
+    assert picked == [("bitmap", None)]
+
+
+def test_dedup_zero_capacity():
+    """quota 0 rides the sorted backend as a genuine zero-capacity set
+    (admission's padded wave rows) — no crash, no calls, empty pools."""
+    adj, emb = _line_graph(16)
+    em = distances.EmbeddingMetric(emb)
+    qs = jnp.array([[3.0], [9.0]], jnp.float32)
+    res = batched_greedy_search(
+        em.dists_batch, adj, qs, jnp.zeros((2, 2), jnp.int32),
+        n_points=16, beam_width=4, quota=0, max_steps=50, dedup="sorted")
+    assert (np.asarray(res.n_calls) == 0).all()
+    assert not np.asarray(res.scored).any()
+    assert (np.asarray(res.pool_ids) == -1).all()
+    # the raw set ops degrade to no-ops at capacity 0
+    from repro.kernels import ops
+    empty = beam.empty_scored_set(2, 0)
+    assert not np.asarray(
+        ops.sorted_set_lookup(empty.ids, jnp.zeros((2, 3), jnp.int32))).any()
+    assert ops.sorted_set_merge(
+        empty.ids, jnp.zeros((2, 3), jnp.int32)).shape == (2, 0)
+    assert (np.asarray(ops.sorted_set_unique_count(empty.ids)) == 0).all()
+
+
+def test_dedup_mixed_quota_waves():
+    """A (B,) quota vector through the sorted backend: capacity is the max
+    quota, each row freezes at its own budget — bit-exact vs bitmap."""
+    adj, emb = _line_graph(64)
+    em = distances.EmbeddingMetric(emb)
+    qs = jnp.array([[63.0], [63.0], [63.0]], jnp.float32)
+    quotas = jnp.array([0, 7, 23], jnp.int32)  # quota-0 padding row included
+    kw = dict(n_points=64, beam_width=4, max_steps=500, quota=quotas)
+    bm = batched_greedy_search(
+        em.dists_batch, adj, qs, jnp.zeros((3, 1), jnp.int32),
+        dedup="bitmap", **kw)
+    ss = batched_greedy_search(
+        em.dists_batch, adj, qs, jnp.zeros((3, 1), jnp.int32),
+        dedup="sorted", **kw)
+    for name, a, b in zip(bm._fields, bm, ss):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), name
+    assert np.asarray(ss.n_calls).tolist() == [0, 7, 23]
+    # the set's occupancy invariant: count tracks insertions (== n_calls
+    # here) and never exceeds the static capacity
+    state, safe, keep = beam.init_state(
+        jnp.zeros((3, 1), jnp.int32), n_points=64, pool_size=8,
+        quota=quotas, dedup="sorted", set_capacity=23)
+    assert np.array_equal(np.asarray(state.scored.count),
+                          np.asarray(state.n_calls))
+    assert (np.asarray(state.scored.count) <= 23).all()
+
+
 # ----------------------------------------------------------- sharded parity
 def _run_sharded(body: str) -> str:
     """Run a snippet on 8 forced host devices in a clean subprocess."""
@@ -291,3 +405,68 @@ def test_sharded_plumb_through_vamana_and_bimetric():
         print("PLUMB_OK")
     """)
     assert "PLUMB_OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_dedup_backend_parity():
+    """bitmap vs sorted dedup under the mesh engine: quota {1, 17, N} ×
+    shards {1, 2, 4} × uneven N {130, 97} all bit-exact vs the unsharded
+    bitmap reference (the sorted set rides replicated, the bitmap
+    column-sharded — same answers either way), incl. exact scored-set
+    equality and n_calls. Also pins the ShardedStepper's sorted drive
+    (stage-2 shape) and its distinct-count vs the bitmap partition count."""
+    out = _run_sharded("""
+        from repro.core.beam import ShardedStepper
+
+        for n in (130, 97):
+            adj, emb, qs = random_graph(seed=n, n=n)
+            em = distances.EmbeddingMetric(emb)
+            entries = jnp.broadcast_to(
+                jnp.array([0, n // 2, n - 1], jnp.int32), (5, 3))
+            for quota in (1, 17, n):
+                base = batched_greedy_search(
+                    em.dists_batch, adj, qs, entries, n_points=n,
+                    beam_width=8, pool_size=16, quota=quota, max_steps=200,
+                    dedup="bitmap")
+                for dedup in ("bitmap", "sorted"):
+                    for shards in (1, 2, 4):
+                        res = sharded_greedy_search(
+                            emb, adj, qs, entries, shards=shards,
+                            metric="l2", beam_width=8, pool_size=16,
+                            quota=quota, max_steps=200, dedup=dedup)
+                        assert_same(base, res, (n, quota, dedup, shards))
+
+        # ShardedStepper: sorted vs bitmap host-driven drive, bit-exact
+        n = 97
+        adj, emb, qs = random_graph(seed=n, n=n, b=3)
+        em = distances.EmbeddingMetric(emb)
+        seeds = jnp.broadcast_to(jnp.array([0, 40, 90], jnp.int32), (3, 3))
+        quota = jnp.array([6, 15, 11], jnp.int32)
+        L = jnp.full((3,), 8, jnp.int32)
+        ms = jnp.full((3,), 60, jnp.int32)
+
+        def drive(shards, dedup, cap):
+            st = ShardedStepper(shards=shards, n_points=n)
+            state, safe, keep = st.init(
+                seeds, quota, pool_size=16, dedup=dedup, set_capacity=cap)
+            while True:
+                d = em.dists_batch(qs, safe)
+                state = st.commit(state, safe, keep, d)
+                if not st.active_any(state, quota, L, ms):
+                    break
+                state, safe, keep, _ = st.plan(state, adj, quota, L, ms)
+            return state, np.asarray(st.scored_count(state))
+
+        ref, ref_count = drive(2, "bitmap", None)
+        for shards in (2, 4):
+            got, got_count = drive(shards, "sorted", 16)
+            for name in ("pool_ids", "pool_dists", "n_calls", "n_steps"):
+                assert np.array_equal(
+                    np.asarray(getattr(ref, name)),
+                    np.asarray(getattr(got, name))), (shards, name)
+            # replication-invariant distinct count == partition-invariant
+            # bitmap popcount
+            assert np.array_equal(ref_count, got_count), (shards, got_count)
+        print("DEDUP_SHARDED_OK")
+    """)
+    assert "DEDUP_SHARDED_OK" in out

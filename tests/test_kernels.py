@@ -210,3 +210,40 @@ def test_xla_fallback_paths():
     o1 = ops.flash_attention(q, q, q, causal=True)
     o2 = ref.flash_attention_ref(q, q, q, causal=True)
     np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+def test_local_topk_clamps_and_pads():
+    """k > row width (small shard pools) must clamp to the width and pad
+    with (-1, +inf) sentinels instead of crashing lax.top_k."""
+    ids = jnp.array([[5, 9, 2], [7, 1, 4]], jnp.int32)
+    d = jnp.array([[0.3, 0.1, 0.5], [0.9, 0.2, 0.4]], jnp.float32)
+    oi, od = ops.local_topk(ids, d, 5)
+    assert oi.shape == (2, 5) and od.shape == (2, 5)
+    assert np.asarray(oi).tolist() == [[9, 5, 2, -1, -1], [1, 4, 7, -1, -1]]
+    np.testing.assert_array_equal(np.asarray(od[:, :3]),
+                                  np.sort(np.asarray(d), axis=1))
+    assert np.isinf(np.asarray(od[:, 3:])).all()
+    # k <= width keeps the historical cut bit-exactly
+    oi2, od2 = ops.local_topk(ids, d, 2)
+    assert np.asarray(oi2).tolist() == [[9, 5], [1, 4]]
+
+
+def test_sorted_set_ops():
+    """Membership set: ascending invariant, searchsorted lookup, duplicate
+    slots preserved, distinct count collapses them."""
+    pad = int(ops.SET_PAD)
+    s = jnp.full((2, 6), pad, jnp.int32)
+    wave1 = jnp.array([[4, 9, 1], [7, 7, 2]], jnp.int32)
+    s = ops.sorted_set_merge(s, wave1)
+    assert np.asarray(s).tolist() == [
+        [1, 4, 9, pad, pad, pad], [2, 7, 7, pad, pad, pad]]
+    hit = ops.sorted_set_lookup(s, jnp.array([[4, 5, -1], [7, 8, 2]],
+                                             jnp.int32))
+    assert np.asarray(hit).tolist() == [[True, False, False],
+                                        [True, False, True]]
+    # second wave: masked lanes ride as SET_PAD, order stays ascending
+    s = ops.sorted_set_merge(s, jnp.array([[3, pad], [pad, 11]], jnp.int32))
+    assert np.asarray(s).tolist() == [
+        [1, 3, 4, 9, pad, pad], [2, 7, 7, 11, pad, pad]]
+    # duplicate slots (the E=1 duplicate-lane quirk) collapse in the count
+    assert np.asarray(ops.sorted_set_unique_count(s)).tolist() == [4, 3]

@@ -74,3 +74,48 @@ def test_rerank_exact_budget(engine_parts):
     ids, dd, st = eng.rerank_query(eng.corpus_tokens[11], quota=16, k=5)
     assert st.D_calls <= 16
     assert (np.diff(dd) >= 0).all()
+
+
+def test_dedup_backends_bit_exact(engine_parts):
+    """Stage 2 on the sorted (quota-proportional) dedup state answers
+    exactly what the bitmap state answers, mixed quotas included."""
+    cheap, expensive, corpus = engine_parts
+    qs = corpus[[3, 40, 77]].copy()
+    quotas = np.array([4, 15, 9], np.int32)
+    results = {}
+    for dedup in ("bitmap", "sorted", "auto"):
+        eng = BiMetricEngine(cheap, expensive, corpus, dedup=dedup)
+        results[dedup] = eng.query_batch(qs, quota=quotas, k=5)
+    ids_ref, dd_ref, st_ref = results["bitmap"]
+    for dedup in ("sorted", "auto"):
+        ids, dd, st = results[dedup]
+        assert np.array_equal(ids, ids_ref), dedup
+        np.testing.assert_array_equal(dd, dd_ref)
+        assert [s.D_calls for s in st] == [s.D_calls for s in st_ref]
+    assert [s.D_calls for s in st_ref] == [4, 15, 9]
+
+
+def test_dedup_capacity_rounding_bounds_retraces(engine_parts):
+    """The wave capacity is the max quota rounded up to a power of two —
+    quota-0 padding rows never raise it, distinct quotas inside one bucket
+    share one trace, and an all-quota-0 wave gets a zero-capacity set."""
+    from repro.serve.engine import _round_capacity
+    assert _round_capacity(0) == 0
+    assert _round_capacity(1) == 1
+    assert _round_capacity(5) == 8
+    assert _round_capacity(8) == 8
+    assert _round_capacity(9) == 16
+    cheap, expensive, corpus = engine_parts
+    eng = BiMetricEngine(cheap, expensive, corpus, dedup="sorted")
+    # mixed wave incl. a quota-0 row (the padded-row shape) and a
+    # same-bucket wave: both run the sorted backend, answers match solo runs
+    ids_m, dd_m, st_m = eng.query_batch(
+        corpus[[3, 40, 77]].copy(),
+        quota=np.array([0, 12, 9], np.int32), k=5)
+    assert st_m[0].D_calls == 0 and (ids_m[0] == -1).all()
+    solo = BiMetricEngine(cheap, expensive, corpus, dedup="sorted")
+    for i, q in ((1, 12), (2, 9)):
+        ids1, dd1, s1 = solo.query(corpus[[3, 40, 77][i]], quota=q, k=5)
+        ok = (ids_m[i] >= 0) & np.isfinite(dd_m[i])
+        assert np.array_equal(ids1, ids_m[i][ok])
+        assert s1.D_calls == st_m[i].D_calls

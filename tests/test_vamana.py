@@ -79,3 +79,25 @@ def test_medoid(built):
     centroid = np.asarray(x).mean(0)
     dists = np.linalg.norm(np.asarray(x) - centroid, axis=1)
     assert dists[m] == pytest.approx(dists.min(), rel=1e-5)
+
+
+def test_search_normalizes_scalar_quota(built):
+    """numpy-scalar / 0-d array quotas must behave exactly like the python
+    int (the entry point normalizes once at the boundary — the static
+    dedup-backend selection depends on a concrete bound)."""
+    x, idx = built
+    qs = jax.random.normal(jax.random.PRNGKey(3), (4, 16))
+    ref_ids, ref_dd, ref_calls = vamana.search(
+        idx, x, qs, k=5, beam_width=12, quota=20)
+    for q in (np.int32(20), np.int64(20), np.asarray(20), jnp.asarray(20)):
+        ids, dd, calls = vamana.search(
+            idx, x, qs, k=5, beam_width=12, quota=q)
+        assert np.array_equal(np.asarray(ids), np.asarray(ref_ids)), type(q)
+        np.testing.assert_array_equal(np.asarray(dd), np.asarray(ref_dd))
+        assert np.array_equal(np.asarray(calls), np.asarray(ref_calls))
+    # (B,) per-query vectors pass through untouched
+    ids_v, _, calls_v = vamana.search(
+        idx, x, qs, k=5, beam_width=12,
+        quota=np.array([20, 20, 20, 20], np.int32))
+    assert np.array_equal(np.asarray(ids_v), np.asarray(ref_ids))
+    assert np.array_equal(np.asarray(calls_v), np.asarray(ref_calls))
