@@ -21,6 +21,12 @@ artifact is what CI gates on. ``parity_ok`` asserts the pipelined results
 are bit-exact vs the synchronous drive (ids, dists, and per-query budget
 accounting) — the gate pins it at 1.0 with zero tolerance.
 
+The pipelined run also reports the per-request wall-clock latency
+distribution (``submit()`` → future resolution, stamped by the engine in
+``ServeStats.latency_ms``): ``latency_p50_ms`` is CI-gated (direction
+*lower*, wide tolerance — 2-core host, contended percentiles) and
+``latency_p95_ms`` rides along for the trajectory.
+
 The expensive-tower document cache is reset between timed runs, so every
 mode pays the same tower work (the engine-lifetime cache would otherwise
 make whichever mode runs second look free).
@@ -114,6 +120,13 @@ def run() -> dict:
     eng1.close()
     eng2.close()
 
+    # per-request wall-clock latencies (submit -> future resolution),
+    # recorded by the engine in ServeStats.latency_ms — the double-buffered
+    # pipeline's serving-latency distribution over the measured stream
+    lats = np.array([s.latency_ms for _, _, s in res_pipe2])
+    lat_p50 = float(np.percentile(lats, 50))
+    lat_p95 = float(np.percentile(lats, 95))
+
     parity = all(
         np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1])
         and a[2].D_calls == b[2].D_calls and a[2].d_calls == b[2].d_calls
@@ -132,6 +145,8 @@ def run() -> dict:
          f"us_per_request;wall_s={wall_pipe2:.2f}")
     emit("serve_async/overlap_speedup", overlap,
          f"x_pipe1_over_pipe2;x_vs_sync={vs_sync:.2f};parity={parity}")
+    emit("serve_async/latency_p50", lat_p50 * 1e3,
+         f"us_per_request;p95_ms={lat_p95:.1f}")
 
     return {
         "n_requests": N_REQUESTS,
@@ -141,6 +156,8 @@ def run() -> dict:
         "wall_pipe1_s": wall_pipe1,
         "wall_pipe2_s": wall_pipe2,
         "us_per_request_pipe2": wall_pipe2 / N_REQUESTS * 1e6,
+        "latency_p50_ms": lat_p50,
+        "latency_p95_ms": lat_p95,
         "overlap_speedup": overlap,
         "pipeline_vs_sync": vs_sync,
         "max_D_calls": max_calls,

@@ -63,10 +63,34 @@ def _jsonable(obj):
     return str(obj)
 
 
+def bench_env() -> dict:
+    """The measurement environment, stamped into every artifact.
+
+    jax version + device kind/count make trajectory artifacts comparable
+    across PRs: a speedup measured on a different jax release or device
+    class is a different experiment, and the stamp makes that visible in
+    the committed baseline instead of reverse-engineering it from git
+    archaeology.
+    """
+    dev = jax.devices()[0]
+    return {
+        "jax_version": jax.__version__,
+        "platform": dev.platform,
+        "device_kind": dev.device_kind,
+        "device_count": jax.device_count(),
+    }
+
+
 def write_bench_json(slug: str, payload: dict) -> str:
-    """Write ``BENCH_<slug>.json`` to ``BENCH_OUT_DIR`` (default: cwd)."""
+    """Write ``BENCH_<slug>.json`` to ``BENCH_OUT_DIR`` (default: cwd).
+
+    Every artifact gets the :func:`bench_env` stamp under ``"env"`` (unless
+    the caller already provided one).
+    """
     out_dir = os.environ.get("BENCH_OUT_DIR", ".")
     os.makedirs(out_dir, exist_ok=True)
+    payload = dict(payload)
+    payload.setdefault("env", bench_env())
     path = os.path.join(out_dir, f"BENCH_{slug}.json")
     with open(path, "w") as f:
         json.dump(_jsonable(payload), f, indent=2, sort_keys=True)

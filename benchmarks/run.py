@@ -3,7 +3,10 @@
 Each row: ``name,us_per_call,derived`` CSV. Additionally, every benchmark's
 emitted rows (plus whatever dict its ``run()`` returns) are written to a
 machine-readable ``BENCH_<slug>.json`` artifact so the perf trajectory is
-tracked from PR to PR (``BENCH_OUT_DIR`` overrides the destination).
+tracked from PR to PR (``BENCH_OUT_DIR`` overrides the destination). Every
+artifact carries an ``env`` stamp (jax version, device platform/kind/count
+— see ``benchmarks.common.bench_env``) so baselines from different
+toolchains or hardware are distinguishable at a glance.
 
 ``--only <slug>[,<slug>...]`` runs a subset by artifact slug — the CI
 bench-gate uses ``--only search_perf`` and compares the fresh artifact

@@ -7,9 +7,11 @@ Two modes:
   ``benchmarks/gates.json``: for each gate, read the committed baseline
   artifact from ``--baseline-dir`` (default: repo root) and the freshly
   measured one from ``--new-dir``, and fail (exit 1) when any gated metric
-  regresses beyond its tolerance. ``--list-slugs`` prints the
-  comma-joined ``benchmarks/run.py --only`` slugs the manifest needs, so
-  the CI script measures exactly the gated artifacts.
+  regresses beyond its tolerance. The full gate table (measured vs
+  baseline vs bound/tolerance per gate) is printed on success as well as
+  failure, so every CI log records the actual numbers. ``--list-slugs``
+  prints the comma-joined ``benchmarks/run.py --only`` slugs the manifest
+  needs, so the CI script measures exactly the gated artifacts.
 
       python scripts/check_bench.py --manifest benchmarks/gates.json \\
           --baseline-dir . --new-dir <tmp>
@@ -49,31 +51,52 @@ def lookup(payload, dotted: str) -> float:
 
 
 def check_one(base: float, new: float, *, key: str, direction: str,
-              tolerance: float, artifact: str = "") -> bool:
-    """Print the verdict line; returns True when the gate passes."""
+              tolerance: float, artifact: str = "") -> tuple[bool, dict]:
+    """Evaluate one gate -> (passed, table row)."""
     if direction == "higher":
-        floor = base * (1.0 - tolerance)
-        ok = new >= floor
-        bound = f"floor={floor:.4f}"
+        bound = base * (1.0 - tolerance)
+        ok = new >= bound
         regress = 1.0 - new / base if base else 0.0
     elif direction == "lower":
-        ceil = base * (1.0 + tolerance)
-        ok = new <= ceil
-        bound = f"ceil={ceil:.4f}"
+        bound = base * (1.0 + tolerance)
+        ok = new <= bound
         regress = new / base - 1.0 if base else 0.0
     else:
         raise ValueError(f"unknown direction {direction!r}")
     tag = f"{artifact}:{key}" if artifact else key
-    verdict = "OK" if ok else "REGRESSION"
-    print(f"bench-gate {tag}: baseline={base:.4f} new={new:.4f} "
-          f"{bound} ({tolerance:.0%} tolerance, {direction} is better) "
-          f"-> {verdict}")
+    row = {
+        "gate": tag, "baseline": base, "measured": new, "bound": bound,
+        "tolerance": tolerance, "direction": direction,
+        "verdict": "OK" if ok else "REGRESSION",
+    }
     if not ok:
         print(f"FAIL: {tag} regressed {regress:.1%} "
               f"(> {tolerance:.0%} allowed) — if this is a real, justified "
               "tradeoff, re-measure and commit a new baseline artifact in "
               "the same PR.", file=sys.stderr)
-    return ok
+    return ok, row
+
+
+def print_gate_table(rows: list[dict]) -> None:
+    """The full gate table — printed on success AND failure, so every CI log
+    records what was measured against what, not just the verdict."""
+    if not rows:
+        print("bench-gate: no gates to check")
+        return
+    headers = ("gate", "baseline", "measured", "bound", "tol", "dir",
+               "verdict")
+    fmt_rows = [(
+        r["gate"], f"{r['baseline']:.4f}", f"{r['measured']:.4f}",
+        f"{r['bound']:.4f}", f"{r['tolerance']:.0%}", r["direction"],
+        r["verdict"],
+    ) for r in rows]
+    widths = [max(len(h), *(len(fr[i]) for fr in fmt_rows))
+              for i, h in enumerate(headers)]
+    line = "  ".join(h.ljust(w) for h, w in zip(headers, widths))
+    print(line)
+    print("-" * len(line))
+    for fr in fmt_rows:
+        print("  ".join(c.ljust(w) for c, w in zip(fr, widths)))
 
 
 def run_manifest(manifest_path: str, baseline_dir: str, new_dir: str) -> int:
@@ -89,15 +112,19 @@ def run_manifest(manifest_path: str, baseline_dir: str, new_dir: str) -> int:
         return loaded[path]
 
     failures = 0
+    rows = []
     for gate in gates:
         art = gate["artifact"]
         base = lookup(artifact_json(baseline_dir, art), gate["key"])
         new = lookup(artifact_json(new_dir, art), gate["key"])
-        if not check_one(base, new, key=gate["key"],
-                         direction=gate.get("direction", "higher"),
-                         tolerance=float(gate.get("tolerance", 0.2)),
-                         artifact=art):
+        ok, row = check_one(base, new, key=gate["key"],
+                            direction=gate.get("direction", "higher"),
+                            tolerance=float(gate.get("tolerance", 0.2)),
+                            artifact=art)
+        if not ok:
             failures += 1
+        rows.append(row)
+    print_gate_table(rows)
     print(f"bench-gate: {len(gates) - failures}/{len(gates)} gates passed")
     return 1 if failures else 0
 
@@ -141,8 +168,9 @@ def main(argv: list[str] | None = None) -> int:
         base = lookup(json.load(f), args.key)
     with open(args.fresh) as f:
         new = lookup(json.load(f), args.key)
-    ok = check_one(base, new, key=args.key, direction="higher",
-                   tolerance=args.tolerance)
+    ok, row = check_one(base, new, key=args.key, direction="higher",
+                        tolerance=args.tolerance)
+    print_gate_table([row])
     return 0 if ok else 1
 
 

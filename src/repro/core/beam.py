@@ -93,6 +93,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.kernels import backend as kernel_backend
 from repro.kernels import ops
 
 Array = jax.Array
@@ -501,10 +502,19 @@ def commit_scores(
     keep: Array,
     dists: Array,
     *,
-    use_fused_merge: bool = False,
-    interpret: bool = False,
+    backend: str | kernel_backend.Backend | None = None,
+    use_fused_merge: bool | None = None,
+    interpret: bool | None = None,
 ) -> BatchedSearchState:
-    """Merge a scored wave into the pools (masked lanes are +inf no-ops)."""
+    """Merge a scored wave into the pools (masked lanes are +inf no-ops).
+
+    ``backend`` selects the merge route (``"pallas"`` = the lane-padded
+    bitonic kernel; everything else = the stable XLA merge); the legacy
+    ``use_fused_merge`` / ``interpret`` kwargs remain as deprecated shims.
+    """
+    be = kernel_backend.resolve_backend(
+        backend, use_fused_merge=use_fused_merge, interpret=interpret,
+        _caller="beam.commit_scores")
     d = jnp.where(keep, dists.astype(jnp.float32), jnp.inf)
     pool_ids, pool_dists, expanded = ops.merge_pool_batch(
         state.pool_ids,
@@ -512,8 +522,7 @@ def commit_scores(
         state.expanded,
         safe,
         d,
-        use_pallas=use_fused_merge,
-        interpret=interpret,
+        backend=be,
     )
     return state._replace(
         pool_ids=pool_ids, pool_dists=pool_dists, expanded=expanded
@@ -534,8 +543,9 @@ def batched_greedy_search(
     max_steps: int | Array | None = None,
     scored_init: Array | ScoredSet | None = None,
     calls_init: Array | int = 0,
-    use_fused_merge: bool = False,
-    interpret: bool = False,
+    backend: str | kernel_backend.Backend | None = None,
+    use_fused_merge: bool | None = None,
+    interpret: bool | None = None,
     shard: ShardCtx | None = None,
     dedup: str = "auto",
     set_capacity: int | None = None,
@@ -565,8 +575,12 @@ def batched_greedy_search(
         scalar or (B,) for mixed per-query caps.
       scored_init / calls_init: continue an earlier search's accounting —
         used by the bi-metric stage-2 search (see bimetric.py).
-      use_fused_merge / interpret: route pool merges through the Pallas
-        bitonic kernel (TPU) instead of the stable jnp merge.
+      backend: merge-route selection (``repro.kernels.resolve_backend``
+        values — ``"pallas"`` runs the lane-padded bitonic pool merge, the
+        default keeps the stable XLA merge). Distance scoring is the
+        caller's ``dist_fn_batch``, so its backend is chosen where that
+        closure is built (:func:`fused_dist_fn`).
+      use_fused_merge / interpret: deprecated shims for ``backend``.
       shard: run the loop device-parallel inside a ``shard_map`` over a
         corpus mesh — ``dist_fn_batch`` must then be the wave-gather
         collective and the bitmap form of ``scored`` is the local column
@@ -612,6 +626,9 @@ def batched_greedy_search(
         P = max(pool_size, bw_cap, e0)
     dedup, set_capacity = resolve_dedup(
         dedup, set_capacity, quota, n_points, scored_init, drive="fused")
+    be = kernel_backend.resolve_backend(
+        backend, use_fused_merge=use_fused_merge, interpret=interpret,
+        _caller="beam.batched_greedy_search")
     quota = jnp.broadcast_to(jnp.asarray(quota, jnp.int32), (b,))
 
     state, safe, keep = init_state(
@@ -626,8 +643,7 @@ def batched_greedy_search(
         set_capacity=set_capacity,
     )
     state = commit_scores(
-        state, safe, keep, dist_fn_batch(query_ctx, safe),
-        use_fused_merge=use_fused_merge, interpret=interpret,
+        state, safe, keep, dist_fn_batch(query_ctx, safe), backend=be,
     )
 
     def cond(s: BatchedSearchState) -> Array:
@@ -646,8 +662,7 @@ def batched_greedy_search(
             shard=shard,
         )
         return commit_scores(
-            s, safe, keep, dist_fn_batch(query_ctx, safe),
-            use_fused_merge=use_fused_merge, interpret=interpret,
+            s, safe, keep, dist_fn_batch(query_ctx, safe), backend=be,
         )
 
     final = lax.while_loop(cond, body, state)
@@ -669,21 +684,27 @@ def fused_dist_fn(
     corpus: Array,
     metric: str = "sqeuclidean",
     *,
-    use_pallas: bool = False,
-    interpret: bool = False,
+    backend: str | kernel_backend.Backend | None = None,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
 ) -> Callable[[Array, Array], Array]:
-    """A ``dist_fn_batch`` that runs the fused gather→score kernel.
+    """A ``dist_fn_batch`` that runs the backend-dispatched gather→score.
 
-    ``query_ctx`` must then be the (B, dim) query embeddings. Off-TPU
-    (``use_pallas=False``) this is the jnp gather-then-reduce oracle, which
-    matches ``EmbeddingMetric`` up to fp association.
+    ``query_ctx`` must then be the (B, dim) query embeddings. The default
+    backend is the jnp gather-then-reduce oracle, which matches
+    ``EmbeddingMetric`` up to fp association; the matmul backends
+    (``"xla_matmul"`` / ``"pallas"`` / ``"auto"``) build the corpus-norm
+    cache **here, once** — the returned closure threads the prebuilt
+    :class:`repro.kernels.CorpusView` through every wave, so ``‖x‖²`` is
+    never re-reduced inside the hot loop.
     """
+    be = kernel_backend.resolve_backend(
+        backend, use_pallas=use_pallas, interpret=interpret,
+        _caller="beam.fused_dist_fn")
+    src = kernel_backend.as_corpus_view(corpus) if be.matmul else corpus
 
     def fn(q_embs: Array, ids: Array) -> Array:
-        return ops.gather_score(
-            corpus, q_embs, ids, metric=metric,
-            use_pallas=use_pallas, interpret=interpret,
-        )
+        return ops.gather_score(src, q_embs, ids, metric=metric, backend=be)
 
     return fn
 
@@ -703,9 +724,10 @@ def sharded_greedy_search(
     quota: int | Array = NO_QUOTA,
     expand_width: int = 1,
     max_steps: int | Array | None = None,
-    use_pallas: bool = False,
-    use_fused_merge: bool = False,
-    interpret: bool = False,
+    backend: str | kernel_backend.Backend | None = None,
+    use_pallas: bool | None = None,
+    use_fused_merge: bool | None = None,
+    interpret: bool | None = None,
     dedup: str = "auto",
     set_capacity: int | None = None,
 ) -> SearchResult:
@@ -729,6 +751,15 @@ def sharded_greedy_search(
     of both N and the shard count and its membership ops are
     collective-free.
 
+    ``backend`` selects the wave-scoring/merge route
+    (``repro.kernels.resolve_backend``); the matmul backends build the
+    corpus-norm cache once on the host and shard the norms **with** the
+    corpus blocks (same contiguous placement, zero-padded rows carry norm
+    0), so the cache adds nothing to the wave's psum traffic. The parity
+    guarantee is per-backend: sharded == unsharded under the *same*
+    backend (the ``"ref"`` default additionally stays bit-exact vs the
+    legacy engine).
+
     ``shards=1`` short-circuits to the single-device engine (today's path).
     """
     from jax.sharding import PartitionSpec as _P
@@ -739,15 +770,16 @@ def sharded_greedy_search(
     from repro.launch.mesh import shard_map
 
     n_points = corpus.shape[0]
+    be = kernel_backend.resolve_backend(
+        backend, use_pallas=use_pallas, use_fused_merge=use_fused_merge,
+        interpret=interpret, _caller="beam.sharded_greedy_search")
     if shards == 1:
         return batched_greedy_search(
-            fused_dist_fn(corpus, metric, use_pallas=use_pallas,
-                          interpret=interpret),
+            fused_dist_fn(corpus, metric, backend=be),
             adjacency, query_embs, entry_ids, n_points=n_points,
             beam_width=beam_width, pool_size=pool_size, quota=quota,
             expand_width=expand_width, max_steps=max_steps,
-            use_fused_merge=use_fused_merge, interpret=interpret,
-            dedup=dedup, set_capacity=set_capacity)
+            backend=be, dedup=dedup, set_capacity=set_capacity)
     # resolve the backend on the host (quota is concrete here) so the mesh
     # program is built against one concrete dedup structure
     dedup, set_capacity = resolve_dedup(
@@ -755,6 +787,18 @@ def sharded_greedy_search(
 
     axis = axis_name or SEARCH_AXIS
     stacked, n_local = shard_corpus(corpus, shards)
+    if be.matmul:
+        # corpus-norm cache, computed once on the host over the *padded*
+        # corpus (zero pad rows carry norm 0) and sharded exactly like the
+        # row blocks — the norms replicate with the corpus placement, so
+        # they never enter the wave psum
+        flat_view = kernel_backend.as_corpus_view(
+            stacked.reshape(shards * n_local, corpus.shape[1]))
+        sq_stack = flat_view.sq_norms.reshape(shards, n_local)
+        inv_stack = flat_view.inv_norms.reshape(shards, n_local)
+    else:
+        sq_stack = jnp.zeros((shards, 0), jnp.float32)
+        inv_stack = jnp.zeros((shards, 0), jnp.float32)
     mesh = mesh if mesh is not None else search_mesh(shards, axis)
     ctx = ShardCtx(axis_name=axis, n_local=n_local)
     b, e0 = entry_ids.shape
@@ -769,19 +813,26 @@ def sharded_greedy_search(
     bw_arr = _per_query(beam_width, b)
     ms_arr = _per_query(max_steps, b)
 
-    def program(local_corpus, adj, q_embs, entries, q, bw, ms):
+    def program(local_corpus, local_sq, local_inv, adj, q_embs, entries,
+                q, bw, ms):
         local_corpus = local_corpus[0]  # (1, n_local, dim) block -> local rows
+        if be.matmul:
+            local_src = kernel_backend.CorpusView(
+                rows=local_corpus, sq_norms=local_sq[0],
+                inv_norms=local_inv[0])
+        else:
+            local_src = local_corpus
 
         def dist_fn(qe, ids):
             return collectives.wave_gather_score(
-                local_corpus, qe, ids, axis_name=axis, metric=metric,
-                use_pallas=use_pallas, interpret=interpret)
+                local_src, qe, ids, axis_name=axis, metric=metric,
+                backend=be)
 
         return batched_greedy_search(
             dist_fn, adj, q_embs, entries, n_points=n_points,
             beam_width=bw, pool_size=pool, quota=q,
             expand_width=expand_width, max_steps=ms,
-            use_fused_merge=use_fused_merge, interpret=interpret, shard=ctx,
+            backend=be, shard=ctx,
             dedup=dedup, set_capacity=set_capacity)
 
     rep2, rep1 = _P(None, None), _P(None)
@@ -791,11 +842,12 @@ def sharded_greedy_search(
     res = shard_map(
         program,
         mesh=mesh,
-        in_specs=(_P(axis, None, None), rep2, rep2, rep2, rep1, rep1, rep1),
+        in_specs=(_P(axis, None, None), _P(axis, None), _P(axis, None),
+                  rep2, rep2, rep2, rep1, rep1, rep1),
         out_specs=SearchResult(
             pool_ids=rep2, pool_dists=rep2, scored=scored_spec,
             n_calls=rep1, n_steps=rep1),
-    )(stacked, adjacency.astype(jnp.int32), query_embs,
+    )(stacked, sq_stack, inv_stack, adjacency.astype(jnp.int32), query_embs,
       entry_ids.astype(jnp.int32), quota_arr, bw_arr, ms_arr)
     if dedup == "bitmap":
         # drop the zero-padding columns (global ids >= N never get scored)
@@ -836,7 +888,8 @@ class ShardedStepper:
     """
 
     def __init__(self, *, shards: int, n_points: int, mesh=None,
-                 axis_name: str | None = None):
+                 axis_name: str | None = None,
+                 backend: str | kernel_backend.Backend | None = None):
         from repro.distributed.sharding import SEARCH_AXIS, search_mesh
 
         self.shards = shards
@@ -846,6 +899,10 @@ class ShardedStepper:
             shards, self.axis_name)
         self.n_local = -(-n_points // shards)
         self.ctx = ShardCtx(axis_name=self.axis_name, n_local=self.n_local)
+        # merge route for commit (the stepper never scores — its caller's
+        # tower does — so the backend only picks the pool-merge kernel)
+        self.backend = kernel_backend.resolve_backend(
+            backend, _caller="beam.ShardedStepper")
         self._programs: dict = {}
 
     # ------------------------------------------------------------- internals
@@ -932,14 +989,18 @@ class ShardedStepper:
 
         dedup = self._dedup_of(state)
         rep2, _, state_spec = self._specs(dedup)
+        be = self.backend
 
         def build():
+            def f(s, sf, kp, d):
+                return commit_scores(s, sf, kp, d, backend=be)
+
             return jax.jit(shard_map(
-                commit_scores, mesh=self.mesh,
+                f, mesh=self.mesh,
                 in_specs=(state_spec, rep2, rep2, rep2),
                 out_specs=state_spec))
 
-        return self._program(("commit", dedup), build)(
+        return self._program(("commit", dedup, be), build)(
             state, safe, keep, jnp.asarray(dists, jnp.float32))
 
     def active_any(self, state: BatchedSearchState, quota: Array,

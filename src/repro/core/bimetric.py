@@ -29,8 +29,10 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.beam import NO_QUOTA, batched_greedy_search, sharded_greedy_search
+from repro.core.beam import (NO_QUOTA, batched_greedy_search, fused_dist_fn,
+                             sharded_greedy_search)
 from repro.core.vamana import VamanaIndex
+from repro.kernels import backend as kernel_backend
 
 Array = jax.Array
 
@@ -59,6 +61,7 @@ def _stage1_batch(
     n_seeds: int,
     l_search: int,
     expand_width: int = 1,
+    backend=None,
 ) -> tuple[Array, Array]:
     """Cheap-metric batched greedy search -> (seeds (B, n_seeds), d_calls (B,))."""
     res = batched_greedy_search(
@@ -72,6 +75,7 @@ def _stage1_batch(
         quota=NO_QUOTA,
         expand_width=expand_width,
         max_steps=4 * l_search,
+        backend=backend,
     )
     return res.pool_ids[:, :n_seeds], res.n_calls
 
@@ -95,6 +99,7 @@ def bimetric_search(
     corpora: tuple[Array, Array] | None = None,
     metric: str = "l2",
     mesh=None,
+    backend=None,
 ) -> BiMetricResult:
     """Batched bi-metric search.
 
@@ -114,8 +119,19 @@ def bimetric_search(
     ``corpora=(corpus_cheap, corpus_expensive)`` (the embedding matrices that
     induce d and D under ``metric``) and the distance callables are ignored.
     Results are bit-exact vs the single-device path.
+
+    ``backend`` picks the wave-scoring kernel route
+    (``repro.kernels.resolve_backend``). With embedding-backed metrics
+    (``corpora=``) the matmul backends score both stages in MXU form over
+    per-corpus norm caches (built once per call); with metric callables the
+    backend only routes the pool merges, since the scoring closure is the
+    caller's. The default keeps the frozen oracle bit-exactly.
     """
     b = q_cheap.shape[0]
+    be = kernel_backend.resolve_backend(backend, _caller="bimetric_search")
+    # embedding-backed metrics can score in matmul form even unsharded —
+    # the norm caches are built once per corpus here, outside the loops
+    use_fused = corpora is not None and be.matmul
     scalar_quota = jnp.ndim(quota) == 0  # python/numpy scalars alike
     if scalar_quota:
         quota = int(quota)
@@ -144,17 +160,20 @@ def bimetric_search(
                 quota=NO_QUOTA,
                 expand_width=expand_width,
                 max_steps=4 * l1,
+                backend=be,
             )
             seeds, d_calls = res1.pool_ids[:, :n_seeds], res1.n_calls
         else:
             seeds, d_calls = _stage1_batch(
-                jax.vmap(cheap_fn_batch),
+                (fused_dist_fn(corpora[0], metric, backend=be)
+                 if use_fused else jax.vmap(cheap_fn_batch)),
                 index,
                 q_cheap,
                 n_points=n_points,
                 n_seeds=n_seeds,
                 l_search=l1,
                 expand_width=expand_width,
+                backend=be,
             )
     else:  # "Default" ablation: start from the graph entry point only
         seeds = jnp.full((b, max(n_seeds, 1)), -1, jnp.int32)
@@ -185,10 +204,12 @@ def bimetric_search(
             quota=quota,
             expand_width=expand_width,
             max_steps=max_steps_D,
+            backend=be,
         )
     else:
         res = batched_greedy_search(
-            jax.vmap(expensive_fn_batch),
+            (fused_dist_fn(corpora[1], metric, backend=be)
+             if use_fused else jax.vmap(expensive_fn_batch)),
             index.adjacency,
             q_expensive,
             seeds,
@@ -198,6 +219,7 @@ def bimetric_search(
             quota=quota,
             expand_width=expand_width,
             max_steps=max_steps_D,
+            backend=be,
         )
     return BiMetricResult(
         ids=res.pool_ids[:, :k],

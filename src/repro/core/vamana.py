@@ -25,7 +25,10 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import distances
-from repro.core.beam import batched_greedy_search, sharded_greedy_search
+from repro.core.beam import (batched_greedy_search,
+                             fused_dist_fn as beam_fused_dist_fn,
+                             sharded_greedy_search)
+from repro.kernels import backend as kernel_backend
 
 Array = jax.Array
 
@@ -225,6 +228,7 @@ def search(
     expand_width: int = 1,
     shards: int = 1,
     mesh=None,
+    backend=None,
 ) -> tuple[Array, Array, Array]:
     """Standard single-metric search. Returns (ids (B,k), dists (B,k), calls (B,)).
 
@@ -239,7 +243,14 @@ def search(
     ``shards > 1`` runs the identical loop device-parallel over a corpus
     mesh (``repro.core.beam.sharded_greedy_search``) — bit-exact results,
     the corpus (and any column-sharded dedup state) split across ``shards``
-    devices."""
+    devices.
+
+    ``backend`` selects the wave-scoring kernel route
+    (``repro.kernels.resolve_backend`` values). The default keeps the
+    frozen gather-then-reduce oracle (bit-exact vs the legacy engine);
+    ``"xla_matmul"`` / ``"pallas"`` / ``"auto"`` score in matmul form over
+    a corpus-norm cache built once per call — same results up to fp
+    association (recall-identical on non-degenerate data)."""
     met = metric or index.config.metric
     L = beam_width or max(k, index.config.l_build)
     n = corpus_emb.shape[0]
@@ -258,6 +269,7 @@ def search(
     ])
     entries_b = jnp.broadcast_to(entries, (b, entries.shape[0]))
     quota = quota if quota is not None else jnp.iinfo(jnp.int32).max // 2
+    be = kernel_backend.resolve_backend(backend, _caller="vamana.search")
     if shards > 1:
         res = sharded_greedy_search(
             corpus_emb,
@@ -272,11 +284,17 @@ def search(
             quota=quota,
             expand_width=expand_width,
             max_steps=4 * L,
+            backend=be,
         )
     else:
-        em = distances.EmbeddingMetric(corpus_emb, met)
+        if be.matmul:
+            # matmul-form scoring over the norm cache (built once here)
+            dist_fn = beam_fused_dist_fn(corpus_emb, met, backend=be)
+        else:
+            em = distances.EmbeddingMetric(corpus_emb, met)
+            dist_fn = em.dists_batch
         res = batched_greedy_search(
-            em.dists_batch,
+            dist_fn,
             index.adjacency,
             query_emb,
             entries_b,
@@ -286,5 +304,6 @@ def search(
             quota=quota,
             expand_width=expand_width,
             max_steps=4 * L,
+            backend=be,
         )
     return res.pool_ids[:, :k], res.pool_dists[:, :k], res.n_calls

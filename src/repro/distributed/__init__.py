@@ -11,10 +11,16 @@ For the search engine, this package implements the **sharded corpus gather**
 * **The wave-fanout collective** (``collectives.wave_gather_score``) — each
   plan/commit wave of the batched beam engine is a replicated (B, K) block
   of global candidate ids; every device scores the lanes whose rows it owns
-  with the fused local gather→score kernel, emitting the psum identity 0.0
+  with the backend-dispatched local gather→score kernel
+  (``repro.kernels.resolve_backend``: the ref oracle, the MXU-form
+  ``xla_matmul`` path, or the Pallas tile), emitting the psum identity 0.0
   on foreign lanes, and one ``psum`` over the shard axis reconstructs the
   full wave bit-exactly (each id has exactly one owner and x + 0.0 == x).
-  The dedup state follows the backend (see ``repro.core.beam``):
+  The matmul backends' corpus-norm cache (``repro.kernels.CorpusView``)
+  shards **with** the corpus blocks — each device holds its rows' f32
+  norms as a purely local operand (zero-pad rows carry norm 0), so the
+  cache adds nothing to the wave's collective traffic.
+  The dedup state follows the dedup backend (see ``repro.core.beam``):
 
   - the dense scored **bitmap** is column-sharded the same way — lookups
     OR-reduce the owning shard's answer (``collectives.bitmap_lookup``),

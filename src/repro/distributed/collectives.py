@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.kernels import backend as kernel_backend
 from repro.kernels import ops
 from repro.launch.mesh import axis_size
 
@@ -65,20 +66,26 @@ def shard_offset(axis_name: str, n_local: int) -> Array:
     return lax.axis_index(axis_name) * n_local
 
 
-def wave_gather_score(corpus_local: Array, queries: Array, ids: Array, *,
+def wave_gather_score(corpus_local, queries: Array, ids: Array, *,
                       axis_name: str, metric: str = "sqeuclidean",
-                      use_pallas: bool = False,
-                      interpret: bool = False) -> Array:
-    """Device-parallel fused gather→score of one wave of global ids.
+                      backend=None, use_pallas: bool | None = None,
+                      interpret: bool | None = None) -> Array:
+    """Device-parallel backend-dispatched gather→score of one wave.
 
-    ``corpus_local`` (n_local, dim) is this device's corpus block; ``ids``
-    (B, K) is the replicated wave. Returns the replicated (B, K) distances,
-    bit-exact vs the unsharded ``ops.gather_score`` (ids < 0 -> +inf).
+    ``corpus_local`` is this device's corpus block — a raw (n_local, dim)
+    array or its :class:`repro.kernels.CorpusView` (the matmul backends'
+    norm cache shards with the rows, so it is a purely local operand);
+    ``ids`` (B, K) is the replicated wave. Returns the replicated (B, K)
+    distances, bit-exact vs the unsharded ``ops.gather_score`` under the
+    same backend (ids < 0 -> +inf). ``use_pallas`` / ``interpret`` are the
+    deprecated shims for ``backend``.
     """
+    rows = kernel_backend.corpus_rows(corpus_local)
     part = ops.gather_score_local(
         corpus_local, queries, ids,
-        shard_offset(axis_name, corpus_local.shape[0]),
-        metric=metric, use_pallas=use_pallas, interpret=interpret)
+        shard_offset(axis_name, rows.shape[0]),
+        metric=metric, backend=backend, use_pallas=use_pallas,
+        interpret=interpret)
     d = lax.psum(part, axis_name)
     return jnp.where(ids >= 0, d, jnp.inf)
 

@@ -1,0 +1,220 @@
+"""Kernel-backend selection and the corpus-norm cache (one knob, one cache).
+
+Every wave-scoring and pool-merge call site in the engine dispatches through
+a single :class:`Backend` value instead of the historical
+``use_pallas`` / ``use_fused_merge`` / ``interpret`` boolean triple:
+
+* ``"ref"``        — the frozen ``repro.kernels.ref`` oracle through XLA
+  (gather-then-reduce distances, stable merges). The correctness contract:
+  every other backend is tested against it. This is the **default** at every
+  public entry point, so existing bit-exact parity guarantees (batched vs
+  legacy vs sharded) are untouched unless a caller opts in.
+* ``"xla_matmul"`` — MXU/BLAS-form distances over the corpus-norm cache:
+  ``d(x, q) = ‖x‖² − 2·⟨x, q⟩ + ‖q‖²`` (resp. plain dot products for
+  ip/cosine) with ``‖x‖²`` (and inverse norms for cosine) precomputed once
+  per corpus in a :class:`CorpusView`. The inner reduce becomes a
+  ``dot_general`` that hits BLAS on CPU and the MXU on TPU, and the per-wave
+  flop count drops by ~⅓ (the subtract-square pass disappears). Same math
+  as the oracle up to fp association — *tolerance* parity, not bit parity.
+* ``"pallas"``     — the fused TPU kernels (``repro.kernels.l2_topk``):
+  matmul-form scoring tile with the norm cache as an extra operand, plus
+  the payload-carrying bitonic pool merge (lane-width padded).
+  ``"pallas-interpret"`` is the same kernels under ``interpret=True`` — the
+  CPU-testable form used by the parity grid and CI.
+* ``"auto"``       — ``"pallas"`` when a TPU is present, else
+  ``"xla_matmul"``. The deployment knob: resolves against the runtime's
+  device set, never silently at import time.
+
+The legacy boolean kwargs are kept as deprecated shims: passing any of them
+explicitly still works (mapped onto the equivalent Backend) and emits a
+``DeprecationWarning`` exactly once per (call-site function, kwarg) pair.
+
+**Corpus-norm cache invalidation**: a :class:`CorpusView` is an immutable
+snapshot of ``(rows, ‖x‖², 1/‖x‖)``. jax arrays cannot be mutated in place,
+so "mutating the corpus" always means producing a *new* array — build a new
+view with :func:`as_corpus_view` at that point; holding the old view against
+a new corpus is the only way to get stale norms, and nothing in the engine
+does it (the serving engine builds its view once per engine lifetime,
+alongside the index, which is itself corpus-immutable).
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+BACKEND_NAMES = ("ref", "xla_matmul", "pallas")
+
+#: epsilon under the cosine rsqrt — must match ``repro.kernels.ref`` so the
+#: matmul form agrees with the oracle on (near-)zero rows: a zero row (e.g.
+#: uneven-shard padding) carries ``‖x‖² = 0`` and a *finite* inverse norm,
+#: so its cosine distance is exactly 1.0 in every backend, never NaN.
+NORM_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """Resolved kernel-dispatch choice (hashable — safe as a jit static).
+
+    ``fused_merge`` overrides the merge route only: ``None`` (default)
+    derives it from the backend name (the bitonic kernel iff ``pallas``);
+    the legacy ``use_fused_merge`` shim maps onto it.
+    """
+
+    name: str  # "ref" | "xla_matmul" | "pallas"
+    interpret: bool = False  # run Pallas bodies in interpret mode (CPU CI)
+    fused_merge: bool | None = None
+
+    def __post_init__(self):
+        if self.name not in BACKEND_NAMES:
+            raise ValueError(
+                f"backend must be one of {BACKEND_NAMES}, got {self.name!r}")
+
+    @property
+    def use_pallas(self) -> bool:
+        return self.name == "pallas"
+
+    @property
+    def matmul(self) -> bool:
+        """Score in matmul form over the corpus-norm cache?"""
+        return self.name in ("xla_matmul", "pallas")
+
+    @property
+    def merge_pallas(self) -> bool:
+        """Route pool merges through the Pallas bitonic network?"""
+        if self.fused_merge is not None:
+            return self.fused_merge
+        return self.name == "pallas"
+
+
+REF = Backend("ref")
+
+
+def _tpu_present() -> bool:
+    try:
+        return any(d.platform == "tpu" for d in jax.devices())
+    except RuntimeError:  # no backend initialized at all
+        return False
+
+
+# one DeprecationWarning per (function, kwarg) pair for the whole process —
+# the shims must nudge, not spam a hot loop's logs
+_warned: set[tuple[str, str]] = set()
+
+
+def warn_deprecated_knob(func: str, kwarg: str) -> None:
+    key = (func, kwarg)
+    if key in _warned:
+        return
+    _warned.add(key)
+    warnings.warn(
+        f"{func}(..., {kwarg}=) is deprecated; pass backend= instead "
+        "('ref' | 'xla_matmul' | 'pallas' | 'pallas-interpret' | 'auto' "
+        "or a repro.kernels.Backend)",
+        DeprecationWarning, stacklevel=3)
+
+
+def resolve_backend(
+    backend: str | Backend | None = None,
+    *,
+    use_pallas: bool | None = None,
+    use_fused_merge: bool | None = None,
+    interpret: bool | None = None,
+    default: str = "ref",
+    _caller: str = "repro.kernels",
+) -> Backend:
+    """Normalize the backend knob (or the legacy boolean shims) to a Backend.
+
+    Accepted ``backend`` values: a :class:`Backend`, one of
+    ``"ref" | "xla_matmul" | "pallas" | "pallas-interpret" | "auto"``, or
+    None. ``"auto"`` resolves against the runtime device set (pallas on
+    TPU, xla_matmul otherwise). With ``backend=None`` the legacy kwargs
+    decide — each one explicitly passed emits a once-per-call-site
+    ``DeprecationWarning`` — and when nothing at all is passed the
+    ``default`` (the frozen oracle) is returned.
+    """
+    if backend is not None:
+        if isinstance(backend, Backend):
+            return backend
+        if backend == "auto":
+            return Backend("pallas" if _tpu_present() else "xla_matmul")
+        if backend == "pallas-interpret":
+            return Backend("pallas", interpret=True)
+        return Backend(backend)
+    name = default
+    fused = None
+    interp = False
+    legacy = (use_pallas is not None or use_fused_merge is not None
+              or interpret is not None)
+    if legacy:
+        # the historical kwargs were independent: use_pallas only routed
+        # the *scoring* kernels and defaulted the merge to the stable XLA
+        # cut (use_fused_merge=False) — so a shimmed call must not derive
+        # fused_merge from the backend name the way the new knob does
+        fused = bool(use_fused_merge) if use_fused_merge is not None else False
+    if use_pallas is not None:
+        warn_deprecated_knob(_caller, "use_pallas")
+        name = "pallas" if use_pallas else default
+    if use_fused_merge is not None:
+        warn_deprecated_knob(_caller, "use_fused_merge")
+    if interpret is not None:
+        warn_deprecated_knob(_caller, "interpret")
+        interp = bool(interpret)
+    return Backend(name, interpret=interp, fused_merge=fused)
+
+
+class CorpusView(NamedTuple):
+    """Immutable corpus snapshot + the per-row norm cache (a pytree).
+
+    ``rows`` keeps the corpus dtype untouched (a bf16/f16 corpus is *not*
+    upcast — the cache adds 8 bytes/row of f32 norms, not a second f32
+    corpus); ``sq_norms`` is ``‖x_i‖²`` and ``inv_norms`` is
+    ``1/√(‖x_i‖² + NORM_EPS)``, both f32. Zero rows (uneven-shard padding)
+    carry ``sq_norms == 0`` and a finite ``inv_norms``, so they score 0
+    under sqeuclidean-vs-origin and exactly 1.0 under cosine — padding
+    never pollutes any metric. Under the corpus mesh the norms shard with
+    the rows (same contiguous blocks), so the cache adds nothing to the
+    wave's psum traffic.
+
+    See the module docstring for the invalidation contract: views are
+    snapshots; a new corpus array needs a new view.
+    """
+
+    rows: Array  # (N, dim) — corpus, original dtype
+    sq_norms: Array  # (N,) f32 ‖x‖²
+    inv_norms: Array  # (N,) f32 1/√(‖x‖² + NORM_EPS)
+
+    @property
+    def n(self) -> int:
+        return self.rows.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.rows.shape[1]
+
+
+def as_corpus_view(corpus: Array | CorpusView) -> CorpusView:
+    """Build (or pass through) the norm cache for a corpus.
+
+    Idempotent: a :class:`CorpusView` is returned unchanged, so call sites
+    can accept either form and the norms are only ever computed once per
+    corpus — build the view *outside* any hot loop and thread it through.
+    """
+    if isinstance(corpus, CorpusView):
+        return corpus
+    sq = jnp.sum(jnp.square(corpus.astype(jnp.float32)), axis=-1)
+    return CorpusView(
+        rows=corpus,
+        sq_norms=sq,
+        inv_norms=jax.lax.rsqrt(sq + NORM_EPS),
+    )
+
+
+def corpus_rows(corpus: Array | CorpusView) -> Array:
+    """The raw (N, dim) rows of either corpus form."""
+    return corpus.rows if isinstance(corpus, CorpusView) else corpus

@@ -7,18 +7,30 @@ and merges the results into the per-query pools. Two kernels:
 * ``gather_score`` — scalar-prefetched candidate ids drive the BlockSpec index
   map, so corpus rows stream HBM→VMEM *by id* (no XLA gather materialization)
   and the metric reduction (l2 / sqeuclidean / ip / cosine, matching
-  ``repro.core.distances``) happens in VMEM next to the data. ``gather_l2``
-  is the historical sqeuclidean entry point, kept as an alias;
+  ``repro.core.distances``) happens in VMEM next to the data. With the
+  ``norms`` operand (the corpus-norm cache of
+  ``repro.kernels.backend.CorpusView``, packed by :func:`pack_norms`), the
+  score is computed in **matmul form** — ``‖x‖² − 2·⟨x, q⟩ + ‖q‖²`` with the
+  row-norm term streamed from the cache instead of re-reduced per lane, which
+  drops the subtract-square pass (~⅓ of the per-wave flops) and leaves one
+  fused dot per lane. Without ``norms`` the historical gather-then-reduce
+  body runs unchanged. ``gather_l2`` is the historical sqeuclidean entry
+  point, kept as an alias;
 * ``beam_merge_topk`` — bitonic merge network over the (beam ‖ fanout) pair
   in VMEM for the whole query batch per invocation, compare-exchange
   implemented with roll/where so it lowers to vector selects (no sort
   primitive needed on TPU). Optionally carries an int32 payload lane
   (the pool's ``expanded`` flags) through the same permutation network so
   the batched engine can merge its full (ids, dists, expanded) pool state
-  in one call.
+  in one call. The network is padded to a power of two **and to the
+  128-wide TPU lane** (``MERGE_LANE``), and the output block is
+  lane-aligned too (sliced back to L outside the kernel) — so
+  non-power-of-two and non-lane-multiple pools run the fused merge instead
+  of being excluded by tiling constraints.
 
 Pure-jnp oracles for both live in ``repro.kernels.ref`` (the CPU/interpret
-fallback path used by the core engine off-TPU).
+fallback path used by the core engine off-TPU); backend selection for all of
+this lives in ``repro.kernels.backend`` / ``repro.kernels.ops``.
 """
 from __future__ import annotations
 
@@ -29,64 +41,126 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import NORM_EPS, CorpusView
+
 Array = jax.Array
 
 VALID_METRICS = ("l2", "sqeuclidean", "ip", "cosine")
 
+MERGE_LANE = 128  # TPU vector lane width — merge rows are padded to it
+
+
+def pack_norms(view: CorpusView) -> Array:
+    """(N, 2) f32 kernel operand: column 0 = ‖x‖², column 1 = 1/‖x‖.
+
+    One row per corpus row so the same prefetched id that streams the
+    corpus row also streams its cached norms (the BlockSpec index maps are
+    identical).
+    """
+    return jnp.stack([view.sq_norms, view.inv_norms], axis=1)
+
 
 # --------------------------------------------------------------------------
-# fused gather + score (metric-parameterized)
+# per-lane scoring bodies — one definition each, shared by the global and
+# shard-local kernels (only the masking tail differs between those)
+# --------------------------------------------------------------------------
+def _metric_score(q, row, *, metric: str):
+    """Gather-then-reduce per-lane score (matches ``ref.gather_score_ref``)."""
+    if metric in ("l2", "sqeuclidean"):
+        diff = q - row
+        d = jnp.sum(diff * diff)
+        return jnp.sqrt(d) if metric == "l2" else d
+    if metric == "ip":
+        return -jnp.sum(q * row)
+    # cosine
+    qn = jax.lax.rsqrt(jnp.sum(q * q) + NORM_EPS)
+    rn = jax.lax.rsqrt(jnp.sum(row * row) + NORM_EPS)
+    return 1.0 - jnp.sum(q * row) * qn * rn
+
+
+def _metric_score_mm(q, row, nsq, ninv, *, metric: str):
+    """Matmul-form per-lane score over the cached row norms."""
+    dot = jnp.dot(row, q, preferred_element_type=jnp.float32)
+    if metric in ("l2", "sqeuclidean"):
+        # the expansion can dip epsilon-negative where the oracle is ~0
+        d = jnp.maximum(nsq - 2.0 * dot + jnp.sum(q * q), 0.0)
+        return jnp.sqrt(d) if metric == "l2" else d
+    if metric == "ip":
+        return -dot
+    return 1.0 - dot * jax.lax.rsqrt(jnp.sum(q * q) + NORM_EPS) * ninv
+
+
+# --------------------------------------------------------------------------
+# fused gather + score (metric-parameterized; gather-then-reduce form)
 # --------------------------------------------------------------------------
 def _gather_score_kernel(ids_ref, q_ref, row_ref, o_ref, *, metric: str):
     b = pl.program_id(0)
     k = pl.program_id(1)
     q = q_ref[0].astype(jnp.float32)  # (dim,) — query b
     row = row_ref[0].astype(jnp.float32)  # (dim,) — corpus[ids[b, k]]
-    if metric in ("l2", "sqeuclidean"):
-        diff = q - row
-        d = jnp.sum(diff * diff)
-        if metric == "l2":
-            d = jnp.sqrt(d)
-    elif metric == "ip":
-        d = -jnp.sum(q * row)
-    else:  # cosine
-        qn = jax.lax.rsqrt(jnp.sum(q * q) + 1e-12)
-        rn = jax.lax.rsqrt(jnp.sum(row * row) + 1e-12)
-        d = 1.0 - jnp.sum(q * row) * qn * rn
+    d = _metric_score(q, row, metric=metric)
+    valid = ids_ref[b, k] >= 0
+    o_ref[0, 0] = jnp.where(valid, d, float("inf"))
+
+
+# --------------------------------------------------------------------------
+# matmul-form scoring tile: norms streamed from the corpus-norm cache
+# --------------------------------------------------------------------------
+def _gather_score_mm_kernel(ids_ref, q_ref, row_ref, nrm_ref, o_ref, *,
+                            metric: str):
+    b = pl.program_id(0)
+    k = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)
+    row = row_ref[0].astype(jnp.float32)
+    d = _metric_score_mm(q, row, nrm_ref[0, 0], nrm_ref[0, 1], metric=metric)
     valid = ids_ref[b, k] >= 0
     o_ref[0, 0] = jnp.where(valid, d, float("inf"))
 
 
 def gather_score(corpus: Array, queries: Array, ids: Array, *,
-                 metric: str = "sqeuclidean", interpret: bool = False) -> Array:
+                 metric: str = "sqeuclidean", norms: Array | None = None,
+                 interpret: bool = False) -> Array:
     """corpus (N, dim); queries (B, dim); ids (B, K) -> (B, K) dissimilarities.
 
     Ids < 0 are padding and map to +inf. The metric names and conventions
     match ``repro.core.distances`` ("ip" is negated, "cosine" is one-minus).
+    With ``norms`` (the packed (N, 2) corpus-norm cache, see
+    :func:`pack_norms`) the matmul-form tile runs — the row-norm reduce is
+    replaced by a cached load streamed by the same prefetched id.
     """
     if metric not in VALID_METRICS:
         raise ValueError(f"metric must be one of {VALID_METRICS}, got {metric!r}")
     b, dim = queries.shape
     k = ids.shape[1]
+    in_specs = [
+        pl.BlockSpec((1, dim), lambda bi, ki, ids: (bi, 0)),
+        # the gather: block row chosen by the prefetched id
+        pl.BlockSpec(
+            (1, dim),
+            lambda bi, ki, ids: (jnp.maximum(ids[bi, ki], 0), 0),
+        ),
+    ]
+    operands = [queries, corpus]
+    if norms is None:
+        kernel = functools.partial(_gather_score_kernel, metric=metric)
+    else:
+        kernel = functools.partial(_gather_score_mm_kernel, metric=metric)
+        # the norm cache streams by the same prefetched id as the row
+        in_specs.append(pl.BlockSpec(
+            (1, 2), lambda bi, ki, ids: (jnp.maximum(ids[bi, ki], 0), 0)))
+        operands.append(norms.astype(jnp.float32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, k),
-        in_specs=[
-            pl.BlockSpec((1, dim), lambda bi, ki, ids: (bi, 0)),
-            # the gather: block row chosen by the prefetched id
-            pl.BlockSpec(
-                (1, dim),
-                lambda bi, ki, ids: (jnp.maximum(ids[bi, ki], 0), 0),
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1), lambda bi, ki, ids: (bi, ki)),
     )
     return pl.pallas_call(
-        functools.partial(_gather_score_kernel, metric=metric),
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
         interpret=interpret,
-    )(ids.astype(jnp.int32), queries, corpus)
+    )(ids.astype(jnp.int32), *operands)
 
 
 def gather_l2(corpus: Array, queries: Array, ids: Array, *,
@@ -102,25 +176,28 @@ def _gather_score_local_kernel(off_ref, ids_ref, q_ref, row_ref, o_ref, *,
     k = pl.program_id(1)
     q = q_ref[0].astype(jnp.float32)
     row = row_ref[0].astype(jnp.float32)
-    if metric in ("l2", "sqeuclidean"):
-        diff = q - row
-        d = jnp.sum(diff * diff)
-        if metric == "l2":
-            d = jnp.sqrt(d)
-    elif metric == "ip":
-        d = -jnp.sum(q * row)
-    else:  # cosine
-        qn = jax.lax.rsqrt(jnp.sum(q * q) + 1e-12)
-        rn = jax.lax.rsqrt(jnp.sum(row * row) + 1e-12)
-        d = 1.0 - jnp.sum(q * row) * qn * rn
+    d = _metric_score(q, row, metric=metric)
     loc = ids_ref[b, k] - off_ref[0]
     owned = (ids_ref[b, k] >= 0) & (loc >= 0) & (loc < n_local)
     # psum identity on foreign/padding lanes — see ref.gather_score_local_ref
     o_ref[0, 0] = jnp.where(owned, d, 0.0)
 
 
+def _gather_score_local_mm_kernel(off_ref, ids_ref, q_ref, row_ref, nrm_ref,
+                                  o_ref, *, metric: str, n_local: int):
+    b = pl.program_id(0)
+    k = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)
+    row = row_ref[0].astype(jnp.float32)
+    d = _metric_score_mm(q, row, nrm_ref[0, 0], nrm_ref[0, 1], metric=metric)
+    loc = ids_ref[b, k] - off_ref[0]
+    owned = (ids_ref[b, k] >= 0) & (loc >= 0) & (loc < n_local)
+    o_ref[0, 0] = jnp.where(owned, d, 0.0)
+
+
 def gather_score_local(corpus_local: Array, queries: Array, ids: Array,
                        offset: Array, *, metric: str = "sqeuclidean",
+                       norms: Array | None = None,
                        interpret: bool = False) -> Array:
     """Shard-local fused gather→score over *global* ids (see ref oracle).
 
@@ -128,7 +205,9 @@ def gather_score_local(corpus_local: Array, queries: Array, ids: Array,
     starting at global row ``offset`` (a traced scalar — inside ``shard_map``
     it is ``axis_index * n_local``). Owned lanes stream their local row
     HBM→VMEM by remapped id exactly like :func:`gather_score`; foreign and
-    padding lanes emit the psum identity 0.0.
+    padding lanes emit the psum identity 0.0. ``norms`` is the *local*
+    block's packed norm cache (it shards with the rows) and selects the
+    matmul-form tile.
     """
     if metric not in VALID_METRICS:
         raise ValueError(f"metric must be one of {VALID_METRICS}, got {metric!r}")
@@ -136,27 +215,39 @@ def gather_score_local(corpus_local: Array, queries: Array, ids: Array,
     k = ids.shape[1]
     n_local = corpus_local.shape[0]
     offset = jnp.asarray(offset, jnp.int32).reshape(1)
+    in_specs = [
+        pl.BlockSpec((1, dim), lambda bi, ki, off, ids: (bi, 0)),
+        # the gather: local block row chosen by the remapped global id
+        pl.BlockSpec(
+            (1, dim),
+            lambda bi, ki, off, ids: (
+                jnp.clip(ids[bi, ki] - off[0], 0, n_local - 1), 0),
+        ),
+    ]
+    operands = [queries, corpus_local]
+    if norms is None:
+        kernel = functools.partial(_gather_score_local_kernel, metric=metric,
+                                   n_local=n_local)
+    else:
+        kernel = functools.partial(_gather_score_local_mm_kernel,
+                                   metric=metric, n_local=n_local)
+        in_specs.append(pl.BlockSpec(
+            (1, 2),
+            lambda bi, ki, off, ids: (
+                jnp.clip(ids[bi, ki] - off[0], 0, n_local - 1), 0)))
+        operands.append(norms.astype(jnp.float32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # offset, then the candidate ids
         grid=(b, k),
-        in_specs=[
-            pl.BlockSpec((1, dim), lambda bi, ki, off, ids: (bi, 0)),
-            # the gather: local block row chosen by the remapped global id
-            pl.BlockSpec(
-                (1, dim),
-                lambda bi, ki, off, ids: (
-                    jnp.clip(ids[bi, ki] - off[0], 0, n_local - 1), 0),
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1), lambda bi, ki, off, ids: (bi, ki)),
     )
     return pl.pallas_call(
-        functools.partial(_gather_score_local_kernel, metric=metric,
-                          n_local=n_local),
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
         interpret=interpret,
-    )(offset, ids.astype(jnp.int32), queries, corpus_local)
+    )(offset, ids.astype(jnp.int32), *operands)
 
 
 # --------------------------------------------------------------------------
@@ -194,10 +285,10 @@ def _merge_kernel(bi_ref, bd_ref, bf_ref, ci_ref, cd_ref, cf_ref,
             d = jnp.where(take_self, d, d_p)
             idx = jnp.where(take_self, idx, i_p)
             flg = jnp.where(take_self, flg, f_p)
-    L = oi_ref.shape[1]
-    oi_ref[...] = idx[:, :L]
-    od_ref[...] = d[:, :L]
-    of_ref[...] = flg[:, :L]
+    w = oi_ref.shape[1]
+    oi_ref[...] = idx[:, :w]
+    od_ref[...] = d[:, :w].astype(od_ref.dtype)
+    of_ref[...] = flg[:, :w]
 
 
 def beam_merge_topk(beam_ids: Array, beam_dists: Array, cand_ids: Array,
@@ -211,6 +302,13 @@ def beam_merge_topk(beam_ids: Array, beam_dists: Array, cand_ids: Array,
     a third output is returned. Ties in distance (inf padding included) are
     broken by the network, not by input position — callers needing the
     stable-merge contract use ``repro.kernels.ref.merge_pool_batch_ref``.
+
+    The network length is padded to a power of two **and** to
+    :data:`MERGE_LANE` (the TPU vector lane width), and the output block is
+    lane-aligned and sliced back to L after the call — arbitrary (L, K)
+    shapes run the fused network. The output distances keep the inputs'
+    promoted dtype (the compare-exchange runs on an exact f32 embedding for
+    bf16/f16), so half-precision pools round-trip without upcasting.
     """
     b, L = beam_ids.shape
     k = cand_ids.shape[1]
@@ -219,8 +317,10 @@ def beam_merge_topk(beam_ids: Array, beam_dists: Array, cand_ids: Array,
         beam_flags = jnp.zeros((b, L), jnp.int32)
     if cand_flags is None:
         cand_flags = jnp.zeros((b, k), jnp.int32)
+    d_dtype = jnp.result_type(beam_dists.dtype, cand_dists.dtype)
     n = L + k
-    n_pad = 1 << (n - 1).bit_length()
+    # power-of-two for the bitonic network, lane width for the TPU tiling
+    n_pad = max(1 << (n - 1).bit_length(), MERGE_LANE)
     pad = n_pad - n
     if pad:
         cand_ids = jnp.pad(cand_ids, ((0, 0), (0, pad)), constant_values=-1)
@@ -228,6 +328,8 @@ def beam_merge_topk(beam_ids: Array, beam_dists: Array, cand_ids: Array,
                              constant_values=jnp.inf)
         cand_flags = jnp.pad(cand_flags, ((0, 0), (0, pad)))
         k = k + pad
+    # lane-aligned output block, sliced back to L below
+    w = min(n_pad, -(-L // MERGE_LANE) * MERGE_LANE)
     kernel = functools.partial(_merge_kernel, n=n_pad)
     oi, od, of = pl.pallas_call(
         kernel,
@@ -241,19 +343,20 @@ def beam_merge_topk(beam_ids: Array, beam_dists: Array, cand_ids: Array,
             pl.BlockSpec((1, k), lambda bi: (bi, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, L), lambda bi: (bi, 0)),
-            pl.BlockSpec((1, L), lambda bi: (bi, 0)),
-            pl.BlockSpec((1, L), lambda bi: (bi, 0)),
+            pl.BlockSpec((1, w), lambda bi: (bi, 0)),
+            pl.BlockSpec((1, w), lambda bi: (bi, 0)),
+            pl.BlockSpec((1, w), lambda bi: (bi, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((b, L), beam_ids.dtype),
-            jax.ShapeDtypeStruct((b, L), jnp.float32),
-            jax.ShapeDtypeStruct((b, L), jnp.int32),
+            jax.ShapeDtypeStruct((b, w), beam_ids.dtype),
+            jax.ShapeDtypeStruct((b, w), d_dtype),
+            jax.ShapeDtypeStruct((b, w), jnp.int32),
         ],
         interpret=interpret,
     )(beam_ids, beam_dists.astype(jnp.float32),
       beam_flags.astype(jnp.int32), cand_ids,
       cand_dists.astype(jnp.float32), cand_flags.astype(jnp.int32))
+    oi, od, of = oi[:, :L], od[:, :L], of[:, :L]
     if with_flags:
         return oi, od, of
     return oi, od

@@ -1,9 +1,23 @@
-"""Jitted dispatch layer for the Pallas kernels.
+"""Jitted dispatch layer for the search/serving kernels — one backend knob.
 
-``use_pallas`` selects the TPU kernel; the default (False) runs the ref.py
-oracle through XLA — that path is used on CPU (tests, dry-run lowering) and is
-mathematically identical. Kernel tests run the Pallas bodies with
-``interpret=True`` and assert allclose against the same refs.
+Every op takes ``backend=`` (``"ref" | "xla_matmul" | "pallas" |
+"pallas-interpret" | "auto"`` or a resolved :class:`repro.kernels.backend.Backend`):
+
+* ``ref`` (default) runs the frozen ``ref.py`` oracle through XLA — the
+  correctness contract, bit-stable across PRs;
+* ``xla_matmul`` scores waves in MXU/BLAS form over the corpus-norm cache
+  (:class:`repro.kernels.backend.CorpusView`): ``‖x‖² − 2⟨x, q⟩ + ‖q‖²``
+  instead of gather-subtract-square-reduce — ~⅓ fewer flops per wave and the
+  inner reduce is a ``dot_general``;
+* ``pallas`` runs the TPU kernels (``pallas-interpret`` = the same bodies
+  under ``interpret=True``, the CPU-testable form the parity suite pins
+  against ``ref``).
+
+The historical ``use_pallas`` / ``use_fused_merge`` / ``interpret`` boolean
+kwargs remain as deprecated shims (one ``DeprecationWarning`` per call site,
+see ``repro.kernels.backend``). Ops that gather corpus rows accept either a
+raw ``(N, dim)`` array or a prebuilt ``CorpusView`` — pass the view from
+outside any hot loop so the norms are computed once per corpus.
 """
 from __future__ import annotations
 
@@ -11,61 +25,145 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import backend as _backend
 from repro.kernels import ref
 from repro.kernels import embedding_bag as _bag
 from repro.kernels import flash_attention as _fa
 from repro.kernels import l2_topk as _lt
+from repro.kernels.backend import (NORM_EPS, CorpusView, as_corpus_view,
+                                   corpus_rows)
+from repro.kernels.backend import Backend, resolve_backend  # noqa: F401
 
 Array = jax.Array
 
 
-def flash_attention(q, k, v, *, causal=True, sm_scale=None,
-                    use_pallas=False, interpret=False, block_q=128, block_k=128):
-    if use_pallas:
+def _resolve(backend, use_pallas, interpret, caller, use_fused_merge=None):
+    return _backend.resolve_backend(
+        backend, use_pallas=use_pallas, use_fused_merge=use_fused_merge,
+        interpret=interpret, _caller=caller)
+
+
+def flash_attention(q, k, v, *, causal=True, sm_scale=None, backend=None,
+                    use_pallas=None, interpret=None, block_q=128, block_k=128):
+    be = _resolve(backend, use_pallas, interpret, "ops.flash_attention")
+    if be.use_pallas:
         return _fa.flash_attention(q, k, v, causal=causal, sm_scale=sm_scale,
                                    block_q=block_q, block_k=block_k,
-                                   interpret=interpret)
+                                   interpret=be.interpret)
     return ref.flash_attention_ref(q, k, v, causal=causal, sm_scale=sm_scale)
 
 
-def flash_decode(q, k, v, *, length, sm_scale=None, use_pallas=False,
-                 interpret=False, block_k=512):
-    if use_pallas:
+def flash_decode(q, k, v, *, length, sm_scale=None, backend=None,
+                 use_pallas=None, interpret=None, block_k=512):
+    be = _resolve(backend, use_pallas, interpret, "ops.flash_decode")
+    if be.use_pallas:
         return _fa.flash_decode(q, k, v, length=length, sm_scale=sm_scale,
-                                block_k=block_k, interpret=interpret)
+                                block_k=block_k, interpret=be.interpret)
     return ref.flash_decode_ref(q, k, v, length=length, sm_scale=sm_scale)
 
 
-def gather_score(corpus, queries, ids, *, metric="sqeuclidean",
-                 use_pallas=False, interpret=False):
-    """Fused gather→score for a whole query batch: (B, K) ids -> (B, K)."""
-    if use_pallas:
-        return _lt.gather_score(corpus, queries, ids, metric=metric,
-                                interpret=interpret)
-    return ref.gather_score_ref(corpus, queries, ids, metric=metric)
+# --------------------------------------------------------------------------
+# wave scoring (the serving hot path)
+# --------------------------------------------------------------------------
+def _matmul_score(view: CorpusView, queries: Array, ids: Array,
+                  metric: str) -> Array:
+    """MXU-form gather→score over the norm cache: (B, K) ids -> (B, K).
+
+    The inner product is one ``dot_general`` over the gathered rows (BLAS on
+    CPU, MXU on TPU); the row-norm term comes from the cache instead of
+    being re-reduced every wave. Same values as ``ref.gather_score_ref`` up
+    to fp association (the expansion reassociates the reduction).
+    """
+    safe = jnp.maximum(ids, 0)
+    rows = view.rows[safe].astype(jnp.float32)  # (B, K, dim)
+    q = queries.astype(jnp.float32)
+    # batched (K, dim) @ (dim,) — explicit dot_general (no einsum transpose
+    # shuffling): BLAS on CPU, MXU on TPU
+    dots = jax.lax.dot_general(rows, q, (((2,), (1,)), ((0,), (0,))))
+    if metric in ("l2", "sqeuclidean"):
+        qsq = jnp.sum(q * q, axis=-1)
+        # the expansion can dip epsilon-negative where the oracle is ~0
+        d = jnp.maximum(view.sq_norms[safe] - 2.0 * dots + qsq[:, None], 0.0)
+        if metric == "l2":
+            d = jnp.sqrt(d)
+    elif metric == "ip":
+        d = -dots
+    elif metric == "cosine":
+        qn = jax.lax.rsqrt(jnp.sum(q * q, axis=-1) + NORM_EPS)
+        d = 1.0 - dots * qn[:, None] * view.inv_norms[safe]
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    return jnp.where(ids >= 0, d, jnp.inf)
 
 
-def gather_l2(corpus, queries, ids, *, use_pallas=False, interpret=False):
+def _matmul_score_local(view: CorpusView, queries: Array, ids: Array,
+                        offset, metric: str) -> Array:
+    """Shard-local matmul-form scoring (psum-identity on foreign lanes).
+
+    Mirrors ``ref.gather_score_local_ref``: owned lanes carry the exact
+    per-lane value of :func:`_matmul_score` (the norms shard with the
+    rows), everything else contributes 0.0 to the wave psum.
+    """
+    n_local = view.rows.shape[0]
+    loc = ids - jnp.asarray(offset, ids.dtype)
+    owned = (ids >= 0) & (loc >= 0) & (loc < n_local)
+    d = _matmul_score(view, queries, jnp.where(owned, loc, -1), metric)
+    return jnp.where(owned, d, 0.0)
+
+
+def gather_score(corpus, queries, ids, *, metric="sqeuclidean", backend=None,
+                 use_pallas=None, interpret=None):
+    """Fused gather→score for a whole query batch: (B, K) ids -> (B, K).
+
+    ``corpus`` is a raw (N, dim) array or a
+    :class:`~repro.kernels.backend.CorpusView`; the matmul backends build
+    the view on the fly when handed a raw array (prefer passing the view —
+    it is the whole point of the norm cache).
+    """
+    be = _resolve(backend, use_pallas, interpret, "ops.gather_score")
+    if be.name == "xla_matmul":
+        return _matmul_score(as_corpus_view(corpus), queries, ids, metric)
+    if be.use_pallas:
+        view = as_corpus_view(corpus)
+        return _lt.gather_score(view.rows, queries, ids, metric=metric,
+                                norms=_lt.pack_norms(view),
+                                interpret=be.interpret)
+    return ref.gather_score_ref(corpus_rows(corpus), queries, ids,
+                                metric=metric)
+
+
+def gather_l2(corpus, queries, ids, *, backend=None, use_pallas=None,
+              interpret=None):
     return gather_score(corpus, queries, ids, metric="sqeuclidean",
-                        use_pallas=use_pallas, interpret=interpret)
+                        backend=backend, use_pallas=use_pallas,
+                        interpret=interpret)
 
 
 def gather_score_local(corpus_local, queries, ids, offset, *,
-                       metric="sqeuclidean", use_pallas=False,
-                       interpret=False):
+                       metric="sqeuclidean", backend=None, use_pallas=None,
+                       interpret=None):
     """Shard-local gather→score over global ids: (B, K) -> (B, K) partials.
 
     Owned lanes (offset <= id < offset + n_local) carry the exact distance;
     foreign and padding lanes carry the psum identity 0.0, so a
     ``lax.psum`` over the shard axis reconstructs the unsharded
-    :func:`gather_score` wave bit-exactly (each id has one owner and
-    x + 0.0 == x). The sharded engine masks ids < 0 to +inf after the psum.
+    :func:`gather_score` wave (bit-exactly within one backend — each id has
+    one owner and x + 0.0 == x). The sharded engine masks ids < 0 to +inf
+    after the psum. ``corpus_local`` may be the local block's
+    :class:`~repro.kernels.backend.CorpusView` (norms shard with the rows).
     """
-    if use_pallas:
-        return _lt.gather_score_local(corpus_local, queries, ids, offset,
-                                      metric=metric, interpret=interpret)
-    return ref.gather_score_local_ref(corpus_local, queries, ids, offset,
-                                      metric=metric)
+    be = _resolve(backend, use_pallas, interpret, "ops.gather_score_local")
+    if be.name == "xla_matmul":
+        return _matmul_score_local(as_corpus_view(corpus_local), queries,
+                                   ids, offset, metric)
+    if be.use_pallas:
+        view = as_corpus_view(corpus_local)
+        return _lt.gather_score_local(view.rows, queries, ids, offset,
+                                      metric=metric,
+                                      norms=_lt.pack_norms(view),
+                                      interpret=be.interpret)
+    return ref.gather_score_local_ref(corpus_rows(corpus_local), queries,
+                                      ids, offset, metric=metric)
 
 
 def local_topk(ids, dists, k):
@@ -78,12 +176,16 @@ def local_topk(ids, dists, k):
     ``k`` may exceed the row width (small shard pools): the cut is clamped
     to the width and the result padded with (-1, +inf) sentinel lanes, which
     sort last in any downstream merge and are dropped by its final cut.
+
+    The output distances keep the input dtype (ordering runs on an f32 view
+    of the keys — a monotonic, tie-stable embedding for bf16/f16) so
+    half-precision pools are not silently upcast.
     """
     width = ids.shape[1]
     kk = min(k, width)
-    neg, order = jax.lax.top_k(-dists.astype(jnp.float32), kk)
+    _, order = jax.lax.top_k(-dists.astype(jnp.float32), kk)
     out_ids = jnp.take_along_axis(ids, order, axis=1)
-    out_dists = -neg
+    out_dists = jnp.take_along_axis(dists, order, axis=1)
     if kk < k:
         b = ids.shape[0]
         out_ids = jnp.concatenate(
@@ -153,15 +255,19 @@ def sorted_set_unique_count(set_ids):
 
 
 def beam_merge_topk(beam_ids, beam_dists, cand_ids, cand_dists, *,
-                    use_pallas=False, interpret=False):
-    if use_pallas:
+                    backend=None, use_pallas=None, interpret=None):
+    be = _resolve(backend, use_pallas, interpret, "ops.beam_merge_topk")
+    # direct-op legacy semantics: use_pallas=True on the merge ops always
+    # meant "run the bitonic kernel here" (the engine-level merge knob was
+    # the separate use_fused_merge, which resolves via fused_merge)
+    if be.merge_pallas or use_pallas:
         return _lt.beam_merge_topk(beam_ids, beam_dists, cand_ids, cand_dists,
-                                   interpret=interpret)
+                                   interpret=be.interpret)
     return ref.beam_merge_topk_ref(beam_ids, beam_dists, cand_ids, cand_dists)
 
 
 def merge_pool_batch(pool_ids, pool_dists, expanded, cand_ids, cand_dists, *,
-                     use_pallas=False, interpret=False):
+                     backend=None, use_pallas=None, interpret=None):
     """Batched (beam ‖ fanout) pool merge with the ``expanded`` payload.
 
     The XLA path implements the *stable* merge contract of
@@ -169,27 +275,37 @@ def merge_pool_batch(pool_ids, pool_dists, expanded, cand_ids, cand_dists, *,
     earlier position — so an all-masked wave is an exact no-op) via
     ``lax.top_k``, which XLA guarantees returns equal keys lowest-index
     first; it is bit-identical to the argsort oracle but ~3x faster on CPU.
-    The Pallas path runs the bitonic network with the payload lane; it
-    returns the same multiset but may order equal distances differently.
+    The Pallas path (``backend="pallas"`` or the legacy ``use_fused_merge``
+    shim on the engine entry points) runs the lane-padded bitonic network
+    with the payload lane; it returns the same multiset but may order equal
+    distances differently. Both paths keep the distances' input dtype
+    (ordering runs on an f32 view of the keys).
     """
-    if use_pallas:
+    be = _resolve(backend, use_pallas, interpret, "ops.merge_pool_batch")
+    # direct-op legacy semantics: see beam_merge_topk
+    if be.merge_pallas or use_pallas:
         oi, od, of = _lt.beam_merge_topk(
             pool_ids, pool_dists, cand_ids, cand_dists,
             beam_flags=expanded.astype(jnp.int32),
             cand_flags=jnp.zeros(cand_ids.shape, jnp.int32),
-            interpret=interpret)
+            interpret=be.interpret)
         return oi, od, of.astype(bool)
     p = pool_ids.shape[1]
+    dtype = jnp.result_type(pool_dists.dtype, cand_dists.dtype)
     ids = jnp.concatenate([pool_ids, cand_ids], axis=1)
-    d = jnp.concatenate([pool_dists, cand_dists.astype(jnp.float32)], axis=1)
+    d = jnp.concatenate(
+        [pool_dists.astype(dtype), cand_dists.astype(dtype)], axis=1)
     exp = jnp.concatenate(
         [expanded, jnp.zeros(cand_ids.shape, dtype=bool)], axis=1)
-    _, order = jax.lax.top_k(-d, p)
+    _, order = jax.lax.top_k(-d.astype(jnp.float32), p)
     take = lambda a: jnp.take_along_axis(a, order, axis=1)  # noqa: E731
     return take(ids), take(d), take(exp)
 
 
-def embedding_bag(table, idx, *, mode="sum", use_pallas=False, interpret=False):
-    if use_pallas:
-        return _bag.embedding_bag(table, idx, mode=mode, interpret=interpret)
+def embedding_bag(table, idx, *, mode="sum", backend=None, use_pallas=None,
+                  interpret=None):
+    be = _resolve(backend, use_pallas, interpret, "ops.embedding_bag")
+    if be.use_pallas:
+        return _bag.embedding_bag(table, idx, mode=mode,
+                                  interpret=be.interpret)
     return ref.embedding_bag_ref(table, idx, mode=mode)

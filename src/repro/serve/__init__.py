@@ -25,6 +25,12 @@ of wave *i* overlaps the device plan/commit of wave *i+1*, while the two
 lanes never race on one wave's state. Results are bit-exact vs the
 synchronous ``query_batch`` path (which drives the identical wave coroutine
 inline), at any shard count.
+
+Every async request's submit→resolve wall clock is stamped into its
+``ServeStats.latency_ms`` (the serving-latency distribution the async
+bench reports and gates at p50); the engine's device-side kernel route is
+the ``backend=`` knob (``repro.kernels`` — ``"auto"`` = MXU-form scoring
+over an engine-lifetime corpus-norm cache, or the Pallas kernels on TPU).
 """
 from repro.serve.engine import (BiMetricEngine, EmbedTower,  # noqa: F401
                                 ServeFuture, ServeStats)

@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import kernels
 from repro.core import beam, distances, vamana
 from repro.distributed import sharding
 from repro.models import transformer as T
@@ -84,6 +85,10 @@ class ServeStats:
     # forward-pass batches drained for the WHOLE request batch (replicated
     # on every query's stats for convenience — do not sum across a batch)
     tower_batches: int = 0
+    # async path only: submit() -> future-resolution wall clock for THIS
+    # request (admission wait + wave compute). 0.0 on the synchronous
+    # drives, which have no queueing to measure.
+    latency_ms: float = 0.0
 
 
 class ServeFuture(concurrent.futures.Future):
@@ -113,6 +118,7 @@ class _Request:
     quota: int
     k: int
     future: ServeFuture
+    t_submit: float = 0.0  # monotonic stamp for the per-request latency
 
 
 @dataclasses.dataclass
@@ -166,9 +172,10 @@ def _wave_dists_j(doc_embs, q_D):
     return jnp.sqrt(jnp.sum(diff * diff, axis=-1))
 
 
-@jax.jit
-def _commit_j(state, safe, keep, dists):
-    return beam.commit_scores(state, safe, keep, dists)
+# Backend is a frozen (hashable) dataclass — a jit static, so each merge
+# route compiles its own program instead of tracing the knob.
+_commit_j = functools.partial(
+    jax.jit, static_argnames=("backend",))(beam.commit_scores)
 
 
 @jax.jit
@@ -201,9 +208,21 @@ class BiMetricEngine:
     backends are bit-exact to each other. Stage 1 (quota-unbounded proxy
     search) always keeps the bitmap, per the same auto rule.
 
+    ``backend`` selects the device-side kernel route for stage-1 wave
+    scoring and the pool merges (``repro.kernels.resolve_backend`` values):
+    ``"ref"`` (default) keeps the frozen-oracle numerics every parity
+    guarantee is stated against; ``"auto"`` is the deployment knob — MXU/
+    BLAS-form scoring over a **corpus-norm cache built once per engine
+    lifetime** (alongside the index; the index is corpus-immutable, so the
+    cache can never go stale) on CPU, the Pallas kernels on TPU. Stage 2's
+    distances come from the expensive tower, so its backend choice only
+    routes the commit merges.
+
     ``max_batch`` / ``max_wait_ms`` / ``max_inflight`` configure the async
     admission pipeline (see :meth:`submit`); they are inert for the
-    synchronous ``query*`` paths.
+    synchronous ``query*`` paths. Async requests additionally report their
+    submit→resolve wall clock in ``ServeStats.latency_ms`` (the quantity
+    the serving bench gates at p50).
     """
 
     def __init__(self, cheap: EmbedTower, expensive: EmbedTower,
@@ -211,7 +230,8 @@ class BiMetricEngine:
                  index_cfg: vamana.VamanaConfig | None = None,
                  tower_batch: int = 64, shards: int = 1,
                  max_batch: int = 8, max_wait_ms: float = 5.0,
-                 max_inflight: int = 2, dedup: str = "auto"):
+                 max_inflight: int = 2, dedup: str = "auto",
+                 backend="ref"):
         self.cheap = cheap
         self.expensive = expensive
         self.corpus_tokens = corpus_tokens
@@ -221,6 +241,12 @@ class BiMetricEngine:
         if dedup not in ("auto", "sorted", "bitmap"):
             raise ValueError(f"unknown dedup backend {dedup!r}")
         self.dedup = dedup
+        # kernel backend for the device side (stage-1 wave scoring + pool
+        # merges). "ref" keeps the frozen-oracle numerics; "auto" is the
+        # deployment knob (matmul form over the engine-lifetime corpus-norm
+        # cache on CPU, the Pallas kernels on TPU).
+        self.backend = kernels.resolve_backend(
+            backend, _caller="serve.BiMetricEngine")
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1e3
         self.max_inflight = max(1, max_inflight)
@@ -231,12 +257,20 @@ class BiMetricEngine:
                                       max_degree=16, l_build=24, pool_size=48,
                                       rev_candidates=16))
         self._em_d = distances.EmbeddingMetric(self.emb_d)
+        # stage-1 scoring route: the matmul backends thread the corpus-norm
+        # cache (built ONCE here, like the index) through every wave
+        if self.backend.matmul and shards == 1:
+            self._dist_d = beam.fused_dist_fn(
+                self.emb_d, self._em_d.metric, backend=self.backend)
+        else:
+            self._dist_d = self._em_d.dists_batch
         self._adjacency = self.index.adjacency.astype(jnp.int32)
         # one mesh for the engine lifetime; stage 2 steps through the same
         # mesh as stage 1 (ShardedStepper = the in-mesh plan/commit programs)
         self._mesh = (sharding.search_mesh(shards) if shards > 1 else None)
         self._stepper = (beam.ShardedStepper(
-            shards=shards, n_points=self.n, mesh=self._mesh)
+            shards=shards, n_points=self.n, mesh=self._mesh,
+            backend=self.backend)
             if shards > 1 else None)
         # lazy expensive-tower document embeddings (engine-lifetime cache)
         self._emb_D: np.ndarray | None = None
@@ -271,11 +305,11 @@ class BiMetricEngine:
                 self.emb_d, self._adjacency, q_d, entries,
                 shards=self.shards, metric=self._em_d.metric,
                 mesh=self._mesh, beam_width=width, pool_size=pool,
-                max_steps=max_steps)
+                max_steps=max_steps, backend=self.backend)
         return beam.batched_greedy_search(
-            self._em_d.dists_batch, self._adjacency, q_d, entries,
+            self._dist_d, self._adjacency, q_d, entries,
             n_points=self.n, beam_width=width, pool_size=pool,
-            max_steps=max_steps)
+            max_steps=max_steps, backend=self.backend)
 
     def _drain_tower(self, ids: np.ndarray) -> int:
         """Embed not-yet-cached docs through the expensive tower; returns the
@@ -392,7 +426,8 @@ class BiMetricEngine:
                     state, self._adjacency, quota_j, L_j, ms_j,
                     expand_width=expand_width)
             else:
-                state = _commit_j(state, safe, keep, dists)
+                state = _commit_j(state, safe, keep, dists,
+                                  backend=self.backend)
                 if not bool(_active_any_j(state, quota_j, L_j, ms_j)):
                     break
                 state, safe, keep, _ = _plan_step_j(
@@ -456,7 +491,7 @@ class BiMetricEngine:
         first use. Raises ``RuntimeError`` after :meth:`close`."""
         fut = ServeFuture()
         req = _Request(tokens=np.asarray(tokens), quota=int(quota),
-                       k=int(k), future=fut)
+                       k=int(k), future=fut, t_submit=time.monotonic())
         # check-closed + enqueue under the lifecycle lock: close() flips
         # _closed under the same lock before it posts the sentinel, so a
         # request can never land behind the sentinel unresolved
@@ -548,10 +583,14 @@ class BiMetricEngine:
         self._device_q.put(_STOP)
 
     def _finish_wave(self, wave: _Wave, value) -> None:
+        done = time.monotonic()
         ids, dd, stats = value
         for i, r in enumerate(wave.requests):
             row_ids, row_dd = ids[i, :r.k], dd[i, :r.k]
             ok = (row_ids >= 0) & np.isfinite(row_dd)
+            # per-request wall clock: admission wait + wave compute — the
+            # serving latency the async bench gates (p50/p95)
+            stats[i].latency_ms = (done - r.t_submit) * 1e3
             r.future._resolve((row_ids[ok], row_dd[ok], stats[i]))
 
     def _fail_wave(self, wave: _Wave, exc: BaseException) -> None:

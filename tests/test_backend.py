@@ -1,0 +1,293 @@
+"""Kernel-backend dispatch: parity grid, norm cache, deprecation shims.
+
+The contract (see ``repro/kernels/__init__.py``): ``"ref"`` is the frozen
+oracle; ``"xla_matmul"`` and ``"pallas"``(-interpret) score waves in matmul
+form over the corpus-norm cache — same math up to fp reassociation, so the
+grid pins *pool distances within fp tolerance and recall@10 identical*
+against the ref backend, across all four metrics and shard counts
+{1, 2, 4}; within one backend, sharded == unsharded stays bit-exact.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import beam, distances, metrics
+from repro.kernels import backend as kernel_backend
+from repro.kernels import ops
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+METRICS = ("sqeuclidean", "l2", "ip", "cosine")
+FAST_BACKENDS = ("xla_matmul", "pallas-interpret")
+
+
+def _random_graph(seed=3, n=160, r=6, dim=12, b=4):
+    rng = np.random.default_rng(seed)
+    adj = rng.integers(0, n, (n, r)).astype(np.int32)
+    adj[rng.random((n, r)) < 0.2] = -1
+    emb = rng.normal(size=(n, dim)).astype(np.float32)
+    qs = rng.normal(size=(b, dim)).astype(np.float32)
+    return jnp.asarray(adj), jnp.asarray(emb), jnp.asarray(qs)
+
+
+# ------------------------------------------------------------- resolution
+def test_resolve_backend_names():
+    assert kernel_backend.resolve_backend("ref").name == "ref"
+    be = kernel_backend.resolve_backend("pallas-interpret")
+    assert be.name == "pallas" and be.interpret
+    with pytest.raises(ValueError):
+        kernel_backend.resolve_backend("mxu9000")
+    # a resolved Backend passes through untouched (idempotent knob)
+    assert kernel_backend.resolve_backend(be) is be
+
+
+def test_resolve_backend_auto_matches_devices():
+    """The auto rule: pallas iff a TPU is visible, xla_matmul otherwise."""
+    be = kernel_backend.resolve_backend("auto")
+    has_tpu = any(d.platform == "tpu" for d in jax.devices())
+    assert be.name == ("pallas" if has_tpu else "xla_matmul")
+
+
+def test_legacy_shims_keep_independent_knob_semantics():
+    """The historical kwargs were independent: ``use_pallas`` routed the
+    scoring kernels only and the merge stayed on the stable XLA cut unless
+    ``use_fused_merge=True`` — a shimmed call must not silently flip the
+    merge route the way the new name-derived knob does."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        be = kernel_backend.resolve_backend(use_pallas=True)
+        assert be.use_pallas and be.merge_pallas is False
+        be = kernel_backend.resolve_backend(use_pallas=True,
+                                            use_fused_merge=True)
+        assert be.use_pallas and be.merge_pallas is True
+        # interpret alone keeps the full legacy default (ref + XLA merge)
+        be = kernel_backend.resolve_backend(interpret=True)
+        assert be.name == "ref" and be.interpret and not be.merge_pallas
+    # the new knob derives the fused merge from the backend name
+    assert kernel_backend.resolve_backend("pallas").merge_pallas
+    assert not kernel_backend.resolve_backend("xla_matmul").merge_pallas
+
+
+def test_backend_is_jit_static():
+    """Backend is frozen/hashable — usable as a jit static argument."""
+    be = kernel_backend.Backend("xla_matmul")
+    assert hash(be) == hash(kernel_backend.Backend("xla_matmul"))
+    f = jax.jit(lambda x, *, backend: x + 1, static_argnames=("backend",))
+    assert int(f(jnp.int32(1), backend=be)) == 2
+
+
+# ------------------------------------------------------------- norm cache
+def test_corpus_view_zero_row_padding():
+    """Uneven-shard zero padding rows carry norm 0 and a finite inverse
+    norm, and score exactly 1.0 under cosine in every backend — padding
+    never pollutes the metric (no NaN/inf leaks past the id mask)."""
+    rng = np.random.default_rng(0)
+    corpus = np.concatenate(
+        [rng.normal(size=(6, 8)).astype(np.float32), np.zeros((2, 8), np.float32)])
+    view = ops.as_corpus_view(jnp.asarray(corpus))
+    np.testing.assert_array_equal(np.asarray(view.sq_norms[6:]), 0.0)
+    assert np.isfinite(np.asarray(view.inv_norms)).all()
+    # as_corpus_view is idempotent (no double-normalization)
+    assert ops.as_corpus_view(view) is view
+    qs = jnp.asarray(rng.normal(size=(2, 8)).astype(np.float32))
+    ids = jnp.array([[0, 6, 7], [7, 3, -1]], jnp.int32)
+    for be in ("ref",) + FAST_BACKENDS:
+        d = np.asarray(ops.gather_score(view, qs, ids, metric="cosine",
+                                        backend=be))
+        assert np.isfinite(d[np.asarray(ids) >= 0]).all(), be
+        # a zero row has dot 0 with any query -> cosine distance exactly 1
+        np.testing.assert_allclose(d[0, 1], 1.0, atol=1e-6)
+        np.testing.assert_allclose(d[0, 2], 1.0, atol=1e-6)
+        assert np.isinf(d[1, 2])
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_matmul_form_matches_oracle(metric):
+    """Op-level grid: xla_matmul / pallas-interpret vs the ref oracle."""
+    key = jax.random.PRNGKey(11)
+    corpus = jax.random.normal(key, (100, 24))
+    qs = jax.random.normal(jax.random.fold_in(key, 1), (4, 24))
+    ids = jax.random.randint(jax.random.fold_in(key, 2), (4, 17), -1, 100)
+    view = ops.as_corpus_view(corpus)
+    d_ref = np.asarray(ops.gather_score(corpus, qs, ids, metric=metric))
+    fin = np.isfinite(d_ref)
+    for be in FAST_BACKENDS:
+        d_be = np.asarray(ops.gather_score(view, qs, ids, metric=metric,
+                                           backend=be))
+        np.testing.assert_allclose(d_be[fin], d_ref[fin], rtol=1e-4,
+                                   atol=1e-4, err_msg=be)
+        assert (np.isinf(d_be) == ~fin).all(), be
+
+
+# ------------------------------------------------------- end-to-end parity
+@pytest.mark.parametrize("metric", METRICS)
+def test_search_parity_grid_unsharded(metric):
+    """{ref, xla_matmul, pallas-interpret} through the full batched engine:
+    recall@10 identical to the ref backend, pool dists within fp tol."""
+    adj, emb, qs = _random_graph()
+    n = emb.shape[0]
+    entries = jnp.zeros((qs.shape[0], 1), jnp.int32)
+    true_ids, _ = distances.EmbeddingMetric(emb, metric).brute_force(qs, 10)
+
+    def search(be):
+        return beam.batched_greedy_search(
+            beam.fused_dist_fn(emb, metric, backend=be), adj, qs, entries,
+            n_points=n, beam_width=8, pool_size=16, quota=40, max_steps=60,
+            backend=be)
+
+    base = search("ref")
+    rec_ref = np.asarray(metrics.recall_at_k(base.pool_ids[:, :10], true_ids))
+    for be in FAST_BACKENDS:
+        res = search(be)
+        rec = np.asarray(metrics.recall_at_k(res.pool_ids[:, :10], true_ids))
+        np.testing.assert_array_equal(rec, rec_ref, err_msg=be)
+        np.testing.assert_allclose(
+            np.asarray(res.pool_dists), np.asarray(base.pool_dists),
+            rtol=1e-4, atol=1e-4, err_msg=be)
+        np.testing.assert_array_equal(
+            np.asarray(res.n_calls), np.asarray(base.n_calls), err_msg=be)
+
+
+@pytest.mark.slow
+def test_search_parity_grid_sharded():
+    """The full acceptance grid on 8 forced host devices: backends ×
+    metrics × shards {1, 2, 4}. Within one backend the sharded run is
+    bit-exact vs unsharded (norms shard with the corpus blocks; uneven N
+    exercises the zero-pad rows); across backends, recall@10 matches ref
+    and pool dists agree to fp tolerance."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, "src")
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.core import distances, metrics
+        from repro.core.beam import (batched_greedy_search, fused_dist_fn,
+                                     sharded_greedy_search)
+
+        rng = np.random.default_rng(3)
+        n, dim, b = 130, 8, 4   # uneven N: shard blocks get zero-pad rows
+        adj = rng.integers(0, n, (n, 6)).astype(np.int32)
+        adj[rng.random((n, 6)) < 0.2] = -1
+        adj = jnp.asarray(adj)
+        emb = jnp.asarray(rng.normal(size=(n, dim)).astype(np.float32))
+        qs = jnp.asarray(rng.normal(size=(b, dim)).astype(np.float32))
+        entries = jnp.broadcast_to(
+            jnp.array([0, 64, 100], jnp.int32), (b, 3))
+
+        for met in ("sqeuclidean", "l2", "ip", "cosine"):
+            true_ids, _ = distances.EmbeddingMetric(emb, met).brute_force(
+                qs, 10)
+            per_backend = {}
+            for be in ("ref", "xla_matmul", "pallas-interpret"):
+                base = batched_greedy_search(
+                    fused_dist_fn(emb, met, backend=be), adj, qs, entries,
+                    n_points=n, beam_width=8, pool_size=16, quota=13,
+                    max_steps=100, backend=be)
+                for shards in (1, 2, 4):
+                    res = sharded_greedy_search(
+                        emb, adj, qs, entries, shards=shards, metric=met,
+                        beam_width=8, pool_size=16, quota=13,
+                        max_steps=100, backend=be)
+                    for name, x, y in zip(base._fields, base, res):
+                        assert np.array_equal(
+                            np.asarray(x), np.asarray(y)), \\
+                            (met, be, shards, name)
+                per_backend[be] = base
+            rec_ref = np.asarray(metrics.recall_at_k(
+                per_backend["ref"].pool_ids[:, :10], true_ids))
+            for be in ("xla_matmul", "pallas-interpret"):
+                rec = np.asarray(metrics.recall_at_k(
+                    per_backend[be].pool_ids[:, :10], true_ids))
+                assert np.array_equal(rec, rec_ref), (met, be)
+                np.testing.assert_allclose(
+                    np.asarray(per_backend[be].pool_dists),
+                    np.asarray(per_backend["ref"].pool_dists),
+                    rtol=1e-4, atol=1e-4)
+            print(met, "OK", flush=True)
+        print("BACKEND_GRID_OK")
+    """)
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=ROOT, timeout=900)
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "BACKEND_GRID_OK" in res.stdout
+
+
+# --------------------------------------------------------------- serving
+def test_engine_backend_knob():
+    """BiMetricEngine(backend=...) answers match the ref-backend engine
+    (identical ids and budget accounting on a well-separated corpus)."""
+    from repro.configs import qwen3_0_6b
+    from repro.models import transformer as T
+    from repro.serve import BiMetricEngine, EmbedTower
+
+    key = jax.random.PRNGKey(0)
+    cheap_cfg = qwen3_0_6b.smoke()
+    exp_cfg = T.TransformerConfig(
+        name="exp-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        head_dim=16, d_ff=128, vocab=cheap_cfg.vocab, embed_dim=32)
+    cheap = EmbedTower(T.init_params(key, cheap_cfg), cheap_cfg)
+    expensive = EmbedTower(
+        T.init_params(jax.random.fold_in(key, 1), exp_cfg), exp_cfg)
+    corpus = np.random.default_rng(0).integers(
+        0, cheap_cfg.vocab, (64, 10), dtype=np.int32)
+    qs = corpus[[5, 33]].copy()
+
+    eng_ref = BiMetricEngine(cheap, expensive, corpus)
+    assert eng_ref.backend.name == "ref"
+    ids_ref, dd_ref, st_ref = eng_ref.query_batch(qs, quota=12, k=5)
+    eng_mm = BiMetricEngine(cheap, expensive, corpus, backend="xla_matmul")
+    ids_mm, dd_mm, st_mm = eng_mm.query_batch(qs, quota=12, k=5)
+    np.testing.assert_array_equal(ids_mm, ids_ref)
+    np.testing.assert_allclose(dd_mm, dd_ref, rtol=1e-5, atol=1e-5)
+    assert [s.D_calls for s in st_mm] == [s.D_calls for s in st_ref]
+
+
+# ------------------------------------------------------ deprecation shims
+def test_deprecated_knobs_warn_exactly_once():
+    """Every legacy boolean kwarg maps onto the backend knob and warns once
+    per (call site, kwarg) — the second call is silent."""
+    key = jax.random.PRNGKey(5)
+    corpus = jax.random.normal(key, (30, 8))
+    qs = jax.random.normal(jax.random.fold_in(key, 1), (2, 8))
+    ids = jax.random.randint(jax.random.fold_in(key, 2), (2, 5), -1, 30)
+    kernel_backend._warned.clear()
+    try:
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            d1 = ops.gather_score(corpus, qs, ids, use_pallas=False)
+            d2 = ops.gather_score(corpus, qs, ids, use_pallas=False)
+        dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+        assert len(dep) == 1
+        assert "use_pallas" in str(dep[0].message)
+        assert "backend=" in str(dep[0].message)
+        np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+        # the shimmed call is the ref oracle, bit-for-bit
+        np.testing.assert_array_equal(
+            np.asarray(d1), np.asarray(ops.gather_score(corpus, qs, ids)))
+        # a different (call site, kwarg) pair warns independently — once
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            for _ in range(2):
+                beam.commit_scores(
+                    beam.BatchedSearchState(
+                        pool_ids=jnp.full((2, 4), -1, jnp.int32),
+                        pool_dists=jnp.full((2, 4), jnp.inf),
+                        expanded=jnp.zeros((2, 4), bool),
+                        scored=jnp.zeros((2, 30), bool),
+                        n_calls=jnp.zeros((2,), jnp.int32),
+                        n_steps=jnp.zeros((2,), jnp.int32)),
+                    ids, ids >= 0, jnp.abs(jax.random.normal(key, (2, 5))),
+                    use_fused_merge=False)
+        dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+        assert len(dep) == 1
+        assert "use_fused_merge" in str(dep[0].message)
+    finally:
+        kernel_backend._warned.clear()

@@ -20,8 +20,8 @@ def test_flash_attention_sweep(b, h, sq, skv, dh, causal, dtype):
     k = jax.random.normal(ks[1], (b, h, skv, dh), dtype)
     v = jax.random.normal(ks[2], (b, h, skv, dh), dtype)
     o_ref = ref.flash_attention_ref(q, k, v, causal=causal)
-    o_pl = ops.flash_attention(q, k, v, causal=causal, use_pallas=True,
-                               interpret=True, block_q=32, block_k=32)
+    o_pl = ops.flash_attention(q, k, v, causal=causal, backend="pallas-interpret",
+                               block_q=32, block_k=32)
     tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
     np.testing.assert_allclose(
         np.asarray(o_pl, np.float32), np.asarray(o_ref, np.float32),
@@ -35,8 +35,8 @@ def test_flash_attention_mla_vdim():
     k = jax.random.normal(ks[1], (1, 2, 64, 48))
     v = jax.random.normal(ks[2], (1, 2, 64, 32))
     o_ref = ref.flash_attention_ref(q, k, v, causal=True)
-    o_pl = ops.flash_attention(q, k, v, causal=True, use_pallas=True,
-                               interpret=True, block_q=32, block_k=32)
+    o_pl = ops.flash_attention(q, k, v, causal=True, backend="pallas-interpret",
+                               block_q=32, block_k=32)
     np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_ref), atol=2e-5)
 
 
@@ -52,8 +52,8 @@ def test_flash_decode_sweep(b, h, s, dh, block):
     v = jax.random.normal(ks[2], (b, s, h, dh))
     lengths = jax.random.randint(ks[3], (b,), 1, s + 1)
     o_ref = ref.flash_decode_ref(q, k, v, length=lengths)
-    o_pl = ops.flash_decode(q, k, v, length=lengths, use_pallas=True,
-                            interpret=True, block_k=block)
+    o_pl = ops.flash_decode(q, k, v, length=lengths,
+                            backend="pallas-interpret", block_k=block)
     np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_ref), atol=2e-5)
 
 
@@ -65,7 +65,7 @@ def test_gather_l2_sweep(n, dim, b, k):
     qs = jax.random.normal(jax.random.fold_in(key, 1), (b, dim))
     ids = jax.random.randint(jax.random.fold_in(key, 2), (b, k), -1, n)
     d_ref = ref.l2_gather_dists_ref(corpus, qs, ids)
-    d_pl = ops.gather_l2(corpus, qs, ids, use_pallas=True, interpret=True)
+    d_pl = ops.gather_l2(corpus, qs, ids, backend="pallas-interpret")
     finite = np.isfinite(np.asarray(d_ref))
     np.testing.assert_allclose(np.asarray(d_pl)[finite],
                                np.asarray(d_ref)[finite], rtol=1e-4, atol=1e-4)
@@ -87,8 +87,8 @@ def test_gather_score_local_shard(metric, offset, n_local):
     local = corpus[offset:offset + n_local]
     d_ref = ref.gather_score_local_ref(local, qs, ids, offset, metric=metric)
     d_pl = ops.gather_score_local(local, qs, ids, jnp.int32(offset),
-                                  metric=metric, use_pallas=True,
-                                  interpret=True)
+                                  metric=metric,
+                                  backend="pallas-interpret")
     np.testing.assert_allclose(np.asarray(d_pl), np.asarray(d_ref),
                                rtol=1e-4, atol=1e-4)
     loc = np.asarray(ids) - offset
@@ -116,8 +116,8 @@ def test_gather_score_metrics(metric):
     qs = jax.random.normal(jax.random.fold_in(key, 1), (3, 48))
     ids = jax.random.randint(jax.random.fold_in(key, 2), (3, 20), -1, 120)
     d_ref = ref.gather_score_ref(corpus, qs, ids, metric=metric)
-    d_pl = ops.gather_score(corpus, qs, ids, metric=metric, use_pallas=True,
-                            interpret=True)
+    d_pl = ops.gather_score(corpus, qs, ids, metric=metric,
+                            backend="pallas-interpret")
     finite = np.isfinite(np.asarray(d_ref))
     np.testing.assert_allclose(np.asarray(d_pl)[finite],
                                np.asarray(d_ref)[finite], rtol=1e-4, atol=1e-4)
@@ -146,8 +146,8 @@ def test_merge_pool_batch_payload():
     assert (np.asarray(xi) == np.asarray(ri)).all()
     np.testing.assert_array_equal(np.asarray(xd), np.asarray(rd))
     assert (np.asarray(xf) == np.asarray(rf)).all()
-    gi, gd, gf = ops.merge_pool_batch(pi, pd, pf, ci, cd, use_pallas=True,
-                                      interpret=True)
+    gi, gd, gf = ops.merge_pool_batch(pi, pd, pf, ci, cd,
+                                      backend="pallas-interpret")
     np.testing.assert_allclose(np.asarray(gd), np.asarray(rd), atol=1e-6)
     assert (np.asarray(gi) == np.asarray(ri)).all()
     assert (np.asarray(gf) == np.asarray(rf)).all()
@@ -181,8 +181,8 @@ def test_beam_merge_sweep(L, K):
     ci = jax.random.randint(jax.random.fold_in(key, 2), (b, K), 0, 10_000)
     cd = jax.random.uniform(jax.random.fold_in(key, 3), (b, K))
     ri, rd = ref.beam_merge_topk_ref(bi, bd, ci, cd)
-    pi_, pd_ = ops.beam_merge_topk(bi, bd, ci, cd, use_pallas=True,
-                                   interpret=True)
+    pi_, pd_ = ops.beam_merge_topk(bi, bd, ci, cd,
+                                   backend="pallas-interpret")
     np.testing.assert_allclose(np.asarray(pd_), np.asarray(rd), atol=1e-6)
     # ids may differ only where distances tie (random uniforms: none)
     assert (np.asarray(pi_) == np.asarray(ri)).all()
@@ -197,8 +197,8 @@ def test_embedding_bag_sweep(v, d, b, l, mode):
     table = jax.random.normal(key, (v, d))
     idx = jax.random.randint(jax.random.fold_in(key, 1), (b, l), -1, v)
     e_ref = ref.embedding_bag_ref(table, idx, mode=mode)
-    e_pl = ops.embedding_bag(table, idx, mode=mode, use_pallas=True,
-                             interpret=True)
+    e_pl = ops.embedding_bag(table, idx, mode=mode,
+                             backend="pallas-interpret")
     np.testing.assert_allclose(np.asarray(e_pl), np.asarray(e_ref),
                                rtol=1e-5, atol=1e-5)
 
@@ -247,3 +247,108 @@ def test_sorted_set_ops():
         [1, 3, 4, 9, pad, pad], [2, 7, 7, 11, pad, pad]]
     # duplicate slots (the E=1 duplicate-lane quirk) collapse in the count
     assert np.asarray(ops.sorted_set_unique_count(s)).tolist() == [4, 3]
+
+
+@pytest.mark.parametrize("metric", ["l2", "sqeuclidean", "ip", "cosine"])
+def test_gather_score_matmul_tile(metric):
+    """The matmul-form scoring tile (norms operand) under interpret=True:
+    same values as the gather-then-reduce oracle for every metric, padding
+    lanes still +inf."""
+    from repro.kernels import l2_topk
+
+    key = jax.random.PRNGKey(23)
+    corpus = jax.random.normal(key, (90, 32))
+    qs = jax.random.normal(jax.random.fold_in(key, 1), (3, 32))
+    ids = jax.random.randint(jax.random.fold_in(key, 2), (3, 15), -1, 90)
+    view = ops.as_corpus_view(corpus)
+    d_pl = l2_topk.gather_score(corpus, qs, ids, metric=metric,
+                                norms=l2_topk.pack_norms(view),
+                                interpret=True)
+    d_ref = ref.gather_score_ref(corpus, qs, ids, metric=metric)
+    fin = np.isfinite(np.asarray(d_ref))
+    np.testing.assert_allclose(np.asarray(d_pl)[fin], np.asarray(d_ref)[fin],
+                               rtol=1e-4, atol=1e-4)
+    assert (np.isinf(np.asarray(d_pl)) == ~fin).all()
+
+
+@pytest.mark.parametrize("metric", ["sqeuclidean", "cosine"])
+def test_gather_score_local_matmul_tile(metric):
+    """Shard-local matmul tile: owned lanes match the oracle, foreign and
+    padding lanes emit the psum identity 0.0 (norms shard with the rows)."""
+    from repro.kernels import l2_topk
+
+    key = jax.random.PRNGKey(31)
+    n, offset, n_local = 100, 40, 35
+    corpus = jax.random.normal(key, (n, 16))
+    qs = jax.random.normal(jax.random.fold_in(key, 1), (2, 16))
+    ids = jax.random.randint(jax.random.fold_in(key, 2), (2, 12), -1, n)
+    local = corpus[offset:offset + n_local]
+    view = ops.as_corpus_view(local)
+    d_pl = l2_topk.gather_score_local(local, qs, ids, jnp.int32(offset),
+                                      metric=metric,
+                                      norms=l2_topk.pack_norms(view),
+                                      interpret=True)
+    d_ref = ref.gather_score_local_ref(local, qs, ids, offset, metric=metric)
+    np.testing.assert_allclose(np.asarray(d_pl), np.asarray(d_ref),
+                               rtol=1e-4, atol=1e-4)
+    loc = np.asarray(ids) - offset
+    owned = (np.asarray(ids) >= 0) & (loc >= 0) & (loc < n_local)
+    np.testing.assert_array_equal(np.asarray(d_pl)[~owned], 0.0)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float16])
+def test_gather_score_half_precision_corpus(dtype):
+    """bf16/f16 corpora flow through every backend: the norm cache keeps
+    the rows in their storage dtype (no silent f32 corpus copy) and the
+    distances agree with the f32 oracle to half-precision tolerance."""
+    key = jax.random.PRNGKey(41)
+    corpus32 = jax.random.normal(key, (80, 24))
+    corpus = corpus32.astype(dtype)
+    qs = jax.random.normal(jax.random.fold_in(key, 1), (3, 24))
+    ids = jax.random.randint(jax.random.fold_in(key, 2), (3, 11), -1, 80)
+    view = ops.as_corpus_view(corpus)
+    assert view.rows.dtype == dtype  # the cache must not upcast the corpus
+    assert view.sq_norms.dtype == jnp.float32
+    d32 = np.asarray(ops.gather_score(corpus32, qs, ids))
+    fin = np.isfinite(d32)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-2
+    for be in ("ref", "xla_matmul", "pallas-interpret"):
+        d = np.asarray(ops.gather_score(view, qs, ids, backend=be))
+        np.testing.assert_allclose(d[fin], d32[fin], rtol=tol, atol=tol,
+                                   err_msg=be)
+        assert (np.isinf(d) == ~fin).all(), be
+
+
+def test_local_topk_preserves_dtype():
+    """The per-shard cut must not silently upcast half-precision dists."""
+    ids = jnp.array([[5, 9, 2], [7, 1, 4]], jnp.int32)
+    for dtype in (jnp.bfloat16, jnp.float16, jnp.float32):
+        d = jnp.array([[0.3, 0.1, 0.5], [0.9, 0.2, 0.4]], dtype)
+        oi, od = ops.local_topk(ids, d, 5)
+        assert od.dtype == dtype
+        assert np.asarray(oi).tolist() == [[9, 5, 2, -1, -1],
+                                           [1, 4, 7, -1, -1]]
+        assert np.isinf(np.asarray(od, np.float32)[:, 3:]).all()
+
+
+def test_merge_preserves_dtype():
+    """Pool merges (stable XLA cut and the fused bitonic network) keep the
+    distances' input dtype end to end."""
+    key = jax.random.PRNGKey(13)
+    b, P, K = 2, 8, 6
+    pi = jax.random.randint(key, (b, P), 0, 99)
+    pf = jnp.zeros((b, P), bool)
+    ci = jax.random.randint(jax.random.fold_in(key, 1), (b, K), 0, 99)
+    for dtype in (jnp.bfloat16, jnp.float16):
+        pd = jnp.sort(jax.random.uniform(key, (b, P)), 1).astype(dtype)
+        cd = jax.random.uniform(jax.random.fold_in(key, 2),
+                                (b, K)).astype(dtype)
+        xi, xd, xf = ops.merge_pool_batch(pi, pd, pf, ci, cd)
+        assert xd.dtype == dtype
+        gi, gd = ops.beam_merge_topk(pi, pd, ci, cd,
+                                     backend="pallas-interpret")
+        assert gd.dtype == dtype
+        # same multiset of distances as the stable cut (ties may reorder)
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(gd, np.float32), 1),
+            np.sort(np.asarray(xd, np.float32)[:, :P], 1))
