@@ -70,14 +70,35 @@ def bench_env() -> dict:
     across PRs: a speedup measured on a different jax release or device
     class is a different experiment, and the stamp makes that visible in
     the committed baseline instead of reverse-engineering it from git
-    archaeology.
+    archaeology. Host and device memory sizes ride along so bytes-per-row
+    results (the quantized-residency scenario) stay comparable across the
+    future accelerator bench lane — a compression ratio only means
+    something against the memory it was measured to fit.
     """
     dev = jax.devices()[0]
+    host_mem = None
+    try:
+        with open("/proc/meminfo") as f:
+            for line in f:
+                if line.startswith("MemTotal:"):
+                    host_mem = int(line.split()[1]) * 1024
+                    break
+    except OSError:
+        pass
+    dev_mem = None
+    try:
+        stats = dev.memory_stats()
+        if stats:
+            dev_mem = stats.get("bytes_limit")
+    except (AttributeError, NotImplementedError, RuntimeError):
+        pass
     return {
         "jax_version": jax.__version__,
         "platform": dev.platform,
         "device_kind": dev.device_kind,
         "device_count": jax.device_count(),
+        "host_memory_bytes": host_mem,
+        "device_memory_bytes": dev_mem,
     }
 
 

@@ -687,6 +687,7 @@ def fused_dist_fn(
     backend: str | kernel_backend.Backend | None = None,
     use_pallas: bool | None = None,
     interpret: bool | None = None,
+    quantize: str | None = None,
 ) -> Callable[[Array, Array], Array]:
     """A ``dist_fn_batch`` that runs the backend-dispatched gather→score.
 
@@ -696,12 +697,19 @@ def fused_dist_fn(
     (``"xla_matmul"`` / ``"pallas"`` / ``"auto"``) build the corpus-norm
     cache **here, once** — the returned closure threads the prebuilt
     :class:`repro.kernels.CorpusView` through every wave, so ``‖x‖²`` is
-    never re-reduced inside the hot loop.
+    never re-reduced inside the hot loop. ``quantize`` (or a Backend
+    carrying the mode) builds the view with quantized residency — also
+    here, once; a prebuilt (possibly quantized) view passes straight
+    through and is scored as-is.
     """
     be = kernel_backend.resolve_backend(
         backend, use_pallas=use_pallas, interpret=interpret,
-        _caller="beam.fused_dist_fn")
-    src = kernel_backend.as_corpus_view(corpus) if be.matmul else corpus
+        quantize=quantize, _caller="beam.fused_dist_fn")
+    if (be.matmul or be.quantize is not None
+            or isinstance(corpus, kernel_backend.CorpusView)):
+        src = kernel_backend.as_corpus_view(corpus, quantize=be.quantize)
+    else:
+        src = corpus
 
     def fn(q_embs: Array, ids: Array) -> Array:
         return ops.gather_score(src, q_embs, ids, metric=metric, backend=be)
@@ -728,6 +736,7 @@ def sharded_greedy_search(
     use_pallas: bool | None = None,
     use_fused_merge: bool | None = None,
     interpret: bool | None = None,
+    quantize: str | None = None,
     dedup: str = "auto",
     set_capacity: int | None = None,
 ) -> SearchResult:
@@ -755,10 +764,15 @@ def sharded_greedy_search(
     (``repro.kernels.resolve_backend``); the matmul backends build the
     corpus-norm cache once on the host and shard the norms **with** the
     corpus blocks (same contiguous placement, zero-padded rows carry norm
-    0), so the cache adds nothing to the wave's psum traffic. The parity
-    guarantee is per-backend: sharded == unsharded under the *same*
-    backend (the ``"ref"`` default additionally stays bit-exact vs the
-    legacy engine).
+    0), so the cache adds nothing to the wave's psum traffic. ``quantize``
+    (or a Backend carrying the mode, or a prebuilt quantized view as
+    ``corpus``) holds the resident blocks as int8/fp8 codes with the
+    per-row dequant parameters sharded alongside the norms — pad rows
+    dequantize to exact zeros, and the replicated pools/counters make the
+    quantized sharded run bit-exact vs the quantized unsharded run for
+    the same view. The parity guarantee is per-backend: sharded ==
+    unsharded under the *same* backend (the ``"ref"`` default additionally
+    stays bit-exact vs the legacy engine).
 
     ``shards=1`` short-circuits to the single-device engine (today's path).
     """
@@ -766,13 +780,14 @@ def sharded_greedy_search(
 
     from repro.distributed import collectives
     from repro.distributed.sharding import (SEARCH_AXIS, search_mesh,
-                                            shard_corpus)
+                                            shard_corpus, shard_corpus_view)
     from repro.launch.mesh import shard_map
 
-    n_points = corpus.shape[0]
+    n_points = kernel_backend.corpus_rows(corpus).shape[0]
     be = kernel_backend.resolve_backend(
         backend, use_pallas=use_pallas, use_fused_merge=use_fused_merge,
-        interpret=interpret, _caller="beam.sharded_greedy_search")
+        interpret=interpret, quantize=quantize,
+        _caller="beam.sharded_greedy_search")
     if shards == 1:
         return batched_greedy_search(
             fused_dist_fn(corpus, metric, backend=be),
@@ -786,19 +801,24 @@ def sharded_greedy_search(
         dedup, set_capacity, quota, n_points, drive="fused")
 
     axis = axis_name or SEARCH_AXIS
-    stacked, n_local = shard_corpus(corpus, shards)
-    if be.matmul:
-        # corpus-norm cache, computed once on the host over the *padded*
-        # corpus (zero pad rows carry norm 0) and sharded exactly like the
-        # row blocks — the norms replicate with the corpus placement, so
-        # they never enter the wave psum
-        flat_view = kernel_backend.as_corpus_view(
-            stacked.reshape(shards * n_local, corpus.shape[1]))
-        sq_stack = flat_view.sq_norms.reshape(shards, n_local)
-        inv_stack = flat_view.inv_norms.reshape(shards, n_local)
+    # the resident form is static on the host: a view is built (and
+    # quantized) here exactly once, with the norms and dequant parameters
+    # sharded like the row blocks — nothing metadata enters the wave psum
+    quant = be.quantize
+    if quant is None and isinstance(corpus, kernel_backend.CorpusView):
+        quant = corpus.quantize
+    need_view = be.matmul or quant is not None
+    if need_view:
+        (stacked, sq_stack, inv_stack, sc_stack, zp_stack,
+         n_local) = shard_corpus_view(corpus, shards, quantize=be.quantize)
     else:
+        stacked, n_local = shard_corpus(
+            kernel_backend.corpus_rows(corpus), shards)
         sq_stack = jnp.zeros((shards, 0), jnp.float32)
         inv_stack = jnp.zeros((shards, 0), jnp.float32)
+        sc_stack = jnp.zeros((shards, 0), jnp.float32)
+        zp_stack = jnp.zeros((shards, 0), jnp.float32)
+    has_zp = quant is not None and zp_stack.shape[-1] > 0
     mesh = mesh if mesh is not None else search_mesh(shards, axis)
     ctx = ShardCtx(axis_name=axis, n_local=n_local)
     b, e0 = entry_ids.shape
@@ -813,13 +833,15 @@ def sharded_greedy_search(
     bw_arr = _per_query(beam_width, b)
     ms_arr = _per_query(max_steps, b)
 
-    def program(local_corpus, local_sq, local_inv, adj, q_embs, entries,
-                q, bw, ms):
+    def program(local_corpus, local_sq, local_inv, local_sc, local_zp,
+                adj, q_embs, entries, q, bw, ms):
         local_corpus = local_corpus[0]  # (1, n_local, dim) block -> local rows
-        if be.matmul:
+        if need_view:
             local_src = kernel_backend.CorpusView(
                 rows=local_corpus, sq_norms=local_sq[0],
-                inv_norms=local_inv[0])
+                inv_norms=local_inv[0],
+                scales=local_sc[0] if quant is not None else None,
+                zero_points=local_zp[0] if has_zp else None)
         else:
             local_src = local_corpus
 
@@ -843,11 +865,13 @@ def sharded_greedy_search(
         program,
         mesh=mesh,
         in_specs=(_P(axis, None, None), _P(axis, None), _P(axis, None),
+                  _P(axis, None), _P(axis, None),
                   rep2, rep2, rep2, rep1, rep1, rep1),
         out_specs=SearchResult(
             pool_ids=rep2, pool_dists=rep2, scored=scored_spec,
             n_calls=rep1, n_steps=rep1),
-    )(stacked, sq_stack, inv_stack, adjacency.astype(jnp.int32), query_embs,
+    )(stacked, sq_stack, inv_stack, sc_stack, zp_stack,
+      adjacency.astype(jnp.int32), query_embs,
       entry_ids.astype(jnp.int32), quota_arr, bw_arr, ms_arr)
     if dedup == "bitmap":
         # drop the zero-padding columns (global ids >= N never get scored)

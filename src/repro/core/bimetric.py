@@ -100,6 +100,7 @@ def bimetric_search(
     metric: str = "l2",
     mesh=None,
     backend=None,
+    quantize=None,
 ) -> BiMetricResult:
     """Batched bi-metric search.
 
@@ -126,12 +127,31 @@ def bimetric_search(
     per-corpus norm caches (built once per call); with metric callables the
     backend only routes the pool merges, since the scoring closure is the
     caller's. The default keeps the frozen oracle bit-exactly.
+
+    ``corpora`` entries may be prebuilt ``repro.kernels.CorpusView``
+    objects — then no per-call view construction happens (build once,
+    reuse across calls). ``quantize`` selects quantized residency for the
+    **proxy stage only**: the paper's contract is that d may be lossy
+    (quantization error folds into the C-approximation factor) while the
+    ground-truth stage D stays exact, so ``corpora[1]`` is never
+    quantized by this knob — hand in a prebuilt quantized view as
+    ``corpora[1]`` if a lossy ground truth is really wanted.
     """
+    import dataclasses as _dc
+
     b = q_cheap.shape[0]
-    be = kernel_backend.resolve_backend(backend, _caller="bimetric_search")
+    be1 = kernel_backend.resolve_backend(backend, quantize=quantize,
+                                         _caller="bimetric_search")
+    be = _dc.replace(be1, quantize=None)  # stage-2 backend: never quantized
     # embedding-backed metrics can score in matmul form even unsharded —
     # the norm caches are built once per corpus here, outside the loops
-    use_fused = corpora is not None and be.matmul
+
+    def _fused(corpus, bb):
+        return (bb.matmul or bb.quantize is not None
+                or isinstance(corpus, kernel_backend.CorpusView))
+
+    use_fused1 = corpora is not None and _fused(corpora[0], be1)
+    use_fused = corpora is not None and _fused(corpora[1], be)
     scalar_quota = jnp.ndim(quota) == 0  # python/numpy scalars alike
     if scalar_quota:
         quota = int(quota)
@@ -160,20 +180,20 @@ def bimetric_search(
                 quota=NO_QUOTA,
                 expand_width=expand_width,
                 max_steps=4 * l1,
-                backend=be,
+                backend=be1,
             )
             seeds, d_calls = res1.pool_ids[:, :n_seeds], res1.n_calls
         else:
             seeds, d_calls = _stage1_batch(
-                (fused_dist_fn(corpora[0], metric, backend=be)
-                 if use_fused else jax.vmap(cheap_fn_batch)),
+                (fused_dist_fn(corpora[0], metric, backend=be1)
+                 if use_fused1 else jax.vmap(cheap_fn_batch)),
                 index,
                 q_cheap,
                 n_points=n_points,
                 n_seeds=n_seeds,
                 l_search=l1,
                 expand_width=expand_width,
-                backend=be,
+                backend=be1,
             )
     else:  # "Default" ablation: start from the graph entry point only
         seeds = jnp.full((b, max(n_seeds, 1)), -1, jnp.int32)

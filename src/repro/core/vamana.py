@@ -229,6 +229,7 @@ def search(
     shards: int = 1,
     mesh=None,
     backend=None,
+    quantize=None,
 ) -> tuple[Array, Array, Array]:
     """Standard single-metric search. Returns (ids (B,k), dists (B,k), calls (B,)).
 
@@ -250,10 +251,17 @@ def search(
     frozen gather-then-reduce oracle (bit-exact vs the legacy engine);
     ``"xla_matmul"`` / ``"pallas"`` / ``"auto"`` score in matmul form over
     a corpus-norm cache built once per call — same results up to fp
-    association (recall-identical on non-degenerate data)."""
+    association (recall-identical on non-degenerate data).
+
+    ``corpus_emb`` may be a prebuilt ``repro.kernels.CorpusView`` — then
+    *no* per-call view construction happens at all (build it once with
+    ``repro.kernels.as_corpus_view`` and reuse it across calls), and a
+    quantized view is scored in its residency on every backend.
+    ``quantize`` (``"int8"`` / ``"fp8"`` / ``"fp8_e5m2"``) quantizes a raw
+    corpus for this call; prefer passing a prebuilt quantized view."""
     met = metric or index.config.metric
     L = beam_width or max(k, index.config.l_build)
-    n = corpus_emb.shape[0]
+    n = kernel_backend.corpus_rows(corpus_emb).shape[0]
     b = query_emb.shape[0]
     if (quota is not None and jnp.ndim(quota) == 0
             and not isinstance(quota, jax.core.Tracer)):
@@ -269,7 +277,8 @@ def search(
     ])
     entries_b = jnp.broadcast_to(entries, (b, entries.shape[0]))
     quota = quota if quota is not None else jnp.iinfo(jnp.int32).max // 2
-    be = kernel_backend.resolve_backend(backend, _caller="vamana.search")
+    be = kernel_backend.resolve_backend(backend, quantize=quantize,
+                                        _caller="vamana.search")
     if shards > 1:
         res = sharded_greedy_search(
             corpus_emb,
@@ -287,8 +296,10 @@ def search(
             backend=be,
         )
     else:
-        if be.matmul:
-            # matmul-form scoring over the norm cache (built once here)
+        if (be.matmul or be.quantize is not None
+                or isinstance(corpus_emb, kernel_backend.CorpusView)):
+            # matmul-form / quantized scoring over the (possibly prebuilt)
+            # corpus view — a raw array is wrapped once here
             dist_fn = beam_fused_dist_fn(corpus_emb, met, backend=be)
         else:
             em = distances.EmbeddingMetric(corpus_emb, met)

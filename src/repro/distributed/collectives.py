@@ -74,11 +74,12 @@ def wave_gather_score(corpus_local, queries: Array, ids: Array, *,
 
     ``corpus_local`` is this device's corpus block — a raw (n_local, dim)
     array or its :class:`repro.kernels.CorpusView` (the matmul backends'
-    norm cache shards with the rows, so it is a purely local operand);
+    norm cache — and a quantized view's per-row scale/zero-point
+    metadata — shards with the rows, so it is a purely local operand);
     ``ids`` (B, K) is the replicated wave. Returns the replicated (B, K)
     distances, bit-exact vs the unsharded ``ops.gather_score`` under the
-    same backend (ids < 0 -> +inf). ``use_pallas`` / ``interpret`` are the
-    deprecated shims for ``backend``.
+    same backend and residency (ids < 0 -> +inf). ``use_pallas`` /
+    ``interpret`` are the deprecated shims for ``backend``.
     """
     rows = kernel_backend.corpus_rows(corpus_local)
     part = ops.gather_score_local(

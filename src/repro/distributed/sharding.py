@@ -49,6 +49,59 @@ def shard_corpus(corpus: jax.Array, n_shards: int) -> tuple[jax.Array, int]:
     return corpus.reshape(n_shards, n_local, dim), n_local
 
 
+def shard_corpus_view(corpus, n_shards: int, *, quantize: str | None = None):
+    """Contiguous-block placement of a full CorpusView (rows + metadata).
+
+    ``corpus`` is a raw (N, dim) array or a prebuilt
+    ``repro.kernels.CorpusView`` (possibly quantized). Returns
+    ``(rows, sq, inv, scales, zero_points, n_local)`` stacks shaped
+    (S, n_local, dim) / (S, n_local): the per-row dequant metadata shards
+    **with** the corpus blocks — same placement, nothing enters the wave
+    psum. ``scales`` / ``zero_points`` are zero-width (S, 0) stacks when
+    the view has no such field (raw residency, or the symmetric fp8 modes
+    for ``zero_points``) so ``shard_map`` operand arity stays fixed.
+
+    Pad rows stay inert in every residency: a raw array is zero-padded
+    *before* quantization (zero rows quantize to codes that dequantize to
+    exact zeros), and a prebuilt quantized view is padded with
+    code 0 / scale 1 / zero-point 0, which also dequantizes to exact
+    zeros — norm 0, finite inverse norm, cosine 1.0, like every pad row.
+    """
+    from repro.kernels.backend import NORM_EPS, CorpusView, as_corpus_view
+
+    if isinstance(corpus, CorpusView):
+        view = as_corpus_view(corpus, quantize=quantize)  # validates mode
+        n, dim = view.rows.shape
+        n_local = -(-n // n_shards)
+        pad = n_shards * n_local - n
+        rows = jnp.concatenate(
+            [view.rows, jnp.zeros((pad, dim), view.rows.dtype)])
+        sq = jnp.concatenate([view.sq_norms, jnp.zeros(pad, jnp.float32)])
+        inv = jnp.concatenate(
+            [view.inv_norms,
+             jnp.full(pad, jax.lax.rsqrt(jnp.float32(NORM_EPS)))])
+        scales = view.scales
+        if scales is not None:
+            scales = jnp.concatenate([scales, jnp.ones(pad, jnp.float32)])
+        zps = view.zero_points
+        if zps is not None:
+            zps = jnp.concatenate([zps, jnp.zeros(pad, jnp.float32)])
+    else:
+        stacked, n_local = shard_corpus(corpus, n_shards)
+        flat = stacked.reshape(n_shards * n_local, corpus.shape[1])
+        view = as_corpus_view(flat, quantize=quantize)
+        rows, sq, inv = view.rows, view.sq_norms, view.inv_norms
+        scales, zps = view.scales, view.zero_points
+
+    def stack(a):
+        if a is None:
+            return jnp.zeros((n_shards, 0), jnp.float32)
+        return a.reshape(n_shards, n_local, *a.shape[1:])
+
+    return (stack(rows), stack(sq), stack(inv), stack(scales), stack(zps),
+            n_local)
+
+
 def search_mesh(n_shards: int, axis_name: str = SEARCH_AXIS) -> Mesh:
     """1-D mesh over the first ``n_shards`` local devices."""
     from repro.launch.mesh import axis_types_kw

@@ -33,9 +33,29 @@ Backend-selection contract
   snapshot of ``(rows, ‖x‖², 1/‖x‖)``; build it once per corpus *outside*
   the hot loop with :func:`as_corpus_view` and thread it through. jax
   arrays cannot be mutated, so "corpus mutation" means a new array — build
-  a new view then. Zero padding rows (uneven shards) carry norm 0 and a
-  finite inverse norm: they score +inf/ignored like every other masked
-  lane and never pollute cosine.
+  a new view then (requantizing an existing view raises: views never
+  change residency silently). Zero padding rows (uneven shards) carry
+  norm 0 and a finite inverse norm: they score +inf/ignored like every
+  other masked lane and never pollute cosine.
+* **quantized residency** — ``as_corpus_view(corpus, quantize="int8" |
+  "fp8" | "fp8_e5m2")`` stores the rows as quantization codes with
+  per-row dequant parameters (int8: affine scale + zero-point; fp8:
+  symmetric scale), 4x less row payload than f32 at any dim. The view is
+  then a **lossy proxy**: norms are computed over the dequantized rows,
+  and every backend scores exactly that proxy through one dequant
+  semantics (``ref.dequant_rows_ref``) — the Pallas tile dequantizes
+  in-register (scale/zero-point ride the prefetched row-metadata operand
+  next to the norms), ``xla_matmul`` runs a dequant-then-dot epilogue,
+  and ``"ref"`` dispatches the quantized oracles
+  (``ref.gather_score_quant_ref``). This is the bi-metric paper's own
+  contract: the cheap stage may be lossy (quantization error folds into
+  the C-approximation factor), so quantization is only ever applied to
+  proxy corpora — ``bimetric_search``/``BiMetricEngine`` never quantize
+  the ground-truth stage, and ``"auto"`` never silently quantizes:
+  residency is the caller's explicit ``quantize=`` (or prebuilt-view)
+  choice, orthogonal to the execution-path knob. Parity is pinned by
+  ``tests/test_quantize.py`` (round-trip bounds, backend × metric ×
+  shard grid, recall@10 at matched quota).
 * **deprecated shims** — the historical ``use_pallas`` /
   ``use_fused_merge`` / ``interpret`` boolean kwargs still work and map
   onto the equivalent ``Backend``, emitting one ``DeprecationWarning`` per

@@ -36,6 +36,20 @@ view with :func:`as_corpus_view` at that point; holding the old view against
 a new corpus is the only way to get stale norms, and nothing in the engine
 does it (the serving engine builds its view once per engine lifetime,
 alongside the index, which is itself corpus-immutable).
+
+**Quantized residency**: ``as_corpus_view(corpus, quantize="int8"|"fp8")``
+stores the resident rows quantized — int8 with a per-row affine
+scale/zero-point pair, or fp8 (e4m3 by default, ``"fp8_e5m2"`` where the
+jax dtype exists) with a per-row scale — while the norm cache is computed
+over the *dequantized* rows, so the matmul-form expansion stays exact
+against the one dequant semantics (``repro.kernels.ref.dequant_rows_ref``).
+The paper's framing makes this a principled lever: the proxy stage may be
+lossy (quantization error folds into the C-approximation factor) while the
+ground-truth stage stays exact, so the resident corpus shrinks 4x vs f32
+(2x vs bf16) at dim 256 and the gather-bound wave moves proportionally
+fewer HBM bytes. Quantization happens exactly once, at view build; views
+stay immutable snapshots, and ``"auto"`` never silently quantizes — a
+quantized view only ever exists because a caller asked for one.
 """
 from __future__ import annotations
 
@@ -46,9 +60,24 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ref as _ref
+
 Array = jax.Array
 
 BACKEND_NAMES = ("ref", "xla_matmul", "pallas")
+
+#: quantized-residency modes accepted by :func:`as_corpus_view` (and the
+#: ``quantize=`` knob on the entry points). "fp8" is e4m3; "fp8_e5m2" is the
+#: wide-exponent variant. Modes whose jax dtype is missing in this build are
+#: rejected at view-build time with a clear error instead of at trace time.
+QUANTIZE_MODES = ("int8", "fp8", "fp8_e5m2")
+
+# fp8 dtype table, gated on availability in the installed jax/ml_dtypes
+_FP8_DTYPES: dict[str, object] = {}
+if hasattr(jnp, "float8_e4m3fn"):
+    _FP8_DTYPES["fp8"] = jnp.float8_e4m3fn
+if hasattr(jnp, "float8_e5m2"):
+    _FP8_DTYPES["fp8_e5m2"] = jnp.float8_e5m2
 
 #: epsilon under the cosine rsqrt — must match ``repro.kernels.ref`` so the
 #: matmul form agrees with the oracle on (near-)zero rows: a zero row (e.g.
@@ -64,16 +93,29 @@ class Backend:
     ``fused_merge`` overrides the merge route only: ``None`` (default)
     derives it from the backend name (the bitonic kernel iff ``pallas``);
     the legacy ``use_fused_merge`` shim maps onto it.
+
+    ``quantize`` asks the scoring path to hold the corpus in quantized
+    residency (:data:`QUANTIZE_MODES`): entry points that build the view
+    build it quantized, and a prebuilt view handed in must carry the same
+    mode (mismatches raise — a quantized view is never silently
+    requantized or promoted). ``None`` scores whatever residency the view
+    already has, so prebuilt quantized views flow through every backend
+    without restating the mode at each call site.
     """
 
     name: str  # "ref" | "xla_matmul" | "pallas"
     interpret: bool = False  # run Pallas bodies in interpret mode (CPU CI)
     fused_merge: bool | None = None
+    quantize: str | None = None  # None | "int8" | "fp8" | "fp8_e5m2"
 
     def __post_init__(self):
         if self.name not in BACKEND_NAMES:
             raise ValueError(
                 f"backend must be one of {BACKEND_NAMES}, got {self.name!r}")
+        if self.quantize is not None and self.quantize not in QUANTIZE_MODES:
+            raise ValueError(
+                f"quantize must be None or one of {QUANTIZE_MODES}, "
+                f"got {self.quantize!r}")
 
     @property
     def use_pallas(self) -> bool:
@@ -125,6 +167,7 @@ def resolve_backend(
     use_pallas: bool | None = None,
     use_fused_merge: bool | None = None,
     interpret: bool | None = None,
+    quantize: str | None = None,
     default: str = "ref",
     _caller: str = "repro.kernels",
 ) -> Backend:
@@ -137,15 +180,27 @@ def resolve_backend(
     decide — each one explicitly passed emits a once-per-call-site
     ``DeprecationWarning`` — and when nothing at all is passed the
     ``default`` (the frozen oracle) is returned.
+
+    ``quantize`` rides along onto the resolved Backend (it composes with
+    every name, including ``"auto"`` — auto picks the *execution* path,
+    never the residency). Passing both ``quantize=`` and a ``Backend``
+    that already carries a different mode raises.
     """
     if backend is not None:
         if isinstance(backend, Backend):
+            if quantize is not None and backend.quantize not in (None, quantize):
+                raise ValueError(
+                    f"{_caller}: quantize={quantize!r} conflicts with "
+                    f"backend.quantize={backend.quantize!r}")
+            if quantize is not None and backend.quantize is None:
+                return dataclasses.replace(backend, quantize=quantize)
             return backend
         if backend == "auto":
-            return Backend("pallas" if _tpu_present() else "xla_matmul")
+            return Backend("pallas" if _tpu_present() else "xla_matmul",
+                           quantize=quantize)
         if backend == "pallas-interpret":
-            return Backend("pallas", interpret=True)
-        return Backend(backend)
+            return Backend("pallas", interpret=True, quantize=quantize)
+        return Backend(backend, quantize=quantize)
     name = default
     fused = None
     interp = False
@@ -165,7 +220,8 @@ def resolve_backend(
     if interpret is not None:
         warn_deprecated_knob(_caller, "interpret")
         interp = bool(interpret)
-    return Backend(name, interpret=interp, fused_merge=fused)
+    return Backend(name, interpret=interp, fused_merge=fused,
+                   quantize=quantize)
 
 
 class CorpusView(NamedTuple):
@@ -181,13 +237,27 @@ class CorpusView(NamedTuple):
     the rows (same contiguous blocks), so the cache adds nothing to the
     wave's psum traffic.
 
+    **Quantized residency** (``scales is not None``): ``rows`` holds int8
+    or fp8 codes and ``scales`` / ``zero_points`` the per-row dequant
+    parameters (``zero_points`` is None for the symmetric fp8 modes). The
+    norms are computed over the *dequantized* rows, so the matmul-form
+    expansion scores the dequantized corpus exactly
+    (``ref.dequant_rows_ref`` is the one semantics every backend matches).
+    Zero rows quantize to codes that dequantize to exact zeros: norm 0,
+    finite inverse norm, cosine exactly 1.0 — uneven-shard padding stays
+    inert under quantization too. The dequant parameters shard with the
+    rows under the corpus mesh, riding the same contiguous blocks as the
+    norm cache.
+
     See the module docstring for the invalidation contract: views are
     snapshots; a new corpus array needs a new view.
     """
 
-    rows: Array  # (N, dim) — corpus, original dtype
-    sq_norms: Array  # (N,) f32 ‖x‖²
+    rows: Array  # (N, dim) — corpus: original dtype, or int8/fp8 codes
+    sq_norms: Array  # (N,) f32 ‖x‖² (of the dequantized rows if quantized)
     inv_norms: Array  # (N,) f32 1/√(‖x‖² + NORM_EPS)
+    scales: Array | None = None  # (N,) f32 per-row dequant scale
+    zero_points: Array | None = None  # (N,) f32 per-row zero point (int8)
 
     @property
     def n(self) -> int:
@@ -197,21 +267,116 @@ class CorpusView(NamedTuple):
     def dim(self) -> int:
         return self.rows.shape[1]
 
+    @property
+    def quantize(self) -> str | None:
+        """The residency mode of this view (a :data:`QUANTIZE_MODES` name)."""
+        if self.scales is None:
+            return None
+        if self.rows.dtype == jnp.int8:
+            return "int8"
+        for mode, dt in _FP8_DTYPES.items():
+            if self.rows.dtype == dt:
+                return mode
+        raise ValueError(
+            f"quantized view with unrecognized rows dtype {self.rows.dtype}")
 
-def as_corpus_view(corpus: Array | CorpusView) -> CorpusView:
+    @property
+    def bytes_per_row(self) -> int:
+        """Resident bytes per corpus row (codes + norms + dequant params)."""
+        per = self.rows.dtype.itemsize * self.dim
+        per += self.sq_norms.dtype.itemsize + self.inv_norms.dtype.itemsize
+        if self.scales is not None:
+            per += self.scales.dtype.itemsize
+        if self.zero_points is not None:
+            per += self.zero_points.dtype.itemsize
+        return per
+
+
+def _quantize_rows_int8(rows_f32: Array) -> tuple[Array, Array, Array]:
+    """Per-row affine int8: q = clip(round(x/s) + z), dequant (q - z)·s.
+
+    ``s = (max - min) / 255`` with a zero-range guard (constant rows take
+    s = 1 and quantize exactly onto their zero point), ``z`` the rounded
+    affine zero point. A zero row therefore dequantizes to exact zeros.
+    """
+    mn = jnp.min(rows_f32, axis=-1)
+    mx = jnp.max(rows_f32, axis=-1)
+    scale = (mx - mn) / 255.0
+    scale = jnp.where(scale > 0.0, scale, 1.0)
+    zp = jnp.round(-128.0 - mn / scale)
+    q = jnp.clip(jnp.round(rows_f32 / scale[:, None]) + zp[:, None],
+                 -128.0, 127.0).astype(jnp.int8)
+    return q, scale, zp
+
+
+def _quantize_rows_fp8(rows_f32: Array, dtype) -> tuple[Array, Array]:
+    """Per-row symmetric fp8: q = (x/s).astype(fp8), dequant q·s.
+
+    ``s = max|x| / finfo(dtype).max`` with a zero guard, so each row uses
+    the format's full dynamic range and zero rows stay exactly zero (fp8
+    represents 0 exactly).
+    """
+    fmax = float(jnp.finfo(dtype).max)
+    amax = jnp.max(jnp.abs(rows_f32), axis=-1)
+    scale = jnp.where(amax > 0.0, amax / fmax, 1.0)
+    q = (rows_f32 / scale[:, None]).astype(dtype)
+    return q, scale
+
+
+def as_corpus_view(corpus: Array | CorpusView,
+                   quantize: str | None = None) -> CorpusView:
     """Build (or pass through) the norm cache for a corpus.
 
     Idempotent: a :class:`CorpusView` is returned unchanged, so call sites
     can accept either form and the norms are only ever computed once per
     corpus — build the view *outside* any hot loop and thread it through.
+
+    ``quantize`` selects quantized residency (:data:`QUANTIZE_MODES`):
+    rows are stored as int8/fp8 codes with per-row dequant parameters, and
+    the norms are computed over the dequantized rows (the lossy proxy the
+    scoring paths actually score). Handing in a prebuilt view with a
+    *different* mode raises — requantizing an existing view (raw → int8,
+    int8 → fp8, ...) is never done silently; build a fresh view from the
+    original corpus instead.
     """
     if isinstance(corpus, CorpusView):
+        if quantize is not None and corpus.quantize != quantize:
+            raise ValueError(
+                f"as_corpus_view(quantize={quantize!r}) got a prebuilt view "
+                f"with quantize={corpus.quantize!r}; views are immutable "
+                "snapshots — build a new view from the original corpus")
         return corpus
-    sq = jnp.sum(jnp.square(corpus.astype(jnp.float32)), axis=-1)
+    if quantize is None:
+        sq = jnp.sum(jnp.square(corpus.astype(jnp.float32)), axis=-1)
+        return CorpusView(
+            rows=corpus,
+            sq_norms=sq,
+            inv_norms=jax.lax.rsqrt(sq + NORM_EPS),
+        )
+    if quantize not in QUANTIZE_MODES:
+        raise ValueError(
+            f"quantize must be None or one of {QUANTIZE_MODES}, "
+            f"got {quantize!r}")
+    rows_f32 = corpus.astype(jnp.float32)
+    if quantize == "int8":
+        q, scale, zp = _quantize_rows_int8(rows_f32)
+    else:
+        if quantize not in _FP8_DTYPES:
+            raise ValueError(
+                f"quantize={quantize!r} needs a jax float8 dtype this build "
+                f"does not provide (available: {sorted(_FP8_DTYPES)})")
+        q, scale = _quantize_rows_fp8(rows_f32, _FP8_DTYPES[quantize])
+        zp = None
+    # norms over the DEQUANTIZED rows: the matmul expansion then scores the
+    # lossy proxy exactly (one dequant semantics: ref.dequant_rows_ref)
+    deq = _ref.dequant_rows_ref(q, scale, zp)
+    sq = jnp.sum(jnp.square(deq), axis=-1)
     return CorpusView(
-        rows=corpus,
+        rows=q,
         sq_norms=sq,
         inv_norms=jax.lax.rsqrt(sq + NORM_EPS),
+        scales=scale,
+        zero_points=zp,
     )
 
 

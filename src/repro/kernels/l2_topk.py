@@ -60,6 +60,25 @@ def pack_norms(view: CorpusView) -> Array:
     return jnp.stack([view.sq_norms, view.inv_norms], axis=1)
 
 
+def pack_row_meta(view: CorpusView) -> Array:
+    """(N, 2) or (N, 4) f32 row-metadata operand for the scoring tile.
+
+    The generalization of :func:`pack_norms`: columns ``[‖x‖², 1/‖x‖]``
+    for a raw view, ``[‖x‖², 1/‖x‖, scale, zero_point]`` for a quantized
+    one (the zero-point column is 0.0 for the symmetric fp8 modes, so one
+    in-tile dequant ``(code - zp) * scale`` serves int8 and fp8 alike).
+    Streams by the same prefetched id as the corpus row; the column count
+    selects the kernel body in :func:`gather_score`.
+    """
+    cols = [view.sq_norms, view.inv_norms]
+    if view.scales is not None:
+        cols.append(view.scales.astype(jnp.float32))
+        zp = view.zero_points
+        cols.append(jnp.zeros_like(view.scales) if zp is None
+                    else zp.astype(jnp.float32))
+    return jnp.stack(cols, axis=1)
+
+
 # --------------------------------------------------------------------------
 # per-lane scoring bodies — one definition each, shared by the global and
 # shard-local kernels (only the masking tail differs between those)
@@ -117,6 +136,25 @@ def _gather_score_mm_kernel(ids_ref, q_ref, row_ref, nrm_ref, o_ref, *,
     o_ref[0, 0] = jnp.where(valid, d, float("inf"))
 
 
+def _gather_score_mm_quant_kernel(ids_ref, q_ref, row_ref, nrm_ref, o_ref, *,
+                                  metric: str):
+    """Matmul-form tile over quantized rows: dequant in-register.
+
+    ``row_ref`` streams the int8/fp8 codes (the HBM traffic is the codes,
+    not f32); the dequant ``(code - zp) * scale`` runs on the VMEM-resident
+    vector right before the dot, with scale/zp from columns 2/3 of the
+    row-metadata operand — ``ref.dequant_rows_ref`` semantics exactly, and
+    the cached norms (columns 0/1) already describe the dequantized row.
+    """
+    b = pl.program_id(0)
+    k = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)
+    row = (row_ref[0].astype(jnp.float32) - nrm_ref[0, 3]) * nrm_ref[0, 2]
+    d = _metric_score_mm(q, row, nrm_ref[0, 0], nrm_ref[0, 1], metric=metric)
+    valid = ids_ref[b, k] >= 0
+    o_ref[0, 0] = jnp.where(valid, d, float("inf"))
+
+
 def gather_score(corpus: Array, queries: Array, ids: Array, *,
                  metric: str = "sqeuclidean", norms: Array | None = None,
                  interpret: bool = False) -> Array:
@@ -124,9 +162,11 @@ def gather_score(corpus: Array, queries: Array, ids: Array, *,
 
     Ids < 0 are padding and map to +inf. The metric names and conventions
     match ``repro.core.distances`` ("ip" is negated, "cosine" is one-minus).
-    With ``norms`` (the packed (N, 2) corpus-norm cache, see
-    :func:`pack_norms`) the matmul-form tile runs — the row-norm reduce is
-    replaced by a cached load streamed by the same prefetched id.
+    With ``norms`` (the packed (N, 2) or (N, 4) row-metadata operand, see
+    :func:`pack_row_meta`) the matmul-form tile runs — the row-norm reduce
+    is replaced by a cached load streamed by the same prefetched id; the
+    4-column form additionally dequantizes int8/fp8 codes in-register
+    before the dot.
     """
     if metric not in VALID_METRICS:
         raise ValueError(f"metric must be one of {VALID_METRICS}, got {metric!r}")
@@ -144,10 +184,13 @@ def gather_score(corpus: Array, queries: Array, ids: Array, *,
     if norms is None:
         kernel = functools.partial(_gather_score_kernel, metric=metric)
     else:
-        kernel = functools.partial(_gather_score_mm_kernel, metric=metric)
-        # the norm cache streams by the same prefetched id as the row
+        ncols = norms.shape[1]
+        body = (_gather_score_mm_kernel if ncols == 2
+                else _gather_score_mm_quant_kernel)
+        kernel = functools.partial(body, metric=metric)
+        # the row metadata streams by the same prefetched id as the row
         in_specs.append(pl.BlockSpec(
-            (1, 2), lambda bi, ki, ids: (jnp.maximum(ids[bi, ki], 0), 0)))
+            (1, ncols), lambda bi, ki, ids: (jnp.maximum(ids[bi, ki], 0), 0)))
         operands.append(norms.astype(jnp.float32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -195,6 +238,21 @@ def _gather_score_local_mm_kernel(off_ref, ids_ref, q_ref, row_ref, nrm_ref,
     o_ref[0, 0] = jnp.where(owned, d, 0.0)
 
 
+def _gather_score_local_mm_quant_kernel(off_ref, ids_ref, q_ref, row_ref,
+                                        nrm_ref, o_ref, *, metric: str,
+                                        n_local: int):
+    # shard-local twin of _gather_score_mm_quant_kernel: in-register dequant
+    # of the streamed codes, psum identity on foreign/padding lanes
+    b = pl.program_id(0)
+    k = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)
+    row = (row_ref[0].astype(jnp.float32) - nrm_ref[0, 3]) * nrm_ref[0, 2]
+    d = _metric_score_mm(q, row, nrm_ref[0, 0], nrm_ref[0, 1], metric=metric)
+    loc = ids_ref[b, k] - off_ref[0]
+    owned = (ids_ref[b, k] >= 0) & (loc >= 0) & (loc < n_local)
+    o_ref[0, 0] = jnp.where(owned, d, 0.0)
+
+
 def gather_score_local(corpus_local: Array, queries: Array, ids: Array,
                        offset: Array, *, metric: str = "sqeuclidean",
                        norms: Array | None = None,
@@ -206,8 +264,9 @@ def gather_score_local(corpus_local: Array, queries: Array, ids: Array,
     it is ``axis_index * n_local``). Owned lanes stream their local row
     HBM→VMEM by remapped id exactly like :func:`gather_score`; foreign and
     padding lanes emit the psum identity 0.0. ``norms`` is the *local*
-    block's packed norm cache (it shards with the rows) and selects the
-    matmul-form tile.
+    block's packed row metadata ((n_local, 2) raw / (n_local, 4)
+    quantized — it shards with the rows) and selects the matmul-form tile,
+    with in-register dequant for the 4-column form.
     """
     if metric not in VALID_METRICS:
         raise ValueError(f"metric must be one of {VALID_METRICS}, got {metric!r}")
@@ -229,10 +288,12 @@ def gather_score_local(corpus_local: Array, queries: Array, ids: Array,
         kernel = functools.partial(_gather_score_local_kernel, metric=metric,
                                    n_local=n_local)
     else:
-        kernel = functools.partial(_gather_score_local_mm_kernel,
-                                   metric=metric, n_local=n_local)
+        ncols = norms.shape[1]
+        body = (_gather_score_local_mm_kernel if ncols == 2
+                else _gather_score_local_mm_quant_kernel)
+        kernel = functools.partial(body, metric=metric, n_local=n_local)
         in_specs.append(pl.BlockSpec(
-            (1, 2),
+            (1, ncols),
             lambda bi, ki, off, ids: (
                 jnp.clip(ids[bi, ki] - off[0], 0, n_local - 1), 0)))
         operands.append(norms.astype(jnp.float32))

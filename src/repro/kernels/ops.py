@@ -37,10 +37,31 @@ from repro.kernels.backend import Backend, resolve_backend  # noqa: F401
 Array = jax.Array
 
 
-def _resolve(backend, use_pallas, interpret, caller, use_fused_merge=None):
+def _resolve(backend, use_pallas, interpret, caller, use_fused_merge=None,
+             quantize=None):
     return _backend.resolve_backend(
         backend, use_pallas=use_pallas, use_fused_merge=use_fused_merge,
-        interpret=interpret, _caller=caller)
+        interpret=interpret, quantize=quantize, _caller=caller)
+
+
+def _view_for(corpus, be: Backend, caller: str):
+    """Normalize the corpus input to what the backend scores.
+
+    A prebuilt :class:`CorpusView` always wins (its residency is scored
+    as-is; a conflicting ``be.quantize`` raises rather than requantizing).
+    A raw array is wrapped in a view when the backend needs one (matmul
+    form, or quantized residency requested) — per call, so hot loops
+    should hand in prebuilt views.
+    """
+    if isinstance(corpus, CorpusView):
+        if be.quantize is not None and corpus.quantize != be.quantize:
+            raise ValueError(
+                f"{caller}: backend asks quantize={be.quantize!r} but the "
+                f"prebuilt view carries quantize={corpus.quantize!r}")
+        return corpus
+    if be.matmul or be.quantize is not None:
+        return as_corpus_view(corpus, quantize=be.quantize)
+    return corpus
 
 
 def flash_attention(q, k, v, *, causal=True, sm_scale=None, backend=None,
@@ -73,9 +94,19 @@ def _matmul_score(view: CorpusView, queries: Array, ids: Array,
     CPU, MXU on TPU); the row-norm term comes from the cache instead of
     being re-reduced every wave. Same values as ``ref.gather_score_ref`` up
     to fp association (the expansion reassociates the reduction).
+
+    Quantized views take a dequant-then-dot epilogue: the gather moves the
+    int8/fp8 codes (the HBM-bandwidth win), dequantization happens on the
+    gathered (B, K, dim) tile right before the ``dot_general``, and the
+    cached norms already describe the dequantized rows — so the result
+    equals ``ref.gather_score_quant_ref`` up to the same fp association.
     """
     safe = jnp.maximum(ids, 0)
-    rows = view.rows[safe].astype(jnp.float32)  # (B, K, dim)
+    if view.scales is not None:
+        zp = None if view.zero_points is None else view.zero_points[safe]
+        rows = ref.dequant_rows_ref(view.rows[safe], view.scales[safe], zp)
+    else:
+        rows = view.rows[safe].astype(jnp.float32)  # (B, K, dim)
     q = queries.astype(jnp.float32)
     # batched (K, dim) @ (dim,) — explicit dot_general (no einsum transpose
     # shuffling): BLAS on CPU, MXU on TPU
@@ -112,23 +143,33 @@ def _matmul_score_local(view: CorpusView, queries: Array, ids: Array,
 
 
 def gather_score(corpus, queries, ids, *, metric="sqeuclidean", backend=None,
-                 use_pallas=None, interpret=None):
+                 use_pallas=None, interpret=None, quantize=None):
     """Fused gather→score for a whole query batch: (B, K) ids -> (B, K).
 
     ``corpus`` is a raw (N, dim) array or a
     :class:`~repro.kernels.backend.CorpusView`; the matmul backends build
     the view on the fly when handed a raw array (prefer passing the view —
-    it is the whole point of the norm cache).
+    it is the whole point of the norm cache). ``quantize`` selects
+    quantized residency for a raw corpus (build the quantized view outside
+    the hot loop instead — quantization is *not* cached across calls); a
+    prebuilt quantized view is scored as-is on every backend (ref takes
+    the dequantize-then-score oracle, the matmul forms a dequant epilogue,
+    pallas dequantizes in-register inside the tile).
     """
-    be = _resolve(backend, use_pallas, interpret, "ops.gather_score")
+    be = _resolve(backend, use_pallas, interpret, "ops.gather_score",
+                  quantize=quantize)
+    src = _view_for(corpus, be, "ops.gather_score")
     if be.name == "xla_matmul":
-        return _matmul_score(as_corpus_view(corpus), queries, ids, metric)
+        return _matmul_score(src, queries, ids, metric)
     if be.use_pallas:
-        view = as_corpus_view(corpus)
-        return _lt.gather_score(view.rows, queries, ids, metric=metric,
-                                norms=_lt.pack_norms(view),
+        return _lt.gather_score(src.rows, queries, ids, metric=metric,
+                                norms=_lt.pack_row_meta(src),
                                 interpret=be.interpret)
-    return ref.gather_score_ref(corpus_rows(corpus), queries, ids,
+    if isinstance(src, CorpusView) and src.quantize is not None:
+        return ref.gather_score_quant_ref(src.rows, src.scales,
+                                          src.zero_points, queries, ids,
+                                          metric=metric)
+    return ref.gather_score_ref(corpus_rows(src), queries, ids,
                                 metric=metric)
 
 
@@ -141,7 +182,7 @@ def gather_l2(corpus, queries, ids, *, backend=None, use_pallas=None,
 
 def gather_score_local(corpus_local, queries, ids, offset, *,
                        metric="sqeuclidean", backend=None, use_pallas=None,
-                       interpret=None):
+                       interpret=None, quantize=None):
     """Shard-local gather→score over global ids: (B, K) -> (B, K) partials.
 
     Owned lanes (offset <= id < offset + n_local) carry the exact distance;
@@ -150,19 +191,24 @@ def gather_score_local(corpus_local, queries, ids, offset, *,
     :func:`gather_score` wave (bit-exactly within one backend — each id has
     one owner and x + 0.0 == x). The sharded engine masks ids < 0 to +inf
     after the psum. ``corpus_local`` may be the local block's
-    :class:`~repro.kernels.backend.CorpusView` (norms shard with the rows).
+    :class:`~repro.kernels.backend.CorpusView` (norms — and the dequant
+    parameters of a quantized view — shard with the rows).
     """
-    be = _resolve(backend, use_pallas, interpret, "ops.gather_score_local")
+    be = _resolve(backend, use_pallas, interpret, "ops.gather_score_local",
+                  quantize=quantize)
+    src = _view_for(corpus_local, be, "ops.gather_score_local")
     if be.name == "xla_matmul":
-        return _matmul_score_local(as_corpus_view(corpus_local), queries,
-                                   ids, offset, metric)
+        return _matmul_score_local(src, queries, ids, offset, metric)
     if be.use_pallas:
-        view = as_corpus_view(corpus_local)
-        return _lt.gather_score_local(view.rows, queries, ids, offset,
+        return _lt.gather_score_local(src.rows, queries, ids, offset,
                                       metric=metric,
-                                      norms=_lt.pack_norms(view),
+                                      norms=_lt.pack_row_meta(src),
                                       interpret=be.interpret)
-    return ref.gather_score_local_ref(corpus_rows(corpus_local), queries,
+    if isinstance(src, CorpusView) and src.quantize is not None:
+        return ref.gather_score_local_quant_ref(
+            src.rows, src.scales, src.zero_points, queries, ids, offset,
+            metric=metric)
+    return ref.gather_score_local_ref(corpus_rows(src), queries,
                                       ids, offset, metric=metric)
 
 

@@ -74,6 +74,71 @@ def l2_gather_dists_ref(corpus: Array, queries: Array, ids: Array) -> Array:
     return gather_score_ref(corpus, queries, ids, metric="sqeuclidean")
 
 
+def dequant_rows_ref(rows: Array, scales: Array,
+                     zero_points: Array | None = None) -> Array:
+    """THE dequantization semantics for quantized corpus residency.
+
+    ``rows`` (..., dim) int8 or fp8; ``scales`` (...,) f32 per-row scale;
+    ``zero_points`` (...,) f32 per-row zero point (int8 affine) or None
+    (fp8, symmetric). Returns f32 ``(rows - zp) * scale``. Every backend's
+    quantized scoring path must equal scoring these dequantized rows with
+    the plain oracle — dequantization is elementwise, so it commutes with
+    the gather, and each backend may apply it pre- or post-gather (or
+    in-register inside a tile) without changing the contract.
+    """
+    f = rows.astype(jnp.float32)
+    if zero_points is not None:
+        f = f - zero_points[..., None].astype(jnp.float32)
+    return f * scales[..., None].astype(jnp.float32)
+
+
+def gather_score_quant_ref(rows: Array, scales: Array,
+                           zero_points: Array | None, queries: Array,
+                           ids: Array, metric: str = "sqeuclidean") -> Array:
+    """Dequantize-then-score oracle for quantized corpus rows.
+
+    Exactly :func:`gather_score_ref` over :func:`dequant_rows_ref` of the
+    gathered rows — the parity statement every quantized backend path
+    (matmul epilogue, in-tile dequant) is pinned against.
+    """
+    safe = jnp.maximum(ids, 0)
+    zp = None if zero_points is None else zero_points[safe]
+    deq = dequant_rows_ref(rows[safe], scales[safe], zp)  # (B, K, dim) f32
+    q = queries[:, None].astype(jnp.float32)  # (B, 1, dim)
+    if metric in ("l2", "sqeuclidean"):
+        diff = deq - q
+        d = (diff * diff).sum(-1)
+        if metric == "l2":
+            d = jnp.sqrt(d)
+    elif metric == "ip":
+        d = -(deq * q).sum(-1)
+    elif metric == "cosine":
+        qn = jax.lax.rsqrt((q * q).sum(-1) + 1e-12)
+        rn = jax.lax.rsqrt((deq * deq).sum(-1) + 1e-12)
+        d = 1.0 - (deq * q).sum(-1) * qn * rn
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    return jnp.where(ids >= 0, d, jnp.inf)
+
+
+def gather_score_local_quant_ref(rows_local: Array, scales_local: Array,
+                                 zp_local: Array | None, queries: Array,
+                                 ids: Array, offset: Array | int,
+                                 metric: str = "sqeuclidean") -> Array:
+    """Shard-local form of :func:`gather_score_quant_ref` (psum identity).
+
+    Same owned-lane remapping contract as :func:`gather_score_local_ref`:
+    lanes owned by this shard carry the exact dequantize-then-score value,
+    foreign/padding lanes contribute 0.0 to the wave psum.
+    """
+    n_local = rows_local.shape[0]
+    loc = ids - jnp.asarray(offset, ids.dtype)
+    owned = (ids >= 0) & (loc >= 0) & (loc < n_local)
+    d = gather_score_quant_ref(rows_local, scales_local, zp_local, queries,
+                               jnp.where(owned, loc, -1), metric=metric)
+    return jnp.where(owned, d, 0.0)
+
+
 def gather_score_local_ref(corpus_local: Array, queries: Array, ids: Array,
                            offset: Array | int,
                            metric: str = "sqeuclidean") -> Array:

@@ -218,6 +218,15 @@ class BiMetricEngine:
     distances come from the expensive tower, so its backend choice only
     routes the commit merges.
 
+    ``quantize`` (``"int8"`` / ``"fp8"`` / ``"fp8_e5m2"``) holds the
+    stage-1 corpus in quantized residency: the quantized view is built
+    **once per engine lifetime**, exactly like the norm cache, and every
+    stage-1 wave scores the int8/fp8 codes with dequant-in-the-kernel.
+    This is the paper's lossy-proxy lever — quantization error folds into
+    stage 1's C-approximation factor while stage 2 (the expensive tower)
+    stays exact, so recall@k degrades only through seed quality. Stage 2
+    is never quantized.
+
     ``max_batch`` / ``max_wait_ms`` / ``max_inflight`` configure the async
     admission pipeline (see :meth:`submit`); they are inert for the
     synchronous ``query*`` paths. Async requests additionally report their
@@ -231,7 +240,7 @@ class BiMetricEngine:
                  tower_batch: int = 64, shards: int = 1,
                  max_batch: int = 8, max_wait_ms: float = 5.0,
                  max_inflight: int = 2, dedup: str = "auto",
-                 backend="ref"):
+                 backend="ref", quantize: str | None = None):
         self.cheap = cheap
         self.expensive = expensive
         self.corpus_tokens = corpus_tokens
@@ -246,7 +255,7 @@ class BiMetricEngine:
         # deployment knob (matmul form over the engine-lifetime corpus-norm
         # cache on CPU, the Pallas kernels on TPU).
         self.backend = kernels.resolve_backend(
-            backend, _caller="serve.BiMetricEngine")
+            backend, quantize=quantize, _caller="serve.BiMetricEngine")
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1e3
         self.max_inflight = max(1, max_inflight)
@@ -258,10 +267,16 @@ class BiMetricEngine:
                                       rev_candidates=16))
         self._em_d = distances.EmbeddingMetric(self.emb_d)
         # stage-1 scoring route: the matmul backends thread the corpus-norm
-        # cache (built ONCE here, like the index) through every wave
-        if self.backend.matmul and shards == 1:
+        # cache (built ONCE here, like the index) through every wave; with
+        # quantize= the view is built quantized, also once — the graph is
+        # still built on the exact embeddings, only wave scoring is lossy
+        need_view = self.backend.matmul or self.backend.quantize is not None
+        self._view_d = (kernels.as_corpus_view(
+            self.emb_d, quantize=self.backend.quantize)
+            if need_view else None)
+        if need_view and shards == 1:
             self._dist_d = beam.fused_dist_fn(
-                self.emb_d, self._em_d.metric, backend=self.backend)
+                self._view_d, self._em_d.metric, backend=self.backend)
         else:
             self._dist_d = self._em_d.dists_batch
         self._adjacency = self.index.adjacency.astype(jnp.int32)
@@ -302,7 +317,8 @@ class BiMetricEngine:
             jnp.asarray(self.index.medoid, jnp.int32).reshape(1, 1), (b, 1))
         if self.shards > 1:
             return beam.sharded_greedy_search(
-                self.emb_d, self._adjacency, q_d, entries,
+                self._view_d if self._view_d is not None else self.emb_d,
+                self._adjacency, q_d, entries,
                 shards=self.shards, metric=self._em_d.metric,
                 mesh=self._mesh, beam_width=width, pool_size=pool,
                 max_steps=max_steps, backend=self.backend)

@@ -1,0 +1,298 @@
+"""Quantized corpus residency: round-trip bounds, one-build discipline, parity.
+
+The contract (see ``repro/kernels/__init__.py``): ``as_corpus_view(corpus,
+quantize="int8"|"fp8")`` builds a lossy *proxy* residency — int8 rows with a
+per-row affine scale/zero-point, fp8 rows with a per-row symmetric scale —
+scored identically by all three backends through one dequant semantics
+(``ref.dequant_rows_ref``). Quantization error folds into the bi-metric
+C-approximation factor of the cheap stage; the exact stage never quantizes.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import beam, distances, metrics, vamana
+from repro.kernels import backend as kernel_backend
+from repro.kernels import ops
+from repro.kernels import ref as kernel_ref
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+BACKENDS = ("ref", "xla_matmul", "pallas-interpret")
+FP8_MODES = tuple(sorted(kernel_backend._FP8_DTYPES))
+
+
+def _rows(seed=0, n=64, dim=24, scale=3.0):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(n, dim)) * scale).astype(np.float32)
+    x[-2:] = 0.0  # zero rows: the shard-padding shape
+    return jnp.asarray(x)
+
+
+# ----------------------------------------------------------- round trips
+def test_int8_round_trip_error_bound():
+    """|dequant(x) - x| <= s/2 per element: the affine grid's half-step,
+    with s = (max - min)/255 per row. Also pins the range guard: every
+    code must be representable (no clipping error on top of rounding)."""
+    x = _rows(seed=1)
+    view = ops.as_corpus_view(x, quantize="int8")
+    assert view.quantize == "int8"
+    assert view.rows.dtype == jnp.int8
+    deq = np.asarray(kernel_ref.dequant_rows_ref(
+        view.rows, view.scales, view.zero_points))
+    scales = np.asarray(view.scales)
+    err = np.abs(deq - np.asarray(x))
+    # 1.001 headroom: the bound itself is computed in f32
+    assert (err <= 0.5001 * scales[:, None] + 1e-7).all(), err.max()
+    # norms were computed over the dequantized rows (lossy-proxy semantics)
+    np.testing.assert_allclose(np.asarray(view.sq_norms),
+                               (deq ** 2).sum(-1), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", FP8_MODES)
+def test_fp8_round_trip_error_bound(mode):
+    """fp8 error is *relative* (m mantissa bits -> half-ulp 2^-(m+1)), plus
+    one subnormal step of the scaled grid near zero."""
+    x = _rows(seed=2)
+    view = ops.as_corpus_view(x, quantize=mode)
+    assert view.quantize == mode
+    assert view.zero_points is None  # symmetric: no zero-point column
+    deq = np.asarray(kernel_ref.dequant_rows_ref(view.rows, view.scales))
+    rel = {"fp8": 2.0 ** -3, "fp8_e5m2": 2.0 ** -2}[mode]
+    dt = kernel_backend._FP8_DTYPES[mode]
+    subnormal = float(jnp.finfo(dt).tiny) * np.asarray(view.scales)
+    err = np.abs(deq - np.asarray(x))
+    bound = rel * np.abs(np.asarray(x)) + subnormal[:, None] + 1e-7
+    assert (err <= bound).all(), (err / np.maximum(bound, 1e-12)).max()
+
+
+@pytest.mark.parametrize("mode", ("int8",) + FP8_MODES)
+def test_zero_rows_stay_exact(mode):
+    """A zero row must dequantize to *exact* zeros (norm 0, finite inverse
+    norm, cosine distance exactly 1.0) in every backend — this is what
+    makes uneven-shard zero padding safe for quantized views."""
+    x = _rows(seed=3, n=10, dim=8)
+    view = ops.as_corpus_view(x, quantize=mode)
+    zp = view.zero_points
+    deq = np.asarray(kernel_ref.dequant_rows_ref(view.rows, view.scales, zp))
+    np.testing.assert_array_equal(deq[-2:], 0.0)
+    np.testing.assert_array_equal(np.asarray(view.sq_norms[-2:]), 0.0)
+    assert np.isfinite(np.asarray(view.inv_norms)).all()
+    qs = jnp.asarray(np.random.default_rng(4).normal(size=(2, 8)),
+                     jnp.float32)
+    ids = jnp.array([[0, 8, 9], [9, 3, -1]], jnp.int32)
+    for be in BACKENDS:
+        d = np.asarray(ops.gather_score(view, qs, ids, metric="cosine",
+                                        backend=be))
+        np.testing.assert_allclose(d[0, 1], 1.0, atol=1e-6, err_msg=be)
+        np.testing.assert_allclose(d[0, 2], 1.0, atol=1e-6, err_msg=be)
+        assert np.isinf(d[1, 2]), be
+
+
+def test_quantize_mode_validation():
+    x = _rows(n=8, dim=4)
+    with pytest.raises(ValueError):
+        ops.as_corpus_view(x, quantize="int4")
+    view = ops.as_corpus_view(x, quantize="int8")
+    # requantizing a prebuilt view is never silent
+    with pytest.raises(ValueError):
+        ops.as_corpus_view(view, quantize="fp8")
+    with pytest.raises(ValueError):
+        ops.as_corpus_view(ops.as_corpus_view(x), quantize="int8")
+    # idempotent with the matching (or unspecified) mode
+    assert ops.as_corpus_view(view) is view
+    assert ops.as_corpus_view(view, quantize="int8") is view
+    with pytest.raises(ValueError):
+        kernel_backend.resolve_backend(
+            kernel_backend.Backend("xla_matmul", quantize="int8"),
+            quantize="fp8")
+
+
+def test_bytes_per_row_compression():
+    """The residency win the bench gates on: int8 code payload is 4x
+    smaller than f32; the full per-row residency (codes + norms + dequant
+    params) rides along for honesty."""
+    x = _rows(n=16, dim=32)
+    raw = ops.as_corpus_view(x)
+    i8 = ops.as_corpus_view(x, quantize="int8")
+    assert raw.bytes_per_row == 32 * 4 + 8
+    assert i8.bytes_per_row == 32 * 1 + 8 + 8
+    assert (32 * 4) / (32 * 1) == 4.0  # row-payload ratio, the gated number
+
+
+# ---------------------------------------------------- one build per corpus
+def test_view_built_exactly_once_per_corpus(monkeypatch):
+    """Every entry point accepts a prebuilt quantized view and never
+    rebuilds it: the quantizer must run exactly once (at as_corpus_view)
+    across gather_score, a full vamana.search, and a sharded search."""
+    calls = {"n": 0}
+    real = kernel_backend._quantize_rows_int8
+
+    def counting(rows):
+        calls["n"] += 1
+        return real(rows)
+
+    monkeypatch.setattr(kernel_backend, "_quantize_rows_int8", counting)
+    rng = np.random.default_rng(7)
+    n, dim, b = 96, 12, 3
+    emb = jnp.asarray(rng.normal(size=(n, dim)).astype(np.float32))
+    qs = jnp.asarray(rng.normal(size=(b, dim)).astype(np.float32))
+    adj = jnp.asarray(rng.integers(0, n, (n, 5)).astype(np.int32))
+    entries = jnp.zeros((b, 1), jnp.int32)
+
+    view = ops.as_corpus_view(emb, quantize="int8")
+    assert calls["n"] == 1
+    ids = jnp.asarray(rng.integers(0, n, (b, 7), dtype=np.int32))
+    for be in BACKENDS:
+        ops.gather_score(view, qs, ids, backend=be)
+    index = vamana.VamanaIndex(
+        adjacency=adj, medoid=0,
+        config=vamana.VamanaConfig(max_degree=5, l_build=8))
+    vamana.search(index, view, qs, k=5, beam_width=8, quota=20)
+    beam.sharded_greedy_search(
+        view, adj, qs, entries, shards=1, beam_width=8, pool_size=8,
+        quota=20, max_steps=40)
+    assert calls["n"] == 1  # prebuilt view: zero rebuilds anywhere
+    # and the knob path builds exactly once per call, not once per wave
+    vamana.search(index, emb, qs, k=5, beam_width=8, quota=20,
+                  quantize="int8")
+    assert calls["n"] == 2
+
+
+# ------------------------------------------------------------ parity grid
+@pytest.mark.parametrize("mode", ("int8",) + FP8_MODES)
+@pytest.mark.parametrize("metric", ("sqeuclidean", "l2", "ip", "cosine"))
+def test_quantized_op_grid_matches_quant_oracle(mode, metric):
+    """Op-level grid: all three backends score a quantized view identically
+    (one dequant semantics) — xla_matmul / pallas-interpret vs the
+    quantized ref oracle, all four metrics."""
+    x = _rows(seed=5, n=100, dim=24)
+    view = ops.as_corpus_view(x, quantize=mode)
+    key = jax.random.PRNGKey(9)
+    qs = jax.random.normal(key, (4, 24))
+    ids = jax.random.randint(jax.random.fold_in(key, 1), (4, 17), -1, 100)
+    d_ref = np.asarray(ops.gather_score(view, qs, ids, metric=metric,
+                                        backend="ref"))
+    d_orc = np.asarray(kernel_ref.gather_score_quant_ref(
+        view.rows, view.scales, view.zero_points, qs, ids, metric=metric))
+    np.testing.assert_array_equal(d_ref, d_orc)  # ref IS the oracle
+    fin = np.isfinite(d_ref)
+    for be in ("xla_matmul", "pallas-interpret"):
+        d_be = np.asarray(ops.gather_score(view, qs, ids, metric=metric,
+                                           backend=be))
+        np.testing.assert_allclose(d_be[fin], d_ref[fin], rtol=1e-4,
+                                   atol=1e-4, err_msg=(be, mode))
+        assert (np.isinf(d_be) == ~fin).all(), (be, mode)
+
+
+@pytest.mark.slow
+def test_quantized_parity_grid_sharded():
+    """The acceptance grid on 8 forced host devices: quantized modes ×
+    metrics × backends × shards {1, 2, 4}. Within one (backend, mode) the
+    sharded run is bit-exact vs unsharded (quant metadata shards with the
+    corpus blocks; uneven N exercises the padded rows), and recall@10 at
+    the matched quota stays within 0.05 of the exact-residency ref run."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, "src")
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.core import distances, metrics
+        from repro.core.beam import (batched_greedy_search, fused_dist_fn,
+                                     sharded_greedy_search)
+        from repro.kernels import backend as kernel_backend
+        from repro.kernels import ops
+
+        rng = np.random.default_rng(3)
+        n, dim, b = 130, 8, 4   # uneven N: shard blocks get padded rows
+        adj = rng.integers(0, n, (n, 6)).astype(np.int32)
+        adj[rng.random((n, 6)) < 0.2] = -1
+        adj = jnp.asarray(adj)
+        emb = jnp.asarray(rng.normal(size=(n, dim)).astype(np.float32))
+        qs = jnp.asarray(rng.normal(size=(b, dim)).astype(np.float32))
+        entries = jnp.broadcast_to(
+            jnp.array([0, 64, 100], jnp.int32), (b, 3))
+
+        modes = ["int8"] + sorted(kernel_backend._FP8_DTYPES)[:1]
+        for met in ("sqeuclidean", "cosine"):
+            true_ids, _ = distances.EmbeddingMetric(emb, met).brute_force(
+                qs, 10)
+            exact = batched_greedy_search(
+                fused_dist_fn(emb, met), adj, qs, entries, n_points=n,
+                beam_width=8, pool_size=16, quota=24, max_steps=100)
+            rec_exact = np.asarray(metrics.recall_at_k(
+                exact.pool_ids[:, :10], true_ids)).mean()
+            for mode in modes:
+                view = ops.as_corpus_view(emb, quantize=mode)
+                for be in ("ref", "xla_matmul", "pallas-interpret"):
+                    base = batched_greedy_search(
+                        fused_dist_fn(view, met, backend=be), adj, qs,
+                        entries, n_points=n, beam_width=8, pool_size=16,
+                        quota=24, max_steps=100, backend=be)
+                    for shards in (2, 4):
+                        res = sharded_greedy_search(
+                            view, adj, qs, entries, shards=shards,
+                            metric=met, beam_width=8, pool_size=16,
+                            quota=24, max_steps=100, backend=be)
+                        for name, x, y in zip(base._fields, base, res):
+                            assert np.array_equal(
+                                np.asarray(x), np.asarray(y)), \\
+                                (met, mode, be, shards, name)
+                    rec = np.asarray(metrics.recall_at_k(
+                        base.pool_ids[:, :10], true_ids)).mean()
+                    assert rec >= rec_exact - 0.05, \\
+                        (met, mode, be, rec, rec_exact)
+                # the raw-corpus + quantize= knob is the same computation
+                knob = sharded_greedy_search(
+                    emb, adj, qs, entries, shards=2, metric=met,
+                    beam_width=8, pool_size=16, quota=24, max_steps=100,
+                    backend="xla_matmul", quantize=mode)
+                pre = sharded_greedy_search(
+                    view, adj, qs, entries, shards=2, metric=met,
+                    beam_width=8, pool_size=16, quota=24, max_steps=100,
+                    backend="xla_matmul")
+                for name, x, y in zip(knob._fields, knob, pre):
+                    assert np.array_equal(np.asarray(x), np.asarray(y)), \\
+                        (met, mode, name)
+            print(met, "OK", flush=True)
+        print("QUANT_GRID_OK")
+    """)
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=ROOT, timeout=900)
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "QUANT_GRID_OK" in res.stdout
+
+
+# --------------------------------------------------------------- bimetric
+def test_bimetric_quantize_is_stage1_only():
+    """The paper's contract: ``quantize=`` makes the cheap proxy lossy but
+    the expensive stage must keep scoring exact residency — the reported
+    D-distances of the winning ids match the exact metric bit-for-bit."""
+    from repro.core import bimetric
+
+    rng = np.random.default_rng(11)
+    n, dim = 200, 16
+    emb_d = jnp.asarray(rng.normal(size=(n, dim)).astype(np.float32))
+    emb_D = emb_d + 0.05 * jnp.asarray(
+        rng.normal(size=(n, dim)).astype(np.float32))
+    qs = jnp.asarray(rng.normal(size=(3, dim)).astype(np.float32))
+    index = vamana.build(emb_d, vamana.VamanaConfig(
+        max_degree=8, l_build=16, build_batch=64, n_rounds=1))
+    res = bimetric.bimetric_search(
+        None, None, index, qs, qs, n_points=n, quota=48, k=5,
+        corpora=(emb_d, emb_D), backend="xla_matmul", quantize="int8")
+    em_D = distances.EmbeddingMetric(emb_D)
+    exact = np.asarray(
+        jax.vmap(lambda q, i: em_D.dists(q, i))(qs, res.ids))
+    np.testing.assert_allclose(np.asarray(res.dists), exact, rtol=1e-5,
+                               atol=1e-5)
+    true_ids, _ = em_D.brute_force(qs, 5)
+    rec = np.asarray(metrics.recall_at_k(res.ids, true_ids)).mean()
+    assert rec >= 0.8, rec  # lossy stage 1 still seeds the exact stage
