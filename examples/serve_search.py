@@ -1,9 +1,13 @@
-"""Serving example: the async BiMetricEngine with model-backed metrics —
-the paper's "small local model + expensive API model" deployment, including
-exact budget accounting per request. Requests go through the engine's own
-admission pipeline (``submit`` → padded waves → double-buffered tower
-drain), so independent requests overlap the expensive-tower forward passes
-with the device plan/commit of the next wave.
+"""Serving example: the continuous-batching BiMetricEngine with
+model-backed metrics — the paper's "small local model + expensive API
+model" deployment, including exact budget accounting per request.
+
+Requests are frozen ``SearchRequest`` records submitted into the engine's
+persistent slot pool: each arrival is admitted into the first freed slot
+mid-flight (no fixed waves, no head-of-line blocking), ordered by
+``priority`` and guarded by ``deadline_ms`` while queued. The future
+resolves to a ``SearchResult`` whose ``ServeStats`` split latency into
+queue vs compute time.
 
     PYTHONPATH=src python examples/serve_search.py
 """
@@ -16,7 +20,7 @@ import numpy as np
 
 from repro.configs import qwen3_0_6b
 from repro.models import transformer as T
-from repro.serve import BiMetricEngine, EmbedTower
+from repro.serve import BiMetricEngine, EmbedTower, SearchRequest
 
 
 def main() -> None:
@@ -32,24 +36,27 @@ def main() -> None:
 
     rng = np.random.default_rng(0)
     corpus = rng.integers(0, cheap_cfg.vocab, (256, 16), dtype=np.int32)
-    engine = BiMetricEngine(cheap, expensive, corpus, max_batch=4,
-                            max_wait_ms=50.0)
+    engine = BiMetricEngine(cheap, expensive, corpus, slots=4)
     print("index built with the cheap tower only (0 expensive calls)")
 
     emb_D = expensive.embed(corpus)  # eval-only ground truth
 
     futures = []
-    for _ in range(6):
+    for i in range(6):
         q = corpus[rng.integers(0, 256)].copy()
         q[:8] = rng.integers(0, cheap_cfg.vocab, 8)
-        futures.append((q, engine.submit(q, quota=32)))
+        req = SearchRequest(tokens=q, quota=32, k=10,
+                            priority=1 if i == 5 else 0)  # jump the queue
+        futures.append((q, engine.submit(req)))
     for i, (q, fut) in enumerate(futures):
-        ids, dd, stats = fut.result(timeout=300)
+        res = fut.result(timeout=300)
         q_emb = expensive.embed(q[None])[0]
         true10 = np.argsort(np.linalg.norm(emb_D - q_emb, axis=1))[:10]
-        rec = len(set(ids.tolist()) & set(true10.tolist())) / 10
-        print(f"req{i}: recall@10={rec:.2f} D_calls={stats.D_calls} "
-              f"d_calls={stats.d_calls}")
+        rec = len(set(res.ids.tolist()) & set(true10.tolist())) / 10
+        print(f"req{i}: recall@10={rec:.2f} D_calls={res.stats.D_calls} "
+              f"d_calls={res.stats.d_calls} "
+              f"queue={res.stats.queue_ms:.0f}ms "
+              f"compute={res.stats.compute_ms:.0f}ms")
     engine.close()
 
 

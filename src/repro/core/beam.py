@@ -393,6 +393,103 @@ def _per_query(v: int | Array, b: int) -> Array:
     return jnp.broadcast_to(jnp.asarray(v, jnp.int32), (b,))
 
 
+def reset_slots(
+    state: BatchedSearchState,
+    reset: Array,
+    entry_ids: Array,
+    quota: Array,
+    *,
+    shard: ShardCtx | None = None,
+) -> tuple[BatchedSearchState, Array, Array]:
+    """Re-initialize the rows in ``reset`` to a fresh entry wave, in place.
+
+    The slot-pool admission primitive: ``reset`` (B,) bool marks the rows
+    (slots) being recycled for newly admitted queries; their pools, dedup
+    state and counters are cleared and re-seeded from ``entry_ids`` exactly
+    as :func:`init_state` would — positional entry dedup, quota-masked keep,
+    scored/n_calls pre-paid at plan time. Rows outside ``reset`` are
+    untouched bit-for-bit (their lanes in the returned ``safe`` are -1, so
+    the follow-up entry :func:`commit_scores` is an exact no-op on them).
+
+    Returns ``(state', safe (B, E0), keep (B, E0))``; the caller scores
+    ``safe`` and commits, same contract as :func:`init_state`. Under a
+    :class:`ShardCtx` the bitmap rows are cleared on every shard's local
+    column slice and the entry marks land on their owners, so a recycled
+    slot's dedup state is indistinguishable from a freshly initialized one.
+    """
+    b, p = state.pool_ids.shape
+    reset = jnp.broadcast_to(jnp.asarray(reset, bool), (b,))
+    entry_ids = _positional_dedup(entry_ids.astype(jnp.int32))
+    valid = entry_ids >= 0
+    order_idx = jnp.cumsum(valid.astype(jnp.int32), axis=1) - 1
+    quota = _per_query(quota, b)
+    keep = valid & (order_idx < quota[:, None]) & reset[:, None]
+    safe = jnp.where(keep, entry_ids, -1)
+
+    scored = state.scored
+    if isinstance(scored, ScoredSet):
+        scored = ScoredSet(
+            ids=jnp.where(reset[:, None], ops.SET_PAD, scored.ids),
+            count=jnp.where(reset, 0, scored.count),
+        )
+    else:
+        scored = jnp.where(reset[:, None], False, scored)
+    scored = _scored_scatter(scored, safe, keep, shard)
+
+    rm = reset[:, None]
+    state = BatchedSearchState(
+        pool_ids=jnp.where(rm, -1, state.pool_ids),
+        pool_dists=jnp.where(rm, jnp.inf, state.pool_dists),
+        expanded=jnp.where(rm, False, state.expanded),
+        scored=scored,
+        n_calls=jnp.where(
+            reset, keep.sum(axis=1, dtype=jnp.int32), state.n_calls),
+        n_steps=jnp.where(reset, 0, state.n_steps),
+    )
+    return state, safe, keep
+
+
+def grow_state(
+    state: BatchedSearchState,
+    *,
+    pool_size: int | None = None,
+    set_capacity: int | None = None,
+) -> BatchedSearchState:
+    """Right-pad a state's static shapes — an exact semantic no-op.
+
+    The slot pool grows its resident state monotonically when an admitted
+    request needs a larger pool (P) or sorted-set capacity (C) than any
+    before it. Both growths are provably invisible to the search: pools are
+    streaming exact top-P structures, so appended (-1, +inf, unexpanded)
+    lanes never alter the surviving prefix (P-invariance), and
+    ``ops.SET_PAD`` sorts to the tail of each ascending ScoredSet row, so
+    appended pad slots leave every lookup/merge result unchanged. Shrinking
+    is not supported (it could drop live entries); passing a smaller value
+    keeps the current shape.
+    """
+    pool_ids, pool_dists, expanded = (
+        state.pool_ids, state.pool_dists, state.expanded)
+    p = pool_ids.shape[1]
+    if pool_size is not None and pool_size > p:
+        pad = ((0, 0), (0, pool_size - p))
+        pool_ids = jnp.pad(pool_ids, pad, constant_values=-1)
+        pool_dists = jnp.pad(pool_dists, pad, constant_values=jnp.inf)
+        expanded = jnp.pad(expanded, pad, constant_values=False)
+    scored = state.scored
+    if (isinstance(scored, ScoredSet) and set_capacity is not None
+            and set_capacity > scored.capacity):
+        scored = ScoredSet(
+            ids=jnp.pad(
+                scored.ids,
+                ((0, 0), (0, set_capacity - scored.capacity)),
+                constant_values=ops.SET_PAD),
+            count=scored.count,
+        )
+    return state._replace(
+        pool_ids=pool_ids, pool_dists=pool_dists, expanded=expanded,
+        scored=scored)
+
+
 def active_mask(
     state: BatchedSearchState,
     *,
@@ -427,7 +524,8 @@ def plan_step(
     beam_width: int | Array,
     quota: Array,
     max_steps: int | Array,
-    expand_width: int = 1,
+    expand_width: int | Array = 1,
+    expand_cap: int | None = None,
     shard: ShardCtx | None = None,
 ) -> tuple[BatchedSearchState, Array, Array, Array]:
     """One expansion wave: pick frontiers, gather fanout, mask to the quota.
@@ -438,6 +536,14 @@ def plan_step(
     and calls :func:`commit_scores`. Frozen (inactive) queries plan an
     all-masked wave, which commits as an exact no-op.
 
+    ``expand_width`` may be a scalar or a per-query (B,) vector (the slot
+    pool's mixed-request batches); the wave's static lane count E is
+    ``expand_cap`` when given (required when the vector is traced),
+    otherwise the concrete max. A row with expand_width 1 keeps the
+    historical E=1 semantics bit-exactly — including its quirk of paying
+    for duplicate ids inside one adjacency row twice — regardless of its
+    batch-mates' widths.
+
     Under a :class:`ShardCtx`, the already-scored lookup OR-reduces the
     owning shard's bitmap slice across the axis and the scatter lands only
     on the owner; all other planning math runs on replicated inputs, so the
@@ -445,7 +551,13 @@ def plan_step(
     """
     b, p = state.pool_ids.shape
     L = _per_query(beam_width, b)
-    E = expand_width
+    if expand_cap is None:
+        expand_cap = _static_quota_bound(expand_width)
+        if expand_cap is None:
+            raise ValueError(
+                "a traced (B,) expand_width needs a static expand_cap")
+    E = max(int(expand_cap), 1)
+    ew = _per_query(expand_width, b)
     r = adjacency.shape[1]
     quota = jnp.broadcast_to(jnp.asarray(quota, jnp.int32), (b,))
 
@@ -459,7 +571,7 @@ def plan_step(
         & (jnp.arange(p)[None, :] < L[:, None])
     )
     rank = jnp.cumsum(open_.astype(jnp.int32), axis=1) - 1
-    sel = open_ & (rank < E) & active[:, None]
+    sel = open_ & (rank < ew[:, None]) & active[:, None]
     expanded = state.expanded | sel
     # slot positions of the selected vertices, in pool order; p == "none"
     # (top_k of the negated positions == first-E ascending, without a sort)
@@ -478,9 +590,10 @@ def plan_step(
     cand = nbrs.reshape(b, E * r)
     if E > 1:
         # a vertex reachable from two same-wave frontier vertices must be
-        # paid for once; E=1 keeps the historical behavior bit-exactly
-        # (which scores duplicate ids inside one adjacency row twice).
-        cand = _positional_dedup(cand)
+        # paid for once; a row at expand_width 1 keeps the historical
+        # behavior bit-exactly (which scores duplicate ids inside one
+        # adjacency row twice), even when its batch-mates run wider.
+        cand = jnp.where((ew > 1)[:, None], _positional_dedup(cand), cand)
     fresh = (cand >= 0) & ~_scored_lookup(state.scored, cand, shard)
     # exact quota masking: only the first `remaining` fresh ids get scored
     call_idx = jnp.cumsum(fresh.astype(jnp.int32), axis=1) - 1
@@ -980,31 +1093,41 @@ class ShardedStepper:
                 quota, entry_ids.shape[0]))
 
     def plan(self, state: BatchedSearchState, adjacency: Array, quota: Array,
-             beam_width: Array, max_steps: Array, *, expand_width: int = 1
+             beam_width: Array, max_steps: Array,
+             *, expand_width: int | Array = 1,
+             expand_cap: int | None = None,
              ) -> tuple[BatchedSearchState, Array, Array, Array]:
         """Sharded :func:`plan_step` (owner-only scatter + psum lookup for
         the bitmap backend; collective-free replicated membership for the
-        sorted backend)."""
+        sorted backend). ``expand_width`` may be a (B,) vector — it rides
+        in as an operand, the program is keyed on the static lane cap."""
         from repro.launch.mesh import shard_map
 
         dedup = self._dedup_of(state)
         rep2, rep1, state_spec = self._specs(dedup)
+        if expand_cap is None:
+            expand_cap = _static_quota_bound(expand_width)
+            if expand_cap is None:
+                raise ValueError(
+                    "a traced (B,) expand_width needs a static expand_cap")
+        cap = max(int(expand_cap), 1)
 
         def build():
-            def f(s, adj, q, bw, ms):
+            def f(s, adj, q, bw, ms, ew):
                 return plan_step(
                     s, adj, beam_width=bw, quota=q, max_steps=ms,
-                    expand_width=expand_width, shard=self.ctx)
+                    expand_width=ew, expand_cap=cap, shard=self.ctx)
 
             return jax.jit(shard_map(
                 f, mesh=self.mesh,
-                in_specs=(state_spec, rep2, rep1, rep1, rep1),
+                in_specs=(state_spec, rep2, rep1, rep1, rep1, rep1),
                 out_specs=(state_spec, rep2, rep2, rep1)))
 
         b = state.pool_ids.shape[0]
-        return self._program(("plan", expand_width, dedup), build)(
+        return self._program(("plan", cap, dedup), build)(
             state, adjacency.astype(jnp.int32), _per_query(quota, b),
-            _per_query(beam_width, b), _per_query(max_steps, b))
+            _per_query(beam_width, b), _per_query(max_steps, b),
+            _per_query(expand_width, b))
 
     def commit(self, state: BatchedSearchState, safe: Array, keep: Array,
                dists: Array) -> BatchedSearchState:
@@ -1026,6 +1149,54 @@ class ShardedStepper:
 
         return self._program(("commit", dedup, be), build)(
             state, safe, keep, jnp.asarray(dists, jnp.float32))
+
+    def admit(self, state: BatchedSearchState, reset: Array,
+              entry_ids: Array, quota: Array,
+              ) -> tuple[BatchedSearchState, Array, Array]:
+        """Sharded :func:`reset_slots`: recycle the ``reset`` rows of a
+        resident state for newly admitted queries (the slot pool's
+        admission step). Non-reset rows pass through bit-exactly; the
+        returned entry wave commits as a no-op on them."""
+        from repro.launch.mesh import shard_map
+
+        dedup = self._dedup_of(state)
+        rep2, rep1, state_spec = self._specs(dedup)
+
+        def build():
+            def f(s, rs, entries, q):
+                return reset_slots(s, rs, entries, q, shard=self.ctx)
+
+            return jax.jit(shard_map(
+                f, mesh=self.mesh,
+                in_specs=(state_spec, rep1, rep2, rep1),
+                out_specs=(state_spec, rep2, rep2)))
+
+        b = state.pool_ids.shape[0]
+        return self._program(("admit", dedup), build)(
+            state, jnp.asarray(reset, bool),
+            jnp.asarray(entry_ids, jnp.int32), _per_query(quota, b))
+
+    def active(self, state: BatchedSearchState, quota: Array,
+               beam_width: Array, max_steps: Array) -> Array:
+        """Replicated per-row :func:`active_mask` — the slot pool reads it
+        every step to detect finished slots (occupied & ~active)."""
+        from repro.launch.mesh import shard_map
+
+        dedup = self._dedup_of(state)
+        _, rep1, state_spec = self._specs(dedup)
+
+        def build():
+            def f(s, q, bw, ms):
+                return active_mask(s, beam_width=bw, quota=q, max_steps=ms)
+
+            return jax.jit(shard_map(
+                f, mesh=self.mesh,
+                in_specs=(state_spec, rep1, rep1, rep1), out_specs=rep1))
+
+        b = state.pool_ids.shape[0]
+        return self._program(("active_mask", dedup), build)(
+            state, _per_query(quota, b), _per_query(beam_width, b),
+            _per_query(max_steps, b))
 
     def active_any(self, state: BatchedSearchState, quota: Array,
                    beam_width: Array, max_steps: Array) -> bool:

@@ -16,7 +16,7 @@ import jax
 import numpy as np
 
 from repro.configs import bimetric_paper, qwen3_0_6b
-from repro.serve.engine import BiMetricEngine, EmbedTower
+from repro.serve.engine import BiMetricEngine, EmbedTower, SearchRequest
 
 
 def main() -> None:
@@ -55,11 +55,12 @@ def main() -> None:
         q[: args.seq // 2] = rng.integers(0, cheap_cfg.vocab, args.seq // 2)
         q_emb = expensive.embed(q[None])[0]
         true10 = np.argsort(np.linalg.norm(emb_D - q_emb, axis=1))[:10]
-        ids_b, _, st_b = engine.query(q, quota=args.quota)
+        res = engine.query(SearchRequest(tokens=q, quota=args.quota))
         ids_r, _, st_r = engine.rerank_query(q, quota=args.quota)
-        rec_b = len(set(ids_b) & set(true10)) / 10
+        rec_b = len(set(res.ids) & set(true10)) / 10
         rec_r = len(set(ids_r) & set(true10)) / 10
-        print(f"q{qi}: bimetric recall@10={rec_b:.2f} (D calls {st_b.D_calls}) "
+        print(f"q{qi}: bimetric recall@10={rec_b:.2f} "
+              f"(D calls {res.stats.D_calls}) "
               f"| rerank recall@10={rec_r:.2f} (D calls {st_r.D_calls})")
 
 

@@ -1,36 +1,52 @@
-"""Bi-metric serving: admission → plan/commit → drain, as one async pipeline.
+"""Bi-metric serving: a persistent slot pool behind a request-centric API.
 
 The engine (``repro.serve.engine.BiMetricEngine``) serves the paper's
-two-tower deployment. The historical standalone ``serve/batcher.py`` thread
-loop is retired — request batching is now the engine's own admission stage:
+two-tower deployment. The native request unit is a frozen ``SearchRequest``
+(tokens, quota, k, n_seeds, expand_width, deadline_ms, priority); every
+entry point — ``submit()``, ``query()``, ``query_batch()`` — accepts it,
+and results come back as ``SearchResult`` (ids, D-dists, ``ServeStats``).
+Legacy ``(tokens, quota=...)`` call forms still work through once-warning
+deprecation shims.
 
-* **admission** — ``submit()`` enqueues single requests; an admission thread
-  pools up to ``max_batch`` of them (flushing after ``max_wait_ms``, so a
-  partial wave never waits behind an empty queue) and pads the group into a
-  fixed-shape *wave*. Padding rows carry quota 0; every budget knob is a
-  per-query vector in the core engine, so padding and wave-mates never
-  perturb a request's answer.
-* **plan/commit (device lane)** — each wave's cheap-tower embed, stage-1
-  search and stage-2 bookkeeping (``plan_step`` / ``commit_scores``) run on
-  device; with ``shards > 1`` they run inside the corpus mesh
-  (``repro.core.beam.ShardedStepper``), the scored bitmap column-sharded
-  exactly like stage 1.
-* **drain (tower lane)** — the expensive-tower forward passes: the query
-  embed and one batched drain per stage-2 wave, against an engine-lifetime
-  document-embedding cache.
+The async drive is **continuous batching** over one resident slot pool
+(the fixed-wave admission pipeline is retired):
 
-**Double-buffer invariant**: at most ``max_inflight`` (default 2) waves are
-in flight, and a wave is on exactly one lane at a time — so the tower drain
-of wave *i* overlaps the device plan/commit of wave *i+1*, while the two
-lanes never race on one wave's state. Results are bit-exact vs the
-synchronous ``query_batch`` path (which drives the identical wave coroutine
-inline), at any shard count.
+* **admission** — ``submit()`` pushes requests onto a priority/deadline
+  heap (higher ``priority`` first, FIFO within; ``deadline_ms`` expiry
+  while queued fails the future with ``DeadlineExceeded``). The drive
+  thread refills freed slots from the heap on *every* plan/commit step —
+  not at wave boundaries — so a free lane never idles behind a running
+  neighbor.
+* **slot pool** — one resident ``(slots,)``-row search state
+  (``repro.core.beam.BatchedSearchState``; inside the corpus mesh via
+  ``ShardedStepper`` when ``shards > 1``). Admission recycles rows in
+  place (``repro.core.beam.reset_slots``); static shapes (pool size,
+  sorted-set capacity, seed/expand lane caps) grow monotonically in
+  power-of-two buckets, each growth an exact semantic no-op.
+* **mid-flight completion** — a slot that goes inactive resolves its
+  future on that step and is immediately reusable; a long request never
+  blocks its slot-mates (no head-of-line blocking).
+* **tower overlap** — while the expensive tower drains a step's fresh
+  documents, the drive thread runs the *next* admission group's
+  cheap-tower embed + stage-1 search.
 
-Every async request's submit→resolve wall clock is stamped into its
-``ServeStats.latency_ms`` (the serving-latency distribution the async
-bench reports and gates at p50); the engine's device-side kernel route is
-the ``backend=`` knob (``repro.kernels`` — ``"auto"`` = MXU-form scoring
-over an engine-lifetime corpus-norm cache, or the Pallas kernels on TPU).
+Per-row budget knobs (quota, beam width, step cap, seeds, expand width)
+are operands in the core engine and the pools are streaming exact top-P
+structures, so a slot row's answer is **bit-exact** vs the synchronous
+``query_batch`` drive at any shard count — admission order, slot-mates and
+capacity growth are invisible to it.
+
+Observability: ``ServeStats`` splits per-request latency into ``queue_ms``
+(submit → slot admission) + ``compute_ms`` (admission → resolve), with
+``latency_ms`` their sum, plus admission-time ``slot_occupancy`` /
+``queue_depth`` snapshots; ``BiMetricEngine.counters()`` exposes the
+cumulative ``EngineCounters`` (submitted / admitted / completed /
+cancelled / deadline_misses and instantaneous depth/occupancy).
+``close()`` cancels still-queued requests (``CancelledError``) instead of
+flushing them; admitted slots still resolve. The device-side kernel route
+is the ``backend=`` knob (``repro.kernels``).
 """
-from repro.serve.engine import (BiMetricEngine, EmbedTower,  # noqa: F401
-                                ServeFuture, ServeStats)
+from repro.serve.engine import (BiMetricEngine,  # noqa: F401
+                                DeadlineExceeded, EmbedTower, EngineCounters,
+                                SearchRequest, SearchResult, ServeFuture,
+                                ServeStats)

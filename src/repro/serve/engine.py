@@ -18,23 +18,31 @@
   tower only ever embeds a document once per engine lifetime — the
   cross-query cache is pure compute savings.
 
-Two ways to drive it:
+The native request unit is a frozen :class:`SearchRequest` (tokens, quota,
+k, n_seeds, expand_width, deadline_ms, priority); results are
+:class:`SearchResult` (ids, D-dists, :class:`ServeStats`). Two drives:
 
 * **synchronous** — :meth:`BiMetricEngine.query_batch` /
   :meth:`BiMetricEngine.query` run one request batch to completion inline;
-* **asynchronous** — :meth:`BiMetricEngine.submit` hands a single request to
-  the engine's admission queue and returns a :class:`ServeFuture`. An
-  admission thread pads/pools pending requests into fixed-shape *waves*
-  (up to ``max_batch`` requests, flushed after ``max_wait_ms``), and the
-  waves are pipelined through two lanes — a *device lane* (cheap-tower
-  embed, stage-1 search, stage-2 plan/commit bookkeeping) and a *tower
-  lane* (expensive-tower forward passes) — with ``max_inflight`` waves (the
-  double buffer) in flight at once, so the expensive-tower drain of wave
-  *i* overlaps the device plan/commit of wave *i+1*. Both drives run the
-  **identical** per-wave coroutine, and every per-query knob (quota, seeds,
-  beam width, step cap) is a per-query vector in the core engine — so async
-  results are bit-exact vs the synchronous path, and a request's answer
-  never depends on its wave-mates or on padding.
+* **asynchronous** — :meth:`BiMetricEngine.submit` hands one request to a
+  deadline/priority-ordered admission queue and returns a
+  :class:`ServeFuture`. The engine keeps one resident **slot pool**: an
+  (S,)-row :class:`repro.core.beam.BatchedSearchState` (sharded through a
+  :class:`repro.core.beam.ShardedStepper` when ``shards > 1``) whose rows
+  are recycled continuously. A finished query frees its slot *mid-flight* —
+  its future resolves the step it goes inactive, not at a wave boundary —
+  and admission refills freed rows from the queue on every plan/commit
+  step (``repro.core.beam.reset_slots``), so a long-running request never
+  blocks its neighbors (no head-of-line blocking, the continuous-batching
+  idiom). The drive thread overlaps the expensive-tower drain of the
+  current step with the cheap-tower embed + stage-1 search of the next
+  admission group; per-slot drains replace the retired per-wave ping-pong.
+
+Because every budget knob (quota, beam width, step cap, seeds, expand
+width) is a per-row operand in the core engine and the pools are streaming
+exact top-P structures, a slot row's trajectory is bit-exact to running the
+same request through the synchronous drive — admission order, slot-mates
+and pool-capacity growth are all invisible to a request's answer.
 
 ``EmbedTower`` wraps (params, config, pooling); swap in any LM arch config.
 """
@@ -43,9 +51,13 @@ from __future__ import annotations
 import concurrent.futures
 import dataclasses
 import functools
+import heapq
+import math
 import queue
 import threading
 import time
+import warnings
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -57,6 +69,98 @@ from repro.distributed import sharding
 from repro.models import transformer as T
 
 Array = jax.Array
+
+
+class DeadlineExceeded(Exception):
+    """A request's ``deadline_ms`` expired while it was still queued.
+
+    Raised into the request's future by the admission layer; a request that
+    was already admitted to a slot when its deadline passed still resolves
+    normally (and is counted in ``EngineCounters.deadline_misses``)."""
+
+
+# --------------------------------------------------------------------------
+# legacy-form deprecation shims (the PR-5 ``backend=`` pattern: warn once
+# per (call-site, form), keep the old behavior exactly)
+# --------------------------------------------------------------------------
+_warned: set[tuple[str, str]] = set()
+
+
+def _warn_legacy(func: str, form: str) -> None:
+    key = (func, form)
+    if key in _warned:
+        return
+    _warned.add(key)
+    warnings.warn(
+        f"{func}: the legacy {form} call form is deprecated; pass a "
+        "repro.serve.SearchRequest instead",
+        DeprecationWarning, stacklevel=3)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SearchRequest:
+    """One search request — the native unit of the serve API.
+
+    ``tokens`` is the (S,) query token row; ``quota`` the exact expensive-D
+    call budget; ``k`` the result size; ``n_seeds`` the stage-1 seed count
+    (None = the ``max(1, quota // 2)`` default); ``expand_width`` the
+    stage-2 frontier width (per-request — slot-mates may differ);
+    ``deadline_ms`` a queue deadline relative to submit (expiry while
+    *queued* fails the future with :class:`DeadlineExceeded`); ``priority``
+    orders admission (higher first, FIFO within a priority).
+    """
+
+    tokens: np.ndarray
+    quota: int
+    k: int = 10
+    n_seeds: int | None = None
+    expand_width: int = 1
+    deadline_ms: float | None = None
+    priority: int = 0
+
+
+@dataclasses.dataclass
+class ServeStats:
+    d_calls: int = 0
+    D_calls: int = 0  # expensive-tower document scorings (the budget)
+    # forward-pass batches the engine drained during this request's
+    # residency (slot drive: shared across co-resident slots; sync drive:
+    # the whole batch's drains, replicated per row — do not sum)
+    tower_batches: int = 0
+    # async slot drive only: submit -> slot-admission wait, and admission ->
+    # future-resolution compute. Both 0.0 on the synchronous drives, which
+    # have no queueing to measure.
+    queue_ms: float = 0.0
+    compute_ms: float = 0.0
+    # admission-time snapshots (async slot drive only)
+    slot_occupancy: int = 0
+    queue_depth: int = 0
+
+    @property
+    def latency_ms(self) -> float:
+        """Submit -> resolve wall clock (``queue_ms + compute_ms``)."""
+        return self.queue_ms + self.compute_ms
+
+
+class SearchResult(NamedTuple):
+    """(ids, D-dists, stats) — tuple-unpacks like the legacy return."""
+
+    ids: np.ndarray
+    dists: np.ndarray
+    stats: ServeStats
+
+
+@dataclasses.dataclass
+class EngineCounters:
+    """Cumulative admission-layer observability (:meth:`BiMetricEngine.counters`)."""
+
+    submitted: int = 0
+    admitted: int = 0
+    completed: int = 0
+    cancelled: int = 0
+    deadline_misses: int = 0
+    queue_depth: int = 0
+    slot_occupancy: int = 0
 
 
 @dataclasses.dataclass
@@ -78,32 +182,22 @@ class EmbedTower:
         return np.concatenate(out)[:n]
 
 
-@dataclasses.dataclass
-class ServeStats:
-    d_calls: int = 0
-    D_calls: int = 0  # expensive-tower document scorings (the budget)
-    # forward-pass batches drained for the WHOLE request batch (replicated
-    # on every query's stats for convenience — do not sum across a batch)
-    tower_batches: int = 0
-    # async path only: submit() -> future-resolution wall clock for THIS
-    # request (admission wait + wave compute). 0.0 on the synchronous
-    # drives, which have no queueing to measure.
-    latency_ms: float = 0.0
-
-
 class ServeFuture(concurrent.futures.Future):
     """Result handle for one :meth:`BiMetricEngine.submit` request.
 
     A stdlib :class:`concurrent.futures.Future`; ``result(timeout)`` blocks
-    for (ids, D-dists, stats) — the :meth:`query` return shape. The engine
-    resolves exactly once; a user-side ``cancel()`` race is swallowed (the
-    wave still computes — admission has no preemption)."""
+    for a :class:`SearchResult`. The engine resolves exactly once; a
+    user-side ``cancel()`` race is swallowed (an admitted slot still
+    computes — admission has no preemption). Requests still queued when
+    :meth:`BiMetricEngine.close` runs are cancelled (``result()`` raises
+    ``CancelledError``); a queued deadline expiry raises
+    :class:`DeadlineExceeded`."""
 
     def _resolve(self, value) -> None:
         try:
             self.set_result(value)
         except concurrent.futures.InvalidStateError:
-            pass  # cancelled by the caller; the computed wave is discarded
+            pass  # cancelled by the caller; the computed slot is discarded
 
     def _fail(self, exc: BaseException) -> None:
         try:
@@ -113,32 +207,45 @@ class ServeFuture(concurrent.futures.Future):
 
 
 @dataclasses.dataclass
-class _Request:
-    tokens: np.ndarray
-    quota: int
-    k: int
+class _Pending:
+    """One queued request: (request, future, submit stamp)."""
+
+    req: SearchRequest
     future: ServeFuture
-    t_submit: float = 0.0  # monotonic stamp for the per-request latency
+    t_submit: float
 
 
 @dataclasses.dataclass
-class _Wave:
-    """One padded fixed-shape request wave ping-ponging between the lanes."""
+class _Active:
+    """Per-slot bookkeeping for an admitted request."""
 
-    requests: list
-    gen: object  # the running _wave_gen coroutine
-    started: bool = False
-    pending: object = None  # tower lane's answer, sent into the coroutine
-    pending_item: object = None  # tower-lane work item yielded by the gen
-    tower_exc: BaseException | None = None
+    pend: _Pending
+    t_admit: float
+    d_calls: int
+    tower0: int  # pool drain counter at admission
+    occ_snap: int
+    depth_snap: int
 
 
-_STOP = object()  # lane-queue sentinel
+@dataclasses.dataclass
+class _Prepared:
+    """An admission group after tower embed + stage 1, ready to reset slots."""
+
+    valid: list  # [(pending, slot)]
+    seeds: np.ndarray  # (S, seed_cap)
+    quota: np.ndarray  # (S,) — admitted rows only; 0 elsewhere
+    nseed: np.ndarray  # (S,)
+    d_calls: np.ndarray  # (S,)
+    q_D: np.ndarray  # (S, dim_D)
+
+
+_STOP = object()  # tower-queue sentinel
 
 
 # ---------------------------------------------------------------------------
-# jitted device-lane steps (shards == 1). beam_width / max_steps / quota ride
-# as (B,) operands so mixed per-query budgets in one wave do not retrace.
+# jitted device-lane steps (shards == 1). beam_width / max_steps / quota /
+# expand_width ride as (B,) operands so mixed per-query budgets do not
+# retrace; only the static lane cap (expand_cap) recompiles.
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=(
     "n_points", "pool_size", "dedup", "set_capacity"))
@@ -157,12 +264,16 @@ def _round_capacity(quota_max: int) -> int:
     return 0 if quota_max <= 0 else 1 << (int(quota_max) - 1).bit_length()
 
 
-@functools.partial(jax.jit, static_argnames=("expand_width",))
-def _plan_step_j(state, adjacency, quota, beam_width, max_steps, *,
-                 expand_width):
+@functools.partial(jax.jit, static_argnames=("expand_cap",))
+def _plan_step_j(state, adjacency, quota, beam_width, max_steps,
+                 expand_width, *, expand_cap):
     return beam.plan_step(
         state, adjacency, beam_width=beam_width, quota=quota,
-        max_steps=max_steps, expand_width=expand_width)
+        max_steps=max_steps, expand_width=expand_width,
+        expand_cap=expand_cap)
+
+
+_admit_j = jax.jit(beam.reset_slots)
 
 
 @jax.jit
@@ -184,6 +295,293 @@ def _active_any_j(state, quota, beam_width, max_steps):
         state, beam_width=beam_width, quota=quota, max_steps=max_steps).any()
 
 
+@jax.jit
+def _active_j(state, quota, beam_width, max_steps):
+    return beam.active_mask(
+        state, beam_width=beam_width, quota=quota, max_steps=max_steps)
+
+
+class _SlotPool:
+    """The drive thread's resident slot state (one per started engine).
+
+    Owns the (S,)-row search state, the per-slot host vectors (quota, beam
+    width, step cap, k, expand width), the resident expensive query
+    embeddings, and the static-shape caps (pool size P, sorted-set capacity
+    C, seed/expand lane caps). Caps only grow, in power-of-two buckets, so
+    mixed workloads retrace log-many times; growth is an exact semantic
+    no-op (``repro.core.beam.grow_state``). All methods run on the drive
+    thread only.
+    """
+
+    def __init__(self, eng: "BiMetricEngine"):
+        self.eng = eng
+        s = eng.slots
+        self.S = s
+        self.occupied = np.zeros(s, bool)
+        self.active_req: list[_Active | None] = [None] * s
+        self.quota = np.zeros(s, np.int32)
+        self.L = np.ones(s, np.int32)
+        self.ms = np.zeros(s, np.int32)
+        self.k = np.ones(s, np.int32)
+        self.ew = np.ones(s, np.int32)
+        self.q_D: np.ndarray | None = None
+        self.state = None
+        self.pool_size = 0
+        self.dedup: str | None = None
+        self.cap: int | None = None
+        self.ew_cap = 1
+        self.tower_total = 0
+        self.prepared: _Prepared | None = None
+
+    # ---------------------------------------------------------------- admit
+    def prepare(self, group: list[_Pending]) -> _Prepared | None:
+        """Stage a group for admission: expensive query embeds through the
+        tower lane, cheap embed + stage-1 seed search on the drive thread
+        (the two overlap when the tower is already busy draining a step).
+        Malformed requests fail their own future here and are dropped."""
+        eng = self.eng
+        seq = eng.corpus_tokens.shape[1]
+        slots = np.nonzero(~self.occupied)[0][:len(group)]
+        tokens = np.zeros((self.S, seq), eng.corpus_tokens.dtype)
+        quota_g = np.zeros(self.S, np.int32)
+        nseed_g = np.ones(self.S, np.int32)
+        valid: list = []
+        for pend, slot in zip(group, slots):
+            t = np.asarray(pend.req.tokens)
+            if t.ndim != 1 or t.shape[0] != seq:
+                pend.future._fail(ValueError(
+                    f"request tokens shape {t.shape} != ({seq},)"))
+                continue
+            q = int(pend.req.quota)
+            tokens[slot] = t
+            quota_g[slot] = q
+            ns = pend.req.n_seeds
+            nseed_g[slot] = max(1, q // 2) if ns is None else max(1, int(ns))
+            valid.append((pend, int(slot)))
+        if not valid:
+            return None
+        # expensive query embed rides the tower lane; the cheap embed and
+        # stage-1 proxy search run here meanwhile. Fixed (S, seq) shapes
+        # with zero-pad rows keep per-row embeddings bit-exact regardless
+        # of group composition (the tower pads to its own batch anyway).
+        qfut = eng._tower_submit(("embed_queries", tokens))
+        q_d = jnp.asarray(eng.cheap.embed(tokens))
+        width1 = np.where(quota_g > 0, np.maximum(32, nseed_g), 1
+                          ).astype(np.int32)
+        pool1 = _round_capacity(int(max(width1.max(), nseed_g.max())))
+        res1 = eng._stage1(
+            q_d, width=jnp.asarray(width1), pool=pool1,
+            max_steps=jnp.asarray(4 * width1 * (quota_g > 0)))
+        lane = np.arange(res1.pool_ids.shape[1], dtype=np.int32)
+        seed_cap = _round_capacity(int(nseed_g.max()))
+        seeds = np.asarray(jnp.where(
+            jnp.asarray(lane[None, :] < nseed_g[:, None]),
+            res1.pool_ids, -1))[:, :seed_cap]
+        return _Prepared(
+            valid=valid, seeds=seeds, quota=quota_g, nseed=nseed_g,
+            d_calls=np.asarray(res1.n_calls), q_D=np.asarray(qfut.result()))
+
+    def admit(self, prep: _Prepared) -> None:
+        """Recycle the group's slots in the resident state and pay the entry
+        wave (``reset_slots`` + entry drain + commit). Rows outside the
+        group are untouched bit-for-bit."""
+        eng = self.eng
+        now = time.monotonic()
+        depth = eng._queue_depth()
+        for pend, s in prep.valid:
+            r = pend.req
+            q = int(r.quota)
+            ns = int(prep.nseed[s])
+            self.quota[s] = q
+            self.L[s] = max(int(r.k), min(q, 2 * ns + 8))
+            self.ms[s] = 4 * q
+            self.k[s] = int(r.k)
+            self.ew[s] = max(1, int(r.expand_width))
+            self.occupied[s] = True
+        for pend, s in prep.valid:
+            self.active_req[s] = _Active(
+                pend=pend, t_admit=now, d_calls=int(prep.d_calls[s]),
+                tower0=self.tower_total,
+                occ_snap=int(self.occupied.sum()), depth_snap=depth)
+        if self.q_D is None or self.q_D.shape[1] != prep.q_D.shape[1]:
+            self.q_D = np.zeros((self.S, prep.q_D.shape[1]), prep.q_D.dtype)
+        for _, s in prep.valid:
+            self.q_D[s] = prep.q_D[s]
+
+        # dedup backend: resolved once (first admission), then only the
+        # sorted capacity grows — switching backends mid-residency would
+        # force a full state rebuild for zero semantic gain (they are
+        # bit-exact to each other)
+        if self.dedup is None:
+            self.dedup, self.cap = beam.resolve_dedup(
+                eng.dedup, _round_capacity(int(self.quota.max())),
+                self.quota, eng.n, drive="host")
+        elif self.dedup == "sorted":
+            need = _round_capacity(int(self.quota.max()))
+            if self.cap is not None and need > self.cap:
+                self.cap = need
+                if self.state is not None:
+                    self.state = beam.grow_state(
+                        self.state, set_capacity=need)
+        p_need = _round_capacity(int(max(self.L.max(), self.k.max())))
+        if self.state is None:
+            self.pool_size = max(p_need, 1)
+            empty = np.full((self.S, 1), -1, np.int32)
+            zeros = np.zeros((self.S,), np.int32)
+            if eng._stepper is not None:
+                self.state, _, _ = eng._stepper.init(
+                    empty, zeros, pool_size=self.pool_size,
+                    dedup=self.dedup, set_capacity=self.cap)
+            else:
+                self.state, _, _ = _init_j(
+                    jnp.asarray(empty), jnp.asarray(zeros),
+                    n_points=eng.n, pool_size=self.pool_size,
+                    dedup=self.dedup, set_capacity=self.cap)
+        elif p_need > self.pool_size:
+            self.pool_size = p_need
+            self.state = beam.grow_state(self.state, pool_size=p_need)
+
+        reset = np.zeros(self.S, bool)
+        for _, s in prep.valid:
+            reset[s] = True
+        quota_j = jnp.asarray(self.quota)
+        if eng._stepper is not None:
+            self.state, safe, keep = eng._stepper.admit(
+                self.state, reset, prep.seeds, quota_j)
+        else:
+            self.state, safe, keep = _admit_j(
+                self.state, jnp.asarray(reset), jnp.asarray(prep.seeds),
+                quota_j)
+        self._drain_and_commit(safe, keep)
+        with eng._mu:
+            eng._counters.admitted += len(prep.valid)
+            eng._counters.slot_occupancy = int(self.occupied.sum())
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> None:
+        """One plan/drain/commit wave over every occupied slot. While the
+        tower drains the wave's fresh documents, the drive thread prepares
+        the next admission group (cheap embed + stage 1) — the slot pool's
+        compute overlap."""
+        eng = self.eng
+        self.ew_cap = max(self.ew_cap, int(self.ew.max()))
+        quota_j = jnp.asarray(self.quota)
+        L_j = jnp.asarray(self.L)
+        ms_j = jnp.asarray(self.ms)
+        if eng._stepper is not None:
+            self.state, safe, keep, _ = eng._stepper.plan(
+                self.state, eng._adjacency, quota_j, L_j, ms_j,
+                expand_width=jnp.asarray(self.ew), expand_cap=self.ew_cap)
+        else:
+            self.state, safe, keep, _ = _plan_step_j(
+                self.state, eng._adjacency, quota_j, L_j, ms_j,
+                jnp.asarray(self.ew), expand_cap=self.ew_cap)
+        safe_np = np.asarray(safe)
+        drain_fut = eng._tower_submit(("drain", safe_np[np.asarray(keep)]))
+        if self.prepared is None and not eng._closed:
+            free = int((~self.occupied).sum())
+            group = eng._pop_group(free) if free else []
+            if group:
+                self.prepared = self.prepare(group)
+        self.tower_total += drain_fut.result()
+        doc = jnp.asarray(eng._doc_embs(safe_np, self.q_D.shape[1]))
+        dists = _wave_dists_j(doc, jnp.asarray(self.q_D))
+        if eng._stepper is not None:
+            self.state = eng._stepper.commit(self.state, safe, keep, dists)
+        else:
+            self.state = _commit_j(self.state, safe, keep, dists,
+                                   backend=eng.backend)
+
+    def _drain_and_commit(self, safe, keep) -> None:
+        """Entry-wave drain + commit (same tower lane as the step drains)."""
+        eng = self.eng
+        safe_np = np.asarray(safe)
+        fut = eng._tower_submit(("drain", safe_np[np.asarray(keep)]))
+        self.tower_total += fut.result()
+        doc = jnp.asarray(eng._doc_embs(safe_np, self.q_D.shape[1]))
+        dists = _wave_dists_j(doc, jnp.asarray(self.q_D))
+        if eng._stepper is not None:
+            self.state = eng._stepper.commit(self.state, safe, keep, dists)
+        else:
+            self.state = _commit_j(self.state, safe, keep, dists,
+                                   backend=eng.backend)
+
+    # -------------------------------------------------------------- resolve
+    def resolve_finished(self) -> None:
+        """Free every occupied slot that went inactive this step: read its
+        pool prefix, stamp stats, resolve the future *now* (mid-flight —
+        the slot is immediately reusable by the next admission)."""
+        eng = self.eng
+        if self.state is None or not self.occupied.any():
+            return
+        quota_j = jnp.asarray(self.quota)
+        L_j = jnp.asarray(self.L)
+        ms_j = jnp.asarray(self.ms)
+        if eng._stepper is not None:
+            act = np.asarray(eng._stepper.active(
+                self.state, quota_j, L_j, ms_j))
+        else:
+            act = np.asarray(_active_j(self.state, quota_j, L_j, ms_j))
+        fin = self.occupied & ~act
+        if not fin.any():
+            return
+        ids_all = np.asarray(self.state.pool_ids)
+        dd_all = np.asarray(self.state.pool_dists)
+        calls = np.asarray(self.state.n_calls)
+        now = time.monotonic()
+        done = 0
+        misses = 0
+        for s in np.nonzero(fin)[0]:
+            a = self.active_req[s]
+            r = a.pend.req
+            kk = int(r.k)
+            row_ids = ids_all[s, :kk].astype(np.int64)
+            row_dd = dd_all[s, :kk].astype(np.float64)
+            ok = (row_ids >= 0) & np.isfinite(row_dd)
+            stats = ServeStats(
+                d_calls=a.d_calls, D_calls=int(calls[s]),
+                tower_batches=self.tower_total - a.tower0,
+                queue_ms=(a.t_admit - a.pend.t_submit) * 1e3,
+                compute_ms=(now - a.t_admit) * 1e3,
+                slot_occupancy=a.occ_snap, queue_depth=a.depth_snap)
+            if (r.deadline_ms is not None
+                    and (now - a.pend.t_submit) * 1e3 > r.deadline_ms):
+                misses += 1  # admitted late: resolve anyway, count the miss
+            a.pend.future._resolve(
+                SearchResult(row_ids[ok], row_dd[ok], stats))
+            done += 1
+            self.free_slot(s)
+        with eng._mu:
+            eng._counters.completed += done
+            eng._counters.deadline_misses += misses
+            eng._counters.slot_occupancy = int(self.occupied.sum())
+
+    def free_slot(self, s: int) -> None:
+        self.occupied[s] = False
+        self.active_req[s] = None
+        self.quota[s] = 0
+        self.L[s] = 1
+        self.ms[s] = 0
+        self.k[s] = 1
+        self.ew[s] = 1
+
+    def fail_all(self, exc: BaseException) -> None:
+        """Poisoned resident state (e.g. a tower error mid-step): fail every
+        resident + staged future, drop the state. The engine survives — the
+        next admission re-initializes a fresh resident state."""
+        eng = self.eng
+        if self.prepared is not None:
+            for pend, _ in self.prepared.valid:
+                pend.future._fail(exc)
+            self.prepared = None
+        for s in np.nonzero(self.occupied)[0]:
+            self.active_req[s].pend.future._fail(exc)
+            self.free_slot(s)
+        self.state = None
+        with eng._mu:
+            eng._counters.slot_occupancy = 0
+
+
 class BiMetricEngine:
     """corpus_tokens: (N, S) int32 document tokens.
 
@@ -191,47 +589,37 @@ class BiMetricEngine:
     over a corpus mesh. Stage 1 is :func:`repro.core.beam.sharded_greedy_search`
     (corpus split across ``shards`` devices, pools replicated). Stage 2
     keeps its host drive loop — the metric is the expensive tower itself —
-    but all its bookkeeping (plan, dedup lookup/insert, commit) runs inside
-    the mesh via :class:`repro.core.beam.ShardedStepper`. Results are
-    bit-exact vs ``shards=1``.
+    but all its bookkeeping (plan, dedup lookup/insert, commit, slot
+    admission) runs inside the mesh via
+    :class:`repro.core.beam.ShardedStepper`. Results are bit-exact vs
+    ``shards=1``.
 
     ``dedup`` selects stage 2's dedup-state backend: ``"sorted"`` carries a
     quota-proportional (B, quota) sorted membership set through the wave
-    (capacity = the wave's max quota rounded up to a power of two, so mixed
-    budgets retrace at most log-many times; admission's quota-0 padding
-    rows ride along with zero insertions and an all-padding wave gets a
-    zero-capacity set), ``"bitmap"`` the dense (B, N) bitmap, and
-    ``"auto"`` (default) picks sorted whenever the wave's quota bound is
-    below N. Under ``shards > 1`` the sorted set is replicated like the
-    pools — per-device dedup state shrinks from (B, N/shards) to
-    (B, quota) and the bitmap-lookup collective leaves the wave. Both
+    (capacity = the max quota rounded up to a power of two, so mixed
+    budgets retrace at most log-many times; quota-0 padding rows ride along
+    with zero insertions), ``"bitmap"`` the dense (B, N) bitmap, and
+    ``"auto"`` (default) picks sorted whenever the quota bound is below N.
+    Under ``shards > 1`` the sorted set is replicated like the pools. Both
     backends are bit-exact to each other. Stage 1 (quota-unbounded proxy
     search) always keeps the bitmap, per the same auto rule.
 
     ``backend`` selects the device-side kernel route for stage-1 wave
     scoring and the pool merges (``repro.kernels.resolve_backend`` values):
     ``"ref"`` (default) keeps the frozen-oracle numerics every parity
-    guarantee is stated against; ``"auto"`` is the deployment knob — MXU/
-    BLAS-form scoring over a **corpus-norm cache built once per engine
-    lifetime** (alongside the index; the index is corpus-immutable, so the
-    cache can never go stale) on CPU, the Pallas kernels on TPU. Stage 2's
-    distances come from the expensive tower, so its backend choice only
-    routes the commit merges.
-
+    guarantee is stated against; ``"auto"`` is the deployment knob.
     ``quantize`` (``"int8"`` / ``"fp8"`` / ``"fp8_e5m2"``) holds the
-    stage-1 corpus in quantized residency: the quantized view is built
-    **once per engine lifetime**, exactly like the norm cache, and every
-    stage-1 wave scores the int8/fp8 codes with dequant-in-the-kernel.
-    This is the paper's lossy-proxy lever — quantization error folds into
-    stage 1's C-approximation factor while stage 2 (the expensive tower)
-    stays exact, so recall@k degrades only through seed quality. Stage 2
-    is never quantized.
+    stage-1 corpus in quantized residency (built once per engine lifetime);
+    stage 2 is never quantized.
 
-    ``max_batch`` / ``max_wait_ms`` / ``max_inflight`` configure the async
-    admission pipeline (see :meth:`submit`); they are inert for the
-    synchronous ``query*`` paths. Async requests additionally report their
-    submit→resolve wall clock in ``ServeStats.latency_ms`` (the quantity
-    the serving bench gates at p50).
+    ``slots`` (default ``max_batch``) sizes the async drive's persistent
+    slot pool — the resident (S,)-row search state whose rows are recycled
+    per request (see the module doc). ``max_wait_ms`` bounds the idle
+    drive's poll interval. ``max_inflight`` configured the retired
+    fixed-wave double buffer and is now inert (accepted for
+    compatibility); the slot pool always overlaps the tower drain with the
+    next admission group's stage-1 work. All of these are inert for the
+    synchronous ``query*`` paths.
     """
 
     def __init__(self, cheap: EmbedTower, expensive: EmbedTower,
@@ -240,7 +628,8 @@ class BiMetricEngine:
                  tower_batch: int = 64, shards: int = 1,
                  max_batch: int = 8, max_wait_ms: float = 5.0,
                  max_inflight: int = 2, dedup: str = "auto",
-                 backend="ref", quantize: str | None = None):
+                 backend="ref", quantize: str | None = None,
+                 slots: int | None = None):
         self.cheap = cheap
         self.expensive = expensive
         self.corpus_tokens = corpus_tokens
@@ -250,15 +639,14 @@ class BiMetricEngine:
         if dedup not in ("auto", "sorted", "bitmap"):
             raise ValueError(f"unknown dedup backend {dedup!r}")
         self.dedup = dedup
-        # kernel backend for the device side (stage-1 wave scoring + pool
-        # merges). "ref" keeps the frozen-oracle numerics; "auto" is the
-        # deployment knob (matmul form over the engine-lifetime corpus-norm
-        # cache on CPU, the Pallas kernels on TPU).
         self.backend = kernels.resolve_backend(
             backend, quantize=quantize, _caller="serve.BiMetricEngine")
         self.max_batch = max_batch
+        self.slots = int(slots if slots is not None else max_batch)
+        if self.slots < 1:
+            raise ValueError("slots must be >= 1")
         self.max_wait = max_wait_ms / 1e3
-        self.max_inflight = max(1, max_inflight)
+        self.max_inflight = max(1, max_inflight)  # retired knob, kept inert
         # --- index build: cheap metric ONLY --------------------------------
         self.emb_d = jnp.asarray(cheap.embed(corpus_tokens))
         self.index = vamana.build(self.emb_d,
@@ -291,17 +679,20 @@ class BiMetricEngine:
         self._emb_D: np.ndarray | None = None
         self._emb_D_valid = np.zeros((self.n,), bool)
         self._cache_lock = threading.Lock()
-        # async pipeline state (threads start lazily on the first submit)
+        # async slot-pool state (threads start lazily on the first submit).
+        # _mu guards the admission queue + counters; the lifecycle lock
+        # orders start/close vs submit. Lock order: lifecycle -> _mu.
         self._lifecycle_lock = threading.Lock()
         self._started = False
         self._closed = False
         self._threads: list[threading.Thread] = []
-        self._admit_q: queue.Queue | None = None
-        self._device_q: queue.Queue | None = None
+        self._mu = threading.RLock()
+        self._q_cond = threading.Condition(self._mu)
+        self._queue: list = []  # heap of (-priority, deadline, seq, _Pending)
+        self._seq = 0
+        self._counters = EngineCounters()
         self._tower_q: queue.Queue | None = None
-        self._inflight_slots: threading.Semaphore | None = None
-        self._inflight = 0
-        self._inflight_lock = threading.Lock()
+        self._pool: _SlotPool | None = None
 
     # ------------------------------------------------------------ internals
     def _stage1(self, q_d: Array, *, width, pool: int,
@@ -331,7 +722,7 @@ class BiMetricEngine:
         """Embed not-yet-cached docs through the expensive tower; returns the
         number of forward batches drained. Serialized by the cache lock (the
         tower lane is single-file by construction; the lock also covers
-        synchronous callers running concurrently with the pipeline)."""
+        synchronous callers running concurrently with the slot drive)."""
         with self._cache_lock:
             need = np.unique(
                 ids[(ids >= 0) & ~self._emb_D_valid[np.maximum(ids, 0)]])
@@ -353,7 +744,7 @@ class BiMetricEngine:
 
     def _doc_embs(self, safe_np: np.ndarray, dim: int) -> np.ndarray:
         """(B, K, dim_D) gather from the host cache; rows a wave needs are
-        guaranteed drained before the wave re-enters the device lane."""
+        guaranteed drained before the wave's commit runs."""
         emb = self._emb_D
         if emb is None:
             return np.zeros(safe_np.shape + (dim,), np.float32)
@@ -361,17 +752,17 @@ class BiMetricEngine:
 
     # -------------------------------------------------------- wave coroutine
     def _wave_gen(self, query_tokens: np.ndarray, quota, k, n_seeds,
-                  expand_width: int):
-        """The two-stage search for one wave, as a coroutine.
+                  expand_width):
+        """The two-stage search for one synchronous batch, as a coroutine.
 
         Yields tower-lane work items — ``("embed_queries", tokens)`` then one
         ``("drain", ids)`` per stage-2 wave — and receives the answer via
         ``send`` (the expensive query embeddings / the drained batch count).
         Device-lane work (cheap embed, stage 1, plan/commit bookkeeping)
         runs between yields. Returns ``(ids, dists, stats)`` via
-        ``StopIteration.value``. Both the synchronous ``query_batch`` and
-        the async pipeline drive exactly this generator, which is what makes
-        them bit-exact to each other.
+        ``StopIteration.value``. The async slot drive runs the identical
+        per-row math against its resident state (same jitted programs, same
+        per-row operands), which is what keeps the two drives bit-exact.
         """
         b = query_tokens.shape[0]
         quota_np = np.broadcast_to(
@@ -380,6 +771,9 @@ class BiMetricEngine:
                       else np.broadcast_to(
                           np.asarray(n_seeds, np.int32), (b,)).copy())
         k_np = np.broadcast_to(np.asarray(k, np.int32), (b,))
+        ew_np = np.maximum(1, np.broadcast_to(
+            np.asarray(expand_width, np.int32), (b,)))
+        ew_cap = int(ew_np.max())
 
         q_d = jnp.asarray(self.cheap.embed(query_tokens))
         q_D = yield ("embed_queries", query_tokens)
@@ -410,6 +804,7 @@ class BiMetricEngine:
         quota_j = jnp.asarray(quota_np)
         L_j = jnp.asarray(L)
         ms_j = jnp.asarray(max_steps)
+        ew_j = jnp.asarray(ew_np)
         tower_batches = 0
 
         # dedup backend for the wave (host-driven drive: the non-donated
@@ -440,15 +835,15 @@ class BiMetricEngine:
                     break
                 state, safe, keep, _ = stepper.plan(
                     state, self._adjacency, quota_j, L_j, ms_j,
-                    expand_width=expand_width)
+                    expand_width=ew_j, expand_cap=ew_cap)
             else:
                 state = _commit_j(state, safe, keep, dists,
                                   backend=self.backend)
                 if not bool(_active_any_j(state, quota_j, L_j, ms_j)):
                     break
                 state, safe, keep, _ = _plan_step_j(
-                    state, self._adjacency, quota_j, L_j, ms_j,
-                    expand_width=expand_width)
+                    state, self._adjacency, quota_j, L_j, ms_j, ew_j,
+                    expand_cap=ew_cap)
 
         kmax = int(k_np.max())
         ids = np.asarray(state.pool_ids[:, :kmax], np.int64)
@@ -477,190 +872,252 @@ class BiMetricEngine:
             return stop.value
 
     # ---------------------------------------------------------------- query
-    def query_batch(self, query_tokens: np.ndarray, *, quota,
-                    k: int = 10, n_seeds=None, expand_width: int = 1,
-                    ) -> tuple[np.ndarray, np.ndarray, list[ServeStats]]:
-        """Two-stage bi-metric search for a whole batch of (B, S) queries.
+    @staticmethod
+    def _is_request_batch(obj) -> bool:
+        return (isinstance(obj, (list, tuple)) and len(obj) > 0
+                and all(isinstance(r, SearchRequest) for r in obj))
 
-        ``quota`` (and ``n_seeds``) may be scalars or per-query (B,)
-        vectors — mixed budgets run in one wave with exact per-query
-        accounting. Returns (ids (B, k), D-dists (B, k), per-query stats);
-        unfilled result slots are id -1 / dist +inf.
+    def query_batch(self, requests=None, *, quota=None,
+                    k: int = 10, n_seeds=None, expand_width=1):
+        """Two-stage bi-metric search for a batch of requests, inline.
+
+        Native form: a list of :class:`SearchRequest` -> a list of
+        :class:`SearchResult` (per-request k, trimmed rows). Legacy form
+        (deprecated, warns once): a (B, S) token array with ``quota`` /
+        ``k`` / ``n_seeds`` / ``expand_width`` scalars-or-(B,) vectors ->
+        the historical ``(ids (B, k), D-dists (B, k), [ServeStats])`` tuple
+        with id -1 / dist +inf padding. Both run the identical wave; mixed
+        budgets get exact per-query accounting either way.
         """
-        return self._drive_sync(
-            self._wave_gen(query_tokens, quota, k, n_seeds, expand_width))
+        if self._is_request_batch(requests):
+            reqs = list(requests)
+            tokens = np.stack([np.asarray(r.tokens) for r in reqs])
+            quota_v = np.array([int(r.quota) for r in reqs], np.int32)
+            k_v = np.array([int(r.k) for r in reqs], np.int32)
+            nseed_v = np.array(
+                [max(1, int(r.quota) // 2) if r.n_seeds is None
+                 else max(1, int(r.n_seeds)) for r in reqs], np.int32)
+            ew_v = np.array(
+                [max(1, int(r.expand_width)) for r in reqs], np.int32)
+            ids, dd, stats = self._drive_sync(
+                self._wave_gen(tokens, quota_v, k_v, nseed_v, ew_v))
+            out = []
+            for i, r in enumerate(reqs):
+                row_ids, row_dd = ids[i, :r.k], dd[i, :r.k]
+                ok = (row_ids >= 0) & np.isfinite(row_dd)
+                out.append(SearchResult(row_ids[ok], row_dd[ok], stats[i]))
+            return out
+        if isinstance(requests, SearchRequest):
+            raise TypeError(
+                "query_batch takes a list of SearchRequest; use "
+                "query(request) for a single one")
+        if quota is None:
+            raise TypeError("legacy query_batch(tokens, ...) needs quota=")
+        _warn_legacy("query_batch", "query_batch(tokens, quota=...)")
+        return self._drive_sync(self._wave_gen(
+            np.asarray(requests), quota, k, n_seeds, expand_width))
 
-    def query(self, query_tokens: np.ndarray, *, quota: int, k: int = 10,
-              n_seeds: int | None = None,
-              ) -> tuple[np.ndarray, np.ndarray, ServeStats]:
-        """One query (S,) tokens. Returns (ids, D-dists, stats)."""
-        ids, dd, stats = self.query_batch(query_tokens[None], quota=quota,
-                                          k=k, n_seeds=n_seeds)
+    def query(self, request=None, *, quota: int | None = None, k: int = 10,
+              n_seeds: int | None = None) -> SearchResult:
+        """One request, inline. Native form: ``query(SearchRequest)``.
+        Legacy form (deprecated, warns once): ``query(tokens, quota=...)``.
+        Returns a :class:`SearchResult` (tuple-unpacks as (ids, dists,
+        stats), so legacy callers keep working)."""
+        if isinstance(request, SearchRequest):
+            return self.query_batch([request])[0]
+        if quota is None:
+            raise TypeError("legacy query(tokens, ...) needs quota=")
+        _warn_legacy("query", "query(tokens, quota=...)")
+        ids, dd, stats = self._drive_sync(self._wave_gen(
+            np.asarray(request)[None], int(quota), int(k), n_seeds, 1))
         ok = (ids[0] >= 0) & np.isfinite(dd[0])
-        return ids[0][ok], dd[0][ok], stats[0]
+        return SearchResult(ids[0][ok], dd[0][ok], stats[0])
 
-    # ------------------------------------------------------- async pipeline
-    def submit(self, tokens: np.ndarray, *, quota: int, k: int = 10
-               ) -> ServeFuture:
-        """Queue one (S,) request; returns a :class:`ServeFuture` resolving
-        to the :meth:`query` result shape. Starts the pipeline threads on
-        first use. Raises ``RuntimeError`` after :meth:`close`."""
+    # ------------------------------------------------------- async slot pool
+    def submit(self, request=None, *, quota: int | None = None,
+               k: int = 10, n_seeds: int | None = None,
+               expand_width: int = 1, deadline_ms: float | None = None,
+               priority: int = 0) -> ServeFuture:
+        """Queue one request for the slot pool; returns a
+        :class:`ServeFuture` resolving to a :class:`SearchResult`. Native
+        form: ``submit(SearchRequest)``. Legacy form (deprecated, warns
+        once): ``submit(tokens, quota=...)``. Starts the drive threads on
+        first use; raises ``RuntimeError`` after :meth:`close`."""
+        if not isinstance(request, SearchRequest):
+            if quota is None:
+                raise TypeError("legacy submit(tokens, ...) needs quota=")
+            _warn_legacy("submit", "submit(tokens, quota=...)")
+            request = SearchRequest(
+                tokens=np.asarray(request), quota=int(quota), k=int(k),
+                n_seeds=n_seeds, expand_width=expand_width,
+                deadline_ms=deadline_ms, priority=priority)
         fut = ServeFuture()
-        req = _Request(tokens=np.asarray(tokens), quota=int(quota),
-                       k=int(k), future=fut, t_submit=time.monotonic())
-        # check-closed + enqueue under the lifecycle lock: close() flips
-        # _closed under the same lock before it posts the sentinel, so a
-        # request can never land behind the sentinel unresolved
+        now = time.monotonic()
+        pend = _Pending(req=request, future=fut, t_submit=now)
+        deadline = (math.inf if request.deadline_ms is None
+                    else now + request.deadline_ms / 1e3)
+        # enqueue under the lifecycle lock: close() flips _closed under the
+        # same lock before it cancels the queue, so a request can never land
+        # behind the cancellation sweep unresolved
         with self._lifecycle_lock:
             self._ensure_started_locked()
-            self._admit_q.put(req)
+            with self._q_cond:
+                self._seq += 1
+                heapq.heappush(
+                    self._queue,
+                    (-int(request.priority), deadline, self._seq, pend))
+                self._counters.submitted += 1
+                self._counters.queue_depth = len(self._queue)
+                self._q_cond.notify_all()
         return fut
 
+    def counters(self) -> EngineCounters:
+        """Snapshot of the admission-layer counters (cumulative since
+        engine construction; ``queue_depth`` / ``slot_occupancy`` are
+        instantaneous)."""
+        with self._mu:
+            return dataclasses.replace(self._counters)
+
     def close(self, timeout: float | None = 60.0) -> None:
-        """Drain and stop the pipeline. Every request admitted before the
-        call still resolves; the admission queue is flushed into final
-        (possibly partial) waves before the lanes shut down. Idempotent."""
+        """Stop the slot pool. Requests already admitted to a slot (or
+        staged for admission) still resolve; requests **still queued** are
+        cancelled immediately — their ``result()`` raises
+        ``CancelledError`` — instead of being flushed into a final drain
+        that could outlive the timeout. Idempotent; ``submit`` raises
+        afterwards."""
         with self._lifecycle_lock:
             already = self._closed
             self._closed = True
             started = self._started
+            dropped: list[_Pending] = []
+            if not already and started:
+                with self._q_cond:
+                    while self._queue:
+                        dropped.append(heapq.heappop(self._queue)[-1])
+                    self._counters.queue_depth = 0
+                    self._counters.cancelled += len(dropped)
+                    self._q_cond.notify_all()
         if already or not started:
             return
-        self._admit_q.put(_STOP)
+        for pend in dropped:  # outside the locks: cancel runs callbacks
+            pend.future.cancel()
         for t in self._threads:
             t.join(timeout)
 
     def _ensure_started_locked(self) -> None:
-        """Start the lanes on first use; caller holds ``_lifecycle_lock``."""
+        """Start the drive + tower threads on first use; caller holds
+        ``_lifecycle_lock``."""
         if self._closed:
-            raise RuntimeError("engine pipeline is closed")
+            raise RuntimeError("engine slot pool is closed")
         if self._started:
             return
-        self._admit_q = queue.Queue()
-        self._device_q = queue.Queue()
         self._tower_q = queue.Queue()
-        self._inflight_slots = threading.Semaphore(self.max_inflight)
+        self._pool = _SlotPool(self)
         self._threads = [
             threading.Thread(target=loop, daemon=True, name=name)
-            for name, loop in (("serve-admission", self._admission_loop),
-                               ("serve-device", self._device_loop),
+            for name, loop in (("serve-drive", self._drive_loop),
                                ("serve-tower", self._tower_loop))]
         for t in self._threads:
             t.start()
         self._started = True
 
-    def _make_wave(self, requests: list) -> _Wave:
-        """Pad a request group to the fixed (max_batch, S) wave shape.
+    # ----------------------------------------------------- admission helpers
+    def _queue_depth(self) -> int:
+        with self._mu:
+            return len(self._queue)
 
-        Padding rows carry quota 0 (they plan all-masked waves and never
-        touch the tower) and k 1; because every budget knob is per-query in
-        the core engine, padding never perturbs a real request's answer.
-        """
-        b, s = self.max_batch, self.corpus_tokens.shape[1]
-        tokens = np.zeros((b, s), self.corpus_tokens.dtype)
-        quota = np.zeros((b,), np.int32)
-        k = np.ones((b,), np.int32)
-        for i, r in enumerate(requests):
-            tokens[i], quota[i], k[i] = r.tokens, r.quota, r.k
-        return _Wave(requests=requests,
-                     gen=self._wave_gen(tokens, quota, k, None, 1))
-
-    def _admission_loop(self) -> None:
-        stopping = False
-        while not stopping:
-            first = self._admit_q.get()
-            if first is _STOP:
-                break
-            batch = [first]
-            deadline = time.monotonic() + self.max_wait
-            while len(batch) < self.max_batch:
-                try:
-                    r = self._admit_q.get(
-                        timeout=max(deadline - time.monotonic(), 0.0))
-                except queue.Empty:
-                    break  # max_wait_ms flush: dispatch the partial wave
-                if r is _STOP:
-                    stopping = True
-                    break
-                batch.append(r)
-            self._inflight_slots.acquire()  # the double buffer: ≤ max_inflight
-            with self._inflight_lock:
-                self._inflight += 1
-            try:
-                wave = self._make_wave(batch)
-            except BaseException as exc:  # noqa: BLE001 — e.g. bad token shape
-                # a malformed request must fail its own wave, not kill the
-                # admission thread (which would wedge every later submit)
-                for r in batch:
-                    r.future._fail(exc)
-                self._retire_wave()
-                continue
-            self._device_q.put(wave)
-        self._device_q.put(_STOP)
-
-    def _finish_wave(self, wave: _Wave, value) -> None:
-        done = time.monotonic()
-        ids, dd, stats = value
-        for i, r in enumerate(wave.requests):
-            row_ids, row_dd = ids[i, :r.k], dd[i, :r.k]
-            ok = (row_ids >= 0) & np.isfinite(row_dd)
-            # per-request wall clock: admission wait + wave compute — the
-            # serving latency the async bench gates (p50/p95)
-            stats[i].latency_ms = (done - r.t_submit) * 1e3
-            r.future._resolve((row_ids[ok], row_dd[ok], stats[i]))
-
-    def _fail_wave(self, wave: _Wave, exc: BaseException) -> None:
-        for r in wave.requests:
-            r.future._fail(exc)
-
-    def _retire_wave(self) -> int:
-        with self._inflight_lock:
-            self._inflight -= 1
-            left = self._inflight
-        self._inflight_slots.release()
-        return left
-
-    def _device_loop(self) -> None:
-        draining = False
-        while True:
-            item = self._device_q.get()
-            if item is _STOP:
-                draining = True
-                with self._inflight_lock:
-                    if self._inflight == 0:
-                        break
-                continue
-            wave: _Wave = item
-            try:
-                if wave.tower_exc is not None:
-                    raise wave.tower_exc
-                if wave.started:
-                    tower_item = wave.gen.send(wave.pending)
+    def _pop_group(self, n: int) -> list[_Pending]:
+        """Pop up to ``n`` requests in (priority, deadline, FIFO) order.
+        Entries whose deadline already expired are failed here (never
+        admitted) — the pop is an admission point."""
+        now = time.monotonic()
+        group: list[_Pending] = []
+        expired: list[_Pending] = []
+        with self._q_cond:
+            while self._queue and len(group) < n:
+                _, deadline, _, pend = heapq.heappop(self._queue)
+                if deadline < now:
+                    expired.append(pend)
                 else:
-                    tower_item = next(wave.gen)
-                    wave.started = True
-                wave.pending = None
-                wave.pending_item = tower_item
-                self._tower_q.put(wave)
-                continue
-            except StopIteration as stop:
-                self._finish_wave(wave, stop.value)
-            except BaseException as exc:  # noqa: BLE001 — fail the futures
-                self._fail_wave(wave, exc)
-            if self._retire_wave() == 0 and draining:
-                break
-        self._tower_q.put(_STOP)
+                    group.append(pend)
+            self._counters.queue_depth = len(self._queue)
+            self._counters.deadline_misses += len(expired)
+        for pend in expired:  # outside the lock: _fail runs callbacks
+            pend.future._fail(DeadlineExceeded(
+                f"deadline_ms={pend.req.deadline_ms} expired while queued"))
+        return group
+
+    def _expire_queued(self) -> None:
+        """Fail every queued request whose deadline has passed (checked on
+        every drive-loop iteration, so expiry does not wait for a free
+        slot)."""
+        now = time.monotonic()
+        expired: list[_Pending] = []
+        with self._q_cond:
+            if not self._queue:
+                return
+            alive = [e for e in self._queue if e[1] >= now]
+            if len(alive) == len(self._queue):
+                return
+            expired = [e[-1] for e in self._queue if e[1] < now]
+            heapq.heapify(alive)
+            self._queue = alive
+            self._counters.queue_depth = len(alive)
+            self._counters.deadline_misses += len(expired)
+        for pend in expired:
+            pend.future._fail(DeadlineExceeded(
+                f"deadline_ms={pend.req.deadline_ms} expired while queued"))
+
+    def _tower_submit(self, item) -> concurrent.futures.Future:
+        fut: concurrent.futures.Future = concurrent.futures.Future()
+        self._tower_q.put((item, fut))
+        return fut
+
+    # ----------------------------------------------------------- drive loops
+    def _drive_loop(self) -> None:
+        pool = self._pool
+        try:
+            while True:
+                try:
+                    self._expire_queued()
+                    if pool.prepared is not None:
+                        prep, pool.prepared = pool.prepared, None
+                        pool.admit(prep)
+                        pool.resolve_finished()
+                        continue
+                    free = int((~pool.occupied).sum())
+                    if free:
+                        group = self._pop_group(free)
+                        if group:
+                            pool.prepared = pool.prepare(group)
+                            continue
+                    if pool.occupied.any():
+                        pool.step()
+                        pool.resolve_finished()
+                        continue
+                except BaseException as exc:  # noqa: BLE001 — poisoned state
+                    pool.fail_all(exc)
+                    continue
+                # idle: no occupied slots, nothing admittable right now
+                with self._q_cond:
+                    if self._queue:
+                        continue
+                    if self._closed:
+                        break
+                    self._q_cond.wait(max(self.max_wait, 0.05))
+        finally:
+            self._tower_q.put(_STOP)
 
     def _tower_loop(self) -> None:
         while True:
-            wave = self._tower_q.get()
-            if wave is _STOP:
+            got = self._tower_q.get()
+            if got is _STOP:
                 break
+            item, fut = got
             try:
-                wave.pending = self._service_tower(wave.pending_item)
-            except BaseException as exc:  # noqa: BLE001 — surfaced on device
-                wave.tower_exc = exc
-            self._device_q.put(wave)
+                fut.set_result(self._service_tower(item))
+            except BaseException as exc:  # noqa: BLE001 — surfaced on drive
+                fut.set_exception(exc)
 
     # --------------------------------------------------------------- rerank
     def _embed_queries(self, query_tokens: np.ndarray):

@@ -1,12 +1,15 @@
-"""Async serving pipeline: admission/batcher edge cases and parity suites.
+"""Async serving: admission edge cases and slot-drive parity suites.
 
-The engine's async path (``submit`` → padded waves → double-buffered
-tower drain) must be *bit-exact* vs the synchronous ``query_batch`` drive
-of the same requests — both run the identical wave coroutine, and every
-budget knob is a per-query vector in the core engine, so padding and
-wave-mates cannot perturb a request's answer. The sharded suite (8 forced
-host devices, subprocess) pins the same parity with stage 2's bookkeeping
-running inside the corpus mesh at shards ∈ {1, 2, 4}.
+The engine's async path (``submit`` → priority/deadline queue → the
+persistent slot pool) must be *bit-exact* vs the synchronous
+``query_batch`` drive of the same requests — every budget knob is a
+per-row operand in the core engine and slot recycling is an exact re-init
+of the recycled rows, so admission order, slot-mates and padding cannot
+perturb a request's answer. The sharded suite (8 forced host devices,
+subprocess) pins the same parity with stage 2's bookkeeping running
+inside the corpus mesh at shards ∈ {1, 2, 4}. Slot-pool-specific edge
+cases (priority reuse, deadline expiry, backpressure, close-cancellation)
+live in test_serve_slots.py.
 """
 import os
 import subprocess
@@ -122,15 +125,29 @@ def test_single_request_latency_parity(engine_parts):
 
 
 def test_clean_shutdown_with_inflight_requests(engine_parts):
-    """close() drains: every admitted request resolves, close is idempotent,
-    and submit after close raises instead of hanging."""
+    """close() settles every future instead of hanging: requests already
+    admitted to a slot resolve, requests still queued are *cancelled*
+    (CancelledError — never flushed into a final drain). close is
+    idempotent and submit after close raises. (The deterministic
+    admitted-vs-queued split is pinned in test_serve_slots.py with a gated
+    tower; here the split is timing-dependent, so both outcomes are
+    legal per future.)"""
+    import concurrent.futures as cf
+
     eng = _fresh_engine(engine_parts, max_batch=2, max_wait_ms=1.0)
     qs = eng.corpus_tokens[[3, 9, 40, 55, 77]].copy()
     futs = [eng.submit(qs[i], quota=10, k=5) for i in range(5)]
-    eng.close()  # immediately — several waves still in flight
+    eng.close()  # immediately — slots busy, tail still queued
+    resolved = cancelled = 0
     for f in futs:
-        ids, dd, st = f.result(timeout=60)  # resolved, not abandoned
-        assert st.D_calls <= 10
+        try:
+            ids, dd, st = f.result(timeout=60)  # settled, not abandoned
+            assert st.D_calls <= 10
+            resolved += 1
+        except cf.CancelledError:
+            cancelled += 1
+    assert resolved + cancelled == 5
+    assert eng.counters().cancelled == cancelled
     eng.close()  # idempotent
     with pytest.raises(RuntimeError):
         eng.submit(qs[0], quota=5)
