@@ -1,41 +1,126 @@
-"""Theorem B.3 instantiation: Cover Tree built on d (T=C), searched with D —
-expensive-call counts vs accuracy, next to the DiskANN instantiation."""
+"""Theorem B.3 instantiation: Cover Tree built on d, searched with D —
+expensive-call counts vs accuracy, next to the DiskANN instantiation.
+
+Two query drives over the same offline tree: the frozen per-query NumPy
+oracle (``covertree.search``, the parity reference) and the batched engine
+(``covertree.search_batched`` — ``plan_step``/``commit_scores`` waves at
+B=32, the fused gather→score closure built once so the level programs stay
+jit-warm across the ε grid). The gateable ``result`` dict carries batched
+recall@10 and mean D-calls at the paper's ε grid plus the batched-vs-NumPy
+wall ratio at B=32.
+
+Operating point: the theorem wants the tree built at ``T = C``, but the
+measured expansion constant of this synthetic dataset (``c_estimate`` ≈ 21,
+emitted below) degenerates at n=2048 — a T=8 tree already memoizes ~95% of
+the corpus per query, a linear scan in tree clothing. The bench builds at
+``T = 3.0``, where the descent actually prunes (~23% of the corpus
+memoized) while holding recall@10 ≈ 0.99, and records the theorem-vs-
+practice gap in the emitted rows. The pool is right-sized to the observed
+memoization demand; ``max(n_calls) < P`` is asserted each run, which by
+P-invariance witnesses that the truncated pool changed nothing.
+
+``speedup_at_32`` is a drift tracker, not a victory lap: on a small-n CPU
+host the slab waves score ``fanout``-padded lanes (most lanes -1) that the
+per-query loop never materializes, so the honest ratio sits below 1. What
+the batched drive buys is device residency — shards/backends and the slot
+pool ride it unchanged — and the gate guards the drive against getting
+*slower* from here.
+"""
 from __future__ import annotations
 
 import time
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Setup, emit
-from repro.core import covertree
+from repro.core import beam, covertree
+
+_T = 3.0
+_POOL = 1024  # next pow2 above the observed per-query memoization demand
 
 
-def run() -> None:
+def run() -> dict:
     setup = Setup(n=2048, n_queries=32)
     x_d = np.asarray(setup.data.corpus_d, np.float64)
     x_D = np.asarray(setup.data.corpus_D, np.float64)
-    C = min(setup.data.c_estimate, 8.0)
-    t0 = time.perf_counter()
-    tree = covertree.build(x_d, T=C)
-    build_us = (time.perf_counter() - t0) * 1e6
-    emit("covertree/build", build_us, f"levels={tree.depth};T={C:.2f}")
+    x_D32 = np.asarray(setup.data.corpus_D, np.float32)
     qs = np.asarray(setup.data.queries_D, np.float64)
+    qs32 = np.asarray(setup.data.queries_D, np.float32)
     true = np.asarray(setup.true_ids)
+    t0 = time.perf_counter()
+    tree = covertree.build(x_d, T=_T)
+    build_us = (time.perf_counter() - t0) * 1e6
+    emit("covertree/build", build_us,
+         f"levels={tree.depth};T={_T};c_estimate={setup.data.c_estimate:.1f}")
+    flat = covertree.flatten(tree)
+    emit("covertree/flatten", 0.0,
+         f"fanout={flat.fanout};roots={flat.root_ids.shape[0]}")
+    # one fused closure for the whole grid — the closure is a jit static of
+    # the level program, so rebuilding it per call would retrace every level
+    dist_fn = beam.fused_dist_fn(jnp.asarray(x_D32), "l2")
+
+    result: dict = {"eps": {}, "T": _T, "n": setup.n,
+                    "c_estimate": float(setup.data.c_estimate)}
+    np_wall = 0.0
+    batched_wall = 0.0
+    recalls_batched = []
+    calls_all: list[float] = []
     for eps in (1.0, 0.5, 0.25):
-        recalls, calls_all = [], []
-        # the timed region wraps the actual query loop: us/call is the mean
-        # wall clock of one covertree.search query at this eps
+        # frozen per-query NumPy oracle — the timed region wraps the whole
+        # query loop: us/query is one covertree.search at this eps
+        recalls_np, calls_np = [], []
         t0 = time.perf_counter()
         for qi in range(qs.shape[0]):
-            ids, dists, calls = covertree.search(
+            ids, _, calls = covertree.search(
                 tree, lambda i, q=qs[qi]: np.linalg.norm(x_D[i] - q, axis=-1),
                 eps=eps, k=10)
-            recalls.append(len(set(ids.tolist()) & set(true[qi].tolist())) / 10)
-            calls_all.append(calls)
-        us_per_query = (time.perf_counter() - t0) * 1e6 / qs.shape[0]
-        emit(f"covertree/eps={eps}", us_per_query,
-             f"recall@10={np.mean(recalls):.4f};"
-             f"mean_D_calls={np.mean(calls_all):.0f};n={setup.n}")
+            recalls_np.append(
+                len(set(ids.tolist()) & set(true[qi].tolist())) / 10)
+            calls_np.append(calls)
+        t_np = time.perf_counter() - t0
+        np_wall += t_np
+        emit(f"covertree/eps={eps}", t_np * 1e6 / qs.shape[0],
+             f"recall@10={np.mean(recalls_np):.4f};"
+             f"mean_D_calls={np.mean(calls_np):.0f};n={setup.n}")
+
+        # batched engine, whole B=32 batch as one wave-driven descent
+        res = covertree.search_batched(
+            flat, dist_fn, qs32, eps=eps, k=10, pool_size=_POOL)
+        jax.block_until_ready(res.ids)  # warm the per-eps level programs
+        t0 = time.perf_counter()
+        res = covertree.search_batched(
+            flat, dist_fn, qs32, eps=eps, k=10, pool_size=_POOL)
+        ids_b = np.asarray(jax.block_until_ready(res.ids))
+        t_b = time.perf_counter() - t0
+        batched_wall += t_b
+        n_calls = np.asarray(res.n_calls)
+        assert int(n_calls.max()) < _POOL, \
+            "pool overflow: P-invariance witness violated, grow _POOL"
+        rec_b = float(np.mean([
+            len(set(ids_b[qi].tolist()) & set(true[qi].tolist())) / 10
+            for qi in range(qs.shape[0])]))
+        mean_calls = float(np.mean(n_calls))
+        recalls_batched.append(rec_b)
+        calls_all.append(mean_calls)
+        emit(f"covertree/batched/eps={eps}", t_b * 1e6 / qs.shape[0],
+             f"recall@10={rec_b:.4f};mean_D_calls={mean_calls:.0f};B=32")
+        result["eps"][str(eps)] = {
+            "recall_np": float(np.mean(recalls_np)),
+            "recall_batched": rec_b,
+            "mean_D_calls_np": float(np.mean(calls_np)),
+            "mean_D_calls_batched": mean_calls,
+        }
+
+    result["recall_at_10"] = float(np.mean(recalls_batched))
+    result["mean_D_calls"] = float(np.mean(calls_all))
+    result["speedup_at_32"] = float(np_wall / batched_wall)
+    emit("covertree/batched/speedup_at_32",
+         batched_wall * 1e6 / (3 * qs.shape[0]),
+         f"speedup={result['speedup_at_32']:.2f}x;"
+         f"recall@10={result['recall_at_10']:.4f}")
+
     # DiskANN bi-metric at the cover tree's budget, for comparison
     budget = int(np.mean(calls_all))
     t0 = time.perf_counter()
@@ -43,6 +128,8 @@ def run() -> None:
     run_us = (time.perf_counter() - t0) * 1e6 / qs.shape[0]
     emit(f"covertree/diskann_at_same_budget/Q={budget}", run_us,
          f"recall@10={rec:.4f}")
+    result["diskann_at_same_budget"] = {"quota": budget, "recall": rec}
+    return result
 
 
 if __name__ == "__main__":

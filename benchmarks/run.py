@@ -57,6 +57,11 @@ def main() -> None:
         try:
             result = fn()
             wall = time.time() - t0
+            if result is None:
+                print(f"WARNING: bench {name!r} returned no result dict — "
+                      f"BENCH_{slug}.json will carry result: null, so "
+                      "nothing in it is gateable by scripts/check_bench.py",
+                      file=sys.stderr)
             print(f"{name}/_wall,{wall*1e6:.0f},seconds={wall:.1f}")
             common.write_bench_json(slug, {
                 "bench": name,

@@ -79,7 +79,10 @@ def check_one(base: float, new: float, *, key: str, direction: str,
 
 def print_gate_table(rows: list[dict]) -> None:
     """The full gate table — printed on success AND failure, so every CI log
-    records what was measured against what, not just the verdict."""
+    records what was measured against what, not just the verdict. When
+    ``$GITHUB_STEP_SUMMARY`` is set (GitHub Actions), the same table is also
+    appended there as markdown, so gate verdicts are readable from the
+    Actions summary page without digging through logs."""
     if not rows:
         print("bench-gate: no gates to check")
         return
@@ -97,6 +100,19 @@ def print_gate_table(rows: list[dict]) -> None:
     print("-" * len(line))
     for fr in fmt_rows:
         print("  ".join(c.ljust(w) for c, w in zip(fr, widths)))
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        n_fail = sum(r["verdict"] != "OK" for r in rows)
+        with open(summary, "a") as f:
+            f.write("### Bench gates — "
+                    f"{len(rows) - n_fail}/{len(rows)} passed\n\n")
+            f.write("| " + " | ".join(headers) + " |\n")
+            f.write("|" + " --- |" * len(headers) + "\n")
+            for fr in fmt_rows:
+                cells = [c if c != "REGRESSION" else "**REGRESSION**"
+                         for c in fr]
+                f.write("| " + " | ".join(cells) + " |\n")
+            f.write("\n")
 
 
 def run_manifest(manifest_path: str, baseline_dir: str, new_dir: str) -> int:

@@ -517,6 +517,24 @@ def active_mask(
     )
 
 
+def reset_expanded(state: BatchedSearchState, rows: Array) -> BatchedSearchState:
+    """Re-open the frontier on the masked ``rows`` (clear ``expanded``).
+
+    The graph descent never revisits a vertex, but the cover-tree level
+    descent expands the *same* surviving centers again at the next (finer)
+    level — between levels the driver clears the expanded flags so
+    :func:`plan_step`'s frontier selection sees the whole pool prefix
+    afresh. ``rows`` is a (B,) bool mask (or scalar); pools, scores,
+    dedup state and call counters are untouched, so re-expansion stays an
+    exact no-op for already-memoized ids.
+    """
+    b = state.pool_ids.shape[0]
+    rows = jnp.broadcast_to(jnp.asarray(rows, bool), (b,))
+    return state._replace(
+        expanded=jnp.where(rows[:, None], False, state.expanded)
+    )
+
+
 def plan_step(
     state: BatchedSearchState,
     adjacency: Array,
@@ -527,6 +545,8 @@ def plan_step(
     expand_width: int | Array = 1,
     expand_cap: int | None = None,
     shard: ShardCtx | None = None,
+    level: Array | None = None,
+    wave_dedup: bool = True,
 ) -> tuple[BatchedSearchState, Array, Array, Array]:
     """One expansion wave: pick frontiers, gather fanout, mask to the quota.
 
@@ -544,6 +564,14 @@ def plan_step(
     for duplicate ids inside one adjacency row twice — regardless of its
     batch-mates' widths.
 
+    ``level`` (a per-query (B,) int vector) switches the fanout table from
+    a flat graph ``(N, R)`` to a level-stacked ``(L, N, R)`` one —
+    ``adjacency[level[b], vertex]`` — which is how the cover-tree descent
+    steps co-resident queries sitting at *different* tree levels in one
+    program. ``wave_dedup=False`` skips the O((E·R)²) same-wave positional
+    dedup; only safe when the expanded rows' fanouts are disjoint by
+    construction (cover-tree child slabs partition the next level).
+
     Under a :class:`ShardCtx`, the already-scored lookup OR-reduces the
     owning shard's bitmap slice across the axis and the scatter lands only
     on the owner; all other planning math runs on replicated inputs, so the
@@ -558,7 +586,7 @@ def plan_step(
                 "a traced (B,) expand_width needs a static expand_cap")
     E = max(int(expand_cap), 1)
     ew = _per_query(expand_width, b)
-    r = adjacency.shape[1]
+    r = adjacency.shape[-1]
     quota = jnp.broadcast_to(jnp.asarray(quota, jnp.int32), (b,))
 
     active = active_mask(
@@ -585,10 +613,15 @@ def plan_step(
         -1,
     )
 
-    nbrs = adjacency.astype(jnp.int32)[jnp.maximum(verts, 0)]  # (B, E, R)
+    adj = adjacency.astype(jnp.int32)
+    if level is None:
+        nbrs = adj[jnp.maximum(verts, 0)]  # (B, E, R)
+    else:
+        lev = _per_query(level, b)
+        nbrs = adj[lev[:, None], jnp.maximum(verts, 0)]  # (B, E, R)
     nbrs = jnp.where((verts >= 0)[:, :, None], nbrs, -1)
     cand = nbrs.reshape(b, E * r)
-    if E > 1:
+    if E > 1 and wave_dedup:
         # a vertex reachable from two same-wave frontier vertices must be
         # paid for once; a row at expand_width 1 keeps the historical
         # behavior bit-exactly (which scores duplicate ids inside one
@@ -1096,11 +1129,18 @@ class ShardedStepper:
              beam_width: Array, max_steps: Array,
              *, expand_width: int | Array = 1,
              expand_cap: int | None = None,
+             level: Array | None = None,
+             wave_dedup: bool = True,
              ) -> tuple[BatchedSearchState, Array, Array, Array]:
         """Sharded :func:`plan_step` (owner-only scatter + psum lookup for
         the bitmap backend; collective-free replicated membership for the
         sorted backend). ``expand_width`` may be a (B,) vector — it rides
-        in as an operand, the program is keyed on the static lane cap."""
+        in as an operand, the program is keyed on the static lane cap.
+        ``level`` (a (B,) vector) selects slabs of a level-stacked
+        ``(L, N, R)`` fanout table (replicated, like the flat one) — the
+        cover-tree descent's program shape."""
+        from jax.sharding import PartitionSpec as _P
+
         from repro.launch.mesh import shard_map
 
         dedup = self._dedup_of(state)
@@ -1111,23 +1151,64 @@ class ShardedStepper:
                 raise ValueError(
                     "a traced (B,) expand_width needs a static expand_cap")
         cap = max(int(expand_cap), 1)
+        has_level = level is not None
+        adj_spec = _P(*([None] * adjacency.ndim))
 
         def build():
+            if has_level:
+                def f(s, adj, q, bw, ms, ew, lev):
+                    return plan_step(
+                        s, adj, beam_width=bw, quota=q, max_steps=ms,
+                        expand_width=ew, expand_cap=cap, shard=self.ctx,
+                        level=lev, wave_dedup=wave_dedup)
+
+                return jax.jit(shard_map(
+                    f, mesh=self.mesh,
+                    in_specs=(state_spec, adj_spec, rep1, rep1, rep1, rep1,
+                              rep1),
+                    out_specs=(state_spec, rep2, rep2, rep1)))
+
             def f(s, adj, q, bw, ms, ew):
                 return plan_step(
                     s, adj, beam_width=bw, quota=q, max_steps=ms,
-                    expand_width=ew, expand_cap=cap, shard=self.ctx)
+                    expand_width=ew, expand_cap=cap, shard=self.ctx,
+                    wave_dedup=wave_dedup)
 
             return jax.jit(shard_map(
                 f, mesh=self.mesh,
-                in_specs=(state_spec, rep2, rep1, rep1, rep1, rep1),
+                in_specs=(state_spec, adj_spec, rep1, rep1, rep1, rep1),
                 out_specs=(state_spec, rep2, rep2, rep1)))
 
         b = state.pool_ids.shape[0]
-        return self._program(("plan", cap, dedup), build)(
+        key = ("plan", cap, dedup, has_level, wave_dedup, adjacency.ndim)
+        operands = (
             state, adjacency.astype(jnp.int32), _per_query(quota, b),
             _per_query(beam_width, b), _per_query(max_steps, b),
             _per_query(expand_width, b))
+        if has_level:
+            operands = operands + (_per_query(level, b),)
+        return self._program(key, build)(*operands)
+
+    def reopen(self, state: BatchedSearchState,
+               rows: Array) -> BatchedSearchState:
+        """Sharded :func:`reset_expanded` — re-open the masked rows'
+        frontiers between cover-tree levels (pools and dedup untouched)."""
+        from repro.launch.mesh import shard_map
+
+        dedup = self._dedup_of(state)
+        _, rep1, state_spec = self._specs(dedup)
+
+        def build():
+            def f(s, r):
+                return reset_expanded(s, r)
+
+            return jax.jit(shard_map(
+                f, mesh=self.mesh, in_specs=(state_spec, rep1),
+                out_specs=state_spec))
+
+        b = state.pool_ids.shape[0]
+        return self._program(("reopen", dedup), build)(
+            state, jnp.broadcast_to(jnp.asarray(rows, bool), (b,)))
 
     def commit(self, state: BatchedSearchState, safe: Array, keep: Array,
                dists: Array) -> BatchedSearchState:

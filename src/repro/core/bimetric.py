@@ -29,8 +29,9 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.beam import (NO_QUOTA, batched_greedy_search, fused_dist_fn,
-                             sharded_greedy_search)
+from repro.core import covertree as _covertree
+from repro.core.beam import (NO_QUOTA, ShardedStepper, batched_greedy_search,
+                             fused_dist_fn, sharded_greedy_search)
 from repro.core.vamana import VamanaIndex
 from repro.kernels import backend as kernel_backend
 
@@ -83,7 +84,7 @@ def _stage1_batch(
 def bimetric_search(
     cheap_fn_batch: Callable[[Array, Array], Array],
     expensive_fn_batch: Callable[[Array, Array], Array],
-    index: VamanaIndex,
+    index: VamanaIndex | _covertree.FlatCoverTree,
     q_cheap: Array,
     q_expensive: Array,
     *,
@@ -101,6 +102,7 @@ def bimetric_search(
     mesh=None,
     backend=None,
     quantize=None,
+    eps: float = 0.5,
 ) -> BiMetricResult:
     """Batched bi-metric search.
 
@@ -108,6 +110,18 @@ def bimetric_search(
     (k,) ids against *one* query's context under d / D respectively (they are
     vmapped over the batch here); ``q_cheap`` and ``q_expensive`` are the
     per-query contexts (e.g. the two embeddings).
+
+    ``index`` is the knob between the paper's two instantiations: a
+    :class:`repro.core.vamana.VamanaIndex` runs the DiskANN form (stage 1
+    on d, stage-2 greedy on D); a
+    :class:`repro.core.covertree.FlatCoverTree` (built offline on d via
+    ``covertree.build`` + ``covertree.flatten``) runs Algorithm 3's level
+    descent through the same ``plan_step``/``commit_scores`` engine — no
+    stage 1 (``d_calls`` is 0; the tree structure *is* the proxy's
+    contribution), ``eps`` is its accuracy knob, and the stage-1/beam
+    kwargs (``n_seeds``, ``l_search_d``, ``beam_width_D``, ``use_stage1``,
+    ``expand_width``) are ignored. Both forms honor ``quota``, ``shards``,
+    ``backend``, and per-query (B,) quotas with exact accounting.
 
     ``quota`` may be a per-query (B,) vector — mixed budgets in one batch
     with exact per-query accounting (what the serving engine's request waves
@@ -139,7 +153,6 @@ def bimetric_search(
     """
     import dataclasses as _dc
 
-    b = q_cheap.shape[0]
     be1 = kernel_backend.resolve_backend(backend, quantize=quantize,
                                          _caller="bimetric_search")
     be = _dc.replace(be1, quantize=None)  # stage-2 backend: never quantized
@@ -152,6 +165,39 @@ def bimetric_search(
 
     use_fused1 = corpora is not None and _fused(corpora[0], be1)
     use_fused = corpora is not None and _fused(corpora[1], be)
+
+    if isinstance(index, _covertree.FlatCoverTree):
+        # Algorithm 3: the level descent replaces both stages — the proxy's
+        # work happened offline in the tree build, every online call is a D
+        # call. With embedding-backed D the same fused gather→score closure
+        # drives every shard count (which is what makes shards>1 bit-exact
+        # vs one device); a metric callable is vmapped like stage 2 does.
+        if shards > 1 and corpora is None:
+            raise ValueError(
+                "shards > 1 needs corpora=(corpus_d, corpus_D) — only "
+                "embedding-backed metrics can be sharded")
+        stepper = None
+        if shards > 1:
+            stepper = ShardedStepper(
+                shards=shards, n_points=n_points, mesh=mesh, backend=be)
+        if corpora is not None:
+            corpus_D = corpora[1]
+            if not isinstance(corpus_D, kernel_backend.CorpusView):
+                corpus_D = jnp.asarray(corpus_D)
+            fn = fused_dist_fn(corpus_D, metric, backend=be)
+        else:
+            fn = jax.vmap(expensive_fn_batch)
+        res_ct = _covertree.search_batched(
+            index, fn, q_expensive, eps=eps, k=k, quota=quota,
+            backend=be, stepper=stepper)
+        return BiMetricResult(
+            ids=res_ct.ids,
+            dists=res_ct.dists,
+            d_calls=jnp.zeros_like(res_ct.n_calls),  # d's work was offline
+            D_calls=res_ct.n_calls,
+        )
+
+    b = q_cheap.shape[0]
     scalar_quota = jnp.ndim(quota) == 0  # python/numpy scalars alike
     if scalar_quota:
         quota = int(quota)

@@ -1,23 +1,57 @@
-"""Cover Tree under the bi-metric framework (paper Appendix B).
+"""Cover Tree under the bi-metric framework (paper Appendix B), on the engine.
 
 Algorithm 2 builds a cover tree with the *cheap* metric d and slack parameter
 ``T = C``; Algorithm 3 answers queries with the *expensive* metric D, counting
 D evaluations (memoized per query — a vertex is paid for once even if it
 appears at many levels, since C_i ⊆ C_{i-1}).
 
-Index construction is an offline, data-dependent recursion (greedy covers),
-so it runs in NumPy; the per-level distance evaluations during queries are
-delegated to a user distance function, which in the framework is backed by a
-jitted JAX scorer. This matches the paper's deployment: the tree is built
-once on the proxy, queries stream against the expensive model.
+**Build** stays an offline, per-query NumPy recursion (greedy covers on the
+proxy — :func:`build`), exactly the paper's deployment split. **Queries**
+run on the shared batched engine: :func:`flatten` emits a device-resident
+layout — a level-stacked child table ``(depth-1, N, R)`` (row ``p`` of slab
+``j`` is ``{p} ∪ children_j(p)``, -1 padded; the slabs *partition* each
+finer level because every finer point has exactly one parent) plus a raw-unit
+per-level scale vector — that :func:`repro.core.beam.plan_step` indexes with
+static shapes via its ``level=`` operand.
+
+The descent itself is a corollary of the pools being sorted: the thresholds
+``d_min + 2^i`` shrink monotonically down the levels, and a point that fails
+one filter can never pass a later one, so Algorithm 3's candidate set Q_i is
+*exactly* the prefix of the engine's pool within the previous level's radius
+of the row minimum (:func:`repro.kernels.ops.frontier_count` measures it, and
+it doubles as the wave's expand width). Each level is one wave driven through
+``plan_step``/``commit_scores`` — ``reset_expanded`` re-opens the surviving
+frontier between levels — and the memoized D-call set is exactly the engine's
+dedup state (a :class:`repro.core.beam.ScoredSet` under a bounded quota), so
+cover-tree queries inherit the batched expensive-tower drain, ``shards=``
+mesh execution (:class:`repro.core.beam.ShardedStepper` bookkeeping with
+caller-side scoring) and every ``backend=`` kernel route for free. Large
+frontiers are planned in fixed-width chunks with *deferred* commits (commits
+mid-level would let finer points displace true frontier members from the
+prefix); on a single device the whole level fuses into one jitted
+``lax.scan`` program.
+
+:func:`search` is the frozen per-query NumPy oracle: at matched ε and an
+unbounded (or un-hit) quota the batched drive returns the same neighbors and
+bit-exact D-call memoization counts (under truncation the *counts* still
+match — both admit exactly ``quota`` calls — but the admitted id sets may
+differ by admission order). ``tests/test_covertree.py`` pins the grid.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+import functools
+from typing import Callable, NamedTuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core import beam
+from repro.kernels import backend as kernel_backend
+from repro.kernels import ops
+
+Array = jax.Array
 DistToMany = Callable[[np.ndarray], np.ndarray]  # ids -> D(q, ids)
 
 
@@ -169,3 +203,288 @@ def search(
     vals = np.asarray([memo[int(i)] for i in scored])
     order = np.argsort(vals, kind="stable")[:k]
     return scored[order], vals[order] / tree.scale, calls
+
+
+# --------------------------------------------------------------------------
+# Flattened device layout + the batched engine drive (Algorithm 3 as waves)
+# --------------------------------------------------------------------------
+
+class FlatCoverTree(NamedTuple):
+    """Device-indexable cover tree: level-stacked child slabs + raw radii.
+
+    ``children[j, p]`` lists ``{p} ∪ children_j(p)`` (ascending, -1 padded)
+    for every ``p ∈ levels[j]``; rows of points absent from level ``j`` are
+    all -1 and unreachable (the descent only expands pool members, which are
+    memoized level members). ``radii[j]`` is ``level_scales[j] / scale`` —
+    the level-j filter radius in *raw* D units, so the engine's f32 pools
+    compare against it directly while the NumPy oracle works in scaled f64
+    (same inequality, one f64 division apart).
+    """
+    children: np.ndarray   # (depth-1, N, R) int32, -1 padded
+    radii: np.ndarray      # (depth-1,) float64, raw distance units
+    root_ids: np.ndarray   # (E0,) int32 — the top cover, ascending
+    scale: float
+    T: float
+    n: int
+
+    @property
+    def depth(self) -> int:
+        return self.children.shape[0] + 1
+
+    @property
+    def fanout(self) -> int:
+        return self.children.shape[2]
+
+
+class CoverSearchResult(NamedTuple):
+    ids: Array      # (B, k) int32, -1 padded past the scored count
+    dists: Array    # (B, k) f32 raw D, +inf on padding
+    n_calls: Array  # (B,) int32 memoized D evaluations
+
+
+def flatten(tree: CoverTree) -> FlatCoverTree:
+    """Stack the per-level child dicts into the engine's fixed-shape table."""
+    l1 = tree.depth - 1
+    n = tree.n
+    r_max = 1
+    for ch in tree.children:
+        for p, kids in ch.items():
+            r_max = max(r_max, len(np.union1d(kids, [p])))
+    children = np.full((l1, n, max(r_max, 1)), -1, np.int32)
+    for j, ch in enumerate(tree.children):
+        for p, kids in ch.items():
+            row = np.union1d(kids, [p]).astype(np.int32)  # ascending, self in
+            children[j, p, : len(row)] = row
+    radii = np.asarray(
+        [s / tree.scale for s in tree.level_scales[:l1]], np.float64)
+    return FlatCoverTree(
+        children=children,
+        radii=radii,
+        root_ids=np.asarray(tree.levels[0], np.int32),
+        scale=tree.scale,
+        T=tree.T,
+        n=n,
+    )
+
+
+def wave_chunk(fanout: int, *, lane_budget: int = 4096) -> int:
+    """Frontier chunk width: the largest power of two (≤ 64) whose
+    ``chunk × fanout`` wave stays within the lane budget — bounds the
+    gather→score working set no matter how wide a level's frontier gets."""
+    c = 1
+    while c * 2 * fanout <= lane_budget and c * 2 <= 64:
+        c *= 2
+    return c
+
+
+_init_j = functools.partial(
+    jax.jit, static_argnames=("n_points", "pool_size", "dedup", "set_capacity")
+)(beam.init_state)
+_commit_j = functools.partial(
+    jax.jit, static_argnames=("backend",))(beam.commit_scores)
+_reopen_j = jax.jit(beam.reset_expanded)
+_count_j = jax.jit(ops.frontier_count)
+
+
+@functools.partial(jax.jit, static_argnames=("expand_cap",))
+def _plan_j(state, children, level, quota, beam_width, max_steps, ew, *,
+            expand_cap):
+    return beam.plan_step(
+        state, children, beam_width=beam_width, quota=quota,
+        max_steps=max_steps, expand_width=ew, expand_cap=expand_cap,
+        level=level, wave_dedup=False)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_chunks", "chunk", "dist_fn", "backend"))
+def _level_fused(state, children, level, quota, beam_width, max_steps,
+                 ew_target, q_ctx, *, n_chunks, chunk, dist_fn, backend):
+    """One whole level as a single program: scan the chunked plans first
+    (commits are deferred — a mid-level commit would let finer points
+    displace true frontier members from the sorted prefix), then scan the
+    score→commit over the recorded waves."""
+
+    def plan_one(s, i):
+        ew = jnp.clip(ew_target - i * chunk, 0, chunk)
+        s, safe, keep, _ = beam.plan_step(
+            s, children, beam_width=beam_width, quota=quota,
+            max_steps=max_steps, expand_width=ew, expand_cap=chunk,
+            level=level, wave_dedup=False)
+        return s, (safe, keep)
+
+    state, waves = jax.lax.scan(plan_one, state, jnp.arange(n_chunks))
+
+    def commit_one(s, wave):
+        safe, keep = wave
+        d = dist_fn(q_ctx, safe)
+        return beam.commit_scores(s, safe, keep, d, backend=backend), None
+
+    state, _ = jax.lax.scan(commit_one, state, waves)
+    return state
+
+
+def search_batched(
+    flat: FlatCoverTree,
+    dist_fn_batch: Callable[[Array, Array], Array],
+    query_ctx: Array,
+    *,
+    eps: float = 0.5,
+    k: int = 10,
+    quota: int | Array | None = None,
+    pool_size: int | None = None,
+    backend: str | kernel_backend.Backend | None = None,
+    dedup: str = "auto",
+    chunk: int | None = None,
+    stepper: beam.ShardedStepper | None = None,
+    fuse_levels: bool | None = None,
+) -> CoverSearchResult:
+    """Algorithm 3 for a whole query batch through ``plan_step`` waves.
+
+    ``dist_fn_batch(query_ctx, ids (B, K)) -> (B, K)`` raw D distances with
+    the engine's masking contract (ids < 0 → +inf); ``query_ctx`` is (B, …).
+    Per level: :func:`repro.kernels.ops.frontier_count` sizes each row's
+    wave (the pool prefix within the previous level's radius),
+    ``reset_expanded`` re-opens the surviving centers, and the level's
+    fanout is planned in ``chunk``-wide waves against the stacked child
+    table (commits deferred to the end of the level). Rows stop
+    independently — the ε-criterion (host f64, like the oracle) or quota
+    exhaustion (exact wave masking in ``plan_step``) just freeze a row
+    while its batch-mates descend.
+
+    ``fuse_levels`` (default: on, unless a ``stepper`` drives a mesh) runs
+    each level as one jitted ``lax.scan`` program — requires
+    ``dist_fn_batch`` to be traceable (``beam.fused_dist_fn`` is); pass
+    False for host-side metrics (the serving engine's tower drain drives
+    the chunks itself). With ``stepper`` the bookkeeping runs inside the
+    corpus mesh; scoring stays with the caller, exactly the serving
+    stage-2 shape.
+    """
+    q_ctx = jnp.asarray(query_ctx)
+    b = q_ctx.shape[0]
+    n = flat.n
+    e0 = int(flat.root_ids.shape[0])
+    if fuse_levels is None:
+        fuse_levels = stepper is None
+    be = kernel_backend.resolve_backend(
+        backend, _caller="covertree.search_batched")
+
+    quota_arr = beam.NO_QUOTA if quota is None else quota
+    qmax = beam._static_quota_bound(quota_arr)
+    if qmax is None:
+        raise ValueError("covertree needs a concrete (untraced) quota")
+    if pool_size is None:
+        pool_size = max(k, e0, min(n, qmax))
+    if chunk is None:
+        chunk = wave_chunk(flat.fanout)
+    chunk = max(1, min(chunk, pool_size))  # plan selects E slots from pool P
+    dedup, set_cap = beam.resolve_dedup(
+        dedup, None, quota_arr, n, drive="host")
+
+    quota_j = beam._per_query(quota_arr, b)
+    beam_j = beam._per_query(pool_size, b)     # the whole pool is the prefix
+    steps_j = beam._per_query(beam.NO_QUOTA, b)
+    entries = jnp.broadcast_to(
+        jnp.asarray(flat.root_ids, jnp.int32)[None, :], (b, e0))
+
+    if stepper is not None:
+        state, safe, keep = stepper.init(
+            entries, quota_j, pool_size=pool_size, dedup=dedup,
+            set_capacity=set_cap)
+    else:
+        state, safe, keep = _init_j(
+            entries, n_points=n, pool_size=pool_size, quota=quota_j,
+            dedup=dedup, set_capacity=set_cap)
+
+    def _commit(s, sf, kp, d):
+        if stepper is not None:
+            return stepper.commit(s, sf, kp, d)
+        return _commit_j(s, sf, kp, d, backend=be)
+
+    state = _commit(state, safe, keep, dist_fn_batch(q_ctx, safe))
+
+    children = jnp.asarray(flat.children)
+    radii = np.asarray(flat.radii, np.float64)
+    alive = np.ones(b, bool)
+    for t in range(flat.depth - 1):
+        radius = np.inf if t == 0 else float(radii[t - 1])
+        ew_t = np.asarray(_count_j(state.pool_dists, jnp.float32(radius)))
+        ew_t = np.where(alive, ew_t, 0).astype(np.int32)
+        if not ew_t.any():
+            break
+        if stepper is not None:
+            state = stepper.reopen(state, jnp.asarray(alive))
+        else:
+            state = _reopen_j(state, jnp.asarray(alive))
+        lev = jnp.full((b,), t, jnp.int32)
+        if fuse_levels:
+            n_chunks = max(1, -(-int(ew_t.max()) // chunk))
+            n_chunks = 1 << (n_chunks - 1).bit_length()  # pow2 retrace bound
+            state = _level_fused(
+                state, children, lev, quota_j, beam_j, steps_j,
+                jnp.asarray(ew_t), q_ctx, n_chunks=n_chunks, chunk=chunk,
+                dist_fn=dist_fn_batch, backend=be)
+        else:
+            planned = []
+            remaining = ew_t.copy()
+            while remaining.max() > 0:
+                ew = np.minimum(remaining, chunk).astype(np.int32)
+                if stepper is not None:
+                    state, safe, keep, _ = stepper.plan(
+                        state, children, quota_j, beam_j, steps_j,
+                        expand_width=jnp.asarray(ew), expand_cap=chunk,
+                        level=lev, wave_dedup=False)
+                else:
+                    state, safe, keep, _ = _plan_j(
+                        state, children, lev, quota_j, beam_j, steps_j,
+                        jnp.asarray(ew), expand_cap=chunk)
+                planned.append((safe, keep))
+                remaining -= ew
+            for safe, keep in planned:
+                state = _commit(state, safe, keep, dist_fn_batch(q_ctx, safe))
+        dmin = np.asarray(state.pool_dists[:, 0], np.float64)
+        alive &= dmin < radii[t] * (1.0 + 1.0 / eps)
+
+    return CoverSearchResult(
+        ids=state.pool_ids[:, :k],
+        dists=state.pool_dists[:, :k],
+        n_calls=state.n_calls,
+    )
+
+
+def search_corpus(
+    flat: FlatCoverTree,
+    corpus: Array,
+    queries: Array,
+    *,
+    metric: str = "l2",
+    eps: float = 0.5,
+    k: int = 10,
+    quota: int | Array | None = None,
+    shards: int = 1,
+    mesh=None,
+    backend: str | kernel_backend.Backend | None = None,
+    dedup: str = "auto",
+    chunk: int | None = None,
+    pool_size: int | None = None,
+) -> CoverSearchResult:
+    """:func:`search_batched` against an embedding corpus under D.
+
+    Builds the backend-dispatched fused gather→score once (corpus-norm
+    cache included for the matmul routes) and, at ``shards > 1``, a
+    :class:`repro.core.beam.ShardedStepper` so the descent's bookkeeping
+    runs inside the corpus mesh (scoring stays on the fused kernel — the
+    stage-2 drive shape, bit-exact vs one device).
+    """
+    be = kernel_backend.resolve_backend(
+        backend, _caller="covertree.search_corpus")
+    if not isinstance(corpus, kernel_backend.CorpusView):
+        corpus = jnp.asarray(corpus)  # fused levels trace the gather
+    fn = beam.fused_dist_fn(corpus, metric, backend=be)
+    stepper = None
+    if shards > 1:
+        stepper = beam.ShardedStepper(
+            shards=shards, n_points=flat.n, mesh=mesh, backend=be)
+    return search_batched(
+        flat, fn, jnp.asarray(queries), eps=eps, k=k, quota=quota,
+        pool_size=pool_size, backend=be, dedup=dedup, chunk=chunk,
+        stepper=stepper)

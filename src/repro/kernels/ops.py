@@ -300,6 +300,23 @@ def sorted_set_unique_count(set_ids):
     return (distinct & (set_ids != SET_PAD)).sum(axis=1, dtype=jnp.int32)
 
 
+def frontier_count(pool_dists, radius):
+    """(B,) pool entries within ``min + radius`` of each row's best.
+
+    The cover-tree descent's per-level candidate set is exactly the pool
+    prefix whose distance is within the level radius of the row minimum
+    (``d(q, p) <= d_min + 2^i``) — because the pools are sorted, its size
+    is the expand width of the level's wave. ``radius`` broadcasts to (B,);
+    a row's +inf radius counts every finite entry (the root level), an
+    empty row (all +inf) counts zero.
+    """
+    finite = jnp.isfinite(pool_dists)
+    dmin = jnp.min(jnp.where(finite, pool_dists, jnp.inf), axis=1)
+    r = jnp.broadcast_to(jnp.asarray(radius, pool_dists.dtype), dmin.shape)
+    within = finite & (pool_dists <= (dmin + r)[:, None])
+    return within.sum(axis=1, dtype=jnp.int32)
+
+
 def beam_merge_topk(beam_ids, beam_dists, cand_ids, cand_dists, *,
                     backend=None, use_pallas=None, interpret=None):
     be = _resolve(backend, use_pallas, interpret, "ops.beam_merge_topk")

@@ -36,6 +36,17 @@ structures, so a slot row's answer is **bit-exact** vs the synchronous
 ``query_batch`` drive at any shard count — admission order, slot-mates and
 capacity growth are invisible to it.
 
+The stage-1 index is the ``index=`` knob: ``"vamana"`` (default — the
+DiskANN instantiation, greedy beam search over the proxy-built graph) or
+``"covertree"`` (the Theorem B.3 instantiation — per-level cover-tree
+descent, paper Algorithm 3, driven through the same slot pool as chunked
+``plan_step``/``commit_scores`` waves with the memoized D-call set living
+in the slot's ``ScoredSet``). Cover-tree rows ignore ``n_seeds`` /
+``expand_width`` (the tree's root cover and fanout take their place),
+``covertree_eps`` / ``covertree_T`` tune the descent's stopping rule and
+the offline build scale, and ``rerank_query_batch`` is vamana-only. Both
+index kinds serve bit-exact vs their synchronous ``query_batch`` drive.
+
 Observability: ``ServeStats`` splits per-request latency into ``queue_ms``
 (submit → slot admission) + ``compute_ms`` (admission → resolve), with
 ``latency_ms`` their sum, plus admission-time ``slot_occupancy`` /

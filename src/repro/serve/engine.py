@@ -64,8 +64,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import kernels
-from repro.core import beam, distances, vamana
+from repro.core import beam, covertree, distances, vamana
 from repro.distributed import sharding
+from repro.kernels import ops
 from repro.models import transformer as T
 
 Array = jax.Array
@@ -274,6 +275,19 @@ def _plan_step_j(state, adjacency, quota, beam_width, max_steps,
 
 
 _admit_j = jax.jit(beam.reset_slots)
+_reopen_j = jax.jit(beam.reset_expanded)
+_frontier_j = jax.jit(ops.frontier_count)
+
+
+@functools.partial(jax.jit, static_argnames=("expand_cap",))
+def _plan_ct_j(state, children, level, quota, beam_width, max_steps,
+               expand_width, *, expand_cap):
+    """Cover-tree wave plan: level-indexed child table, dedup-free lanes
+    (child slabs partition each level, so a wave never repeats an id)."""
+    return beam.plan_step(
+        state, children, beam_width=beam_width, quota=quota,
+        max_steps=max_steps, expand_width=expand_width,
+        expand_cap=expand_cap, level=level, wave_dedup=False)
 
 
 @jax.jit
@@ -324,6 +338,7 @@ class _SlotPool:
         self.ms = np.zeros(s, np.int32)
         self.k = np.ones(s, np.int32)
         self.ew = np.ones(s, np.int32)
+        self.ct_level = np.zeros(s, np.int32)  # covertree descent position
         self.q_D: np.ndarray | None = None
         self.state = None
         self.pool_size = 0
@@ -360,6 +375,18 @@ class _SlotPool:
             valid.append((pend, int(slot)))
         if not valid:
             return None
+        if eng.index_kind == "covertree":
+            # no proxy stage 1: Algorithm 3 descends from the top cover
+            # under D directly — the cheap metric's job ended at build time
+            qfut = eng._tower_submit(("embed_queries", tokens))
+            root = np.asarray(eng._flat.root_ids, np.int32)
+            seeds = np.full((self.S, root.shape[0]), -1, np.int32)
+            for _, slot in valid:
+                seeds[slot] = root
+            return _Prepared(
+                valid=valid, seeds=seeds, quota=quota_g, nseed=nseed_g,
+                d_calls=np.zeros(self.S, np.int32),
+                q_D=np.asarray(qfut.result()))
         # expensive query embed rides the tower lane; the cheap embed and
         # stage-1 proxy search run here meanwhile. Fixed (S, seq) shapes
         # with zero-pad rows keep per-row embeddings bit-exact regardless
@@ -393,8 +420,15 @@ class _SlotPool:
             q = int(r.quota)
             ns = int(prep.nseed[s])
             self.quota[s] = q
-            self.L[s] = max(int(r.k), min(q, 2 * ns + 8))
-            self.ms[s] = 4 * q
+            if eng.index_kind == "covertree":
+                # level descent: no beam/step budget — termination is the
+                # eps rule or the level cap, both applied by step_ct
+                self.L[s] = beam.NO_QUOTA
+                self.ms[s] = beam.NO_QUOTA
+                self.ct_level[s] = 0
+            else:
+                self.L[s] = max(int(r.k), min(q, 2 * ns + 8))
+                self.ms[s] = 4 * q
             self.k[s] = int(r.k)
             self.ew[s] = max(1, int(r.expand_width))
             self.occupied[s] = True
@@ -423,7 +457,14 @@ class _SlotPool:
                 if self.state is not None:
                     self.state = beam.grow_state(
                         self.state, set_capacity=need)
-        p_need = _round_capacity(int(max(self.L.max(), self.k.max())))
+        if eng.index_kind == "covertree":
+            # pool = the memoized D-call set (bounded by quota and N), never
+            # smaller than the root cover or the static plan chunk
+            p_need = max(_round_capacity(int(max(
+                int(self.k.max()), eng._flat.root_ids.shape[0],
+                min(eng.n, int(self.quota.max()))))), eng._ct_chunk)
+        else:
+            p_need = _round_capacity(int(max(self.L.max(), self.k.max())))
         if self.state is None:
             self.pool_size = max(p_need, 1)
             empty = np.full((self.S, 1), -1, np.int32)
@@ -464,6 +505,8 @@ class _SlotPool:
         the next admission group (cheap embed + stage 1) — the slot pool's
         compute overlap."""
         eng = self.eng
+        if eng.index_kind == "covertree":
+            return self.step_ct()
         self.ew_cap = max(self.ew_cap, int(self.ew.max()))
         quota_j = jnp.asarray(self.quota)
         L_j = jnp.asarray(self.L)
@@ -491,6 +534,96 @@ class _SlotPool:
         else:
             self.state = _commit_j(self.state, safe, keep, dists,
                                    backend=eng.backend)
+
+    def step_ct(self) -> None:
+        """One cover-tree level for every slot still descending.
+
+        Per stepping row: size the frontier (pool prefix within the previous
+        level's radius), re-open it, plan the level's fanout in chunk-wide
+        waves (commits deferred past the last plan, so finer points cannot
+        displace true frontier members mid-level), drain/commit each wave,
+        then advance the row's level — the ε-criterion or the level cap
+        freezes a finished row via ``ms = 0`` so ``resolve_finished`` picks
+        it up. Rows at different levels ride the same waves; each row's
+        chunk schedule depends only on its own frontier, which is what keeps
+        a slot row bit-exact vs the synchronous drive."""
+        eng = self.eng
+        radii = eng._ct_radii
+        l1 = eng._flat.depth - 1
+        chunk = eng._ct_chunk
+        stepping = self.occupied & (self.ms > 0)
+        if l1 == 0:
+            self.ms[stepping] = 0
+            return
+        quota_j = jnp.asarray(self.quota)
+        L_j = jnp.asarray(self.L)
+        ms_j = jnp.asarray(self.ms)
+        t = self.ct_level.copy()
+        radius = np.where(t == 0, np.inf,
+                          radii[np.maximum(t - 1, 0)]).astype(np.float32)
+        ew_t = np.asarray(_frontier_j(self.state.pool_dists,
+                                      jnp.asarray(radius)))
+        ew_t = np.where(stepping, ew_t, 0).astype(np.int32)
+        if eng._stepper is not None:
+            self.state = eng._stepper.reopen(self.state,
+                                             jnp.asarray(stepping))
+        else:
+            self.state = _reopen_j(self.state, jnp.asarray(stepping))
+        lev = jnp.asarray(np.minimum(t, l1 - 1).astype(np.int32))
+        planned = []
+        remaining = ew_t.copy()
+        while remaining.max() > 0:
+            ew = np.minimum(remaining, chunk).astype(np.int32)
+            if eng._stepper is not None:
+                self.state, safe, keep, _ = eng._stepper.plan(
+                    self.state, eng._ct_children, quota_j, L_j, ms_j,
+                    expand_width=jnp.asarray(ew), expand_cap=chunk,
+                    level=lev, wave_dedup=False)
+            else:
+                self.state, safe, keep, _ = _plan_ct_j(
+                    self.state, eng._ct_children, lev, quota_j, L_j, ms_j,
+                    jnp.asarray(ew), expand_cap=chunk)
+            planned.append((safe, keep))
+            remaining -= ew
+        for i, (safe, keep) in enumerate(planned):
+            safe_np = np.asarray(safe)
+            drain_fut = eng._tower_submit(("drain", safe_np[np.asarray(keep)]))
+            if i == 0 and self.prepared is None and not eng._closed:
+                free = int((~self.occupied).sum())
+                group = eng._pop_group(free) if free else []
+                if group:
+                    self.prepared = self.prepare(group)
+            self.tower_total += drain_fut.result()
+            doc = jnp.asarray(eng._doc_embs(safe_np, self.q_D.shape[1]))
+            dists = _wave_dists_j(doc, jnp.asarray(self.q_D))
+            if eng._stepper is not None:
+                self.state = eng._stepper.commit(self.state, safe, keep,
+                                                 dists)
+            else:
+                self.state = _commit_j(self.state, safe, keep, dists,
+                                       backend=eng.backend)
+        pd0 = np.asarray(self.state.pool_dists[:, 0], np.float64)
+        cont = np.zeros(self.S, bool)
+        for s in np.nonzero(stepping)[0]:
+            tt = int(t[s])
+            if tt >= l1:
+                self.ms[s] = 0
+                continue
+            self.ct_level[s] = tt + 1
+            stop = not (pd0[s] < radii[tt] * (1.0 + 1.0 / eng.ct_eps))
+            if stop or tt + 1 >= l1:
+                self.ms[s] = 0
+            else:
+                cont[s] = True
+        # rows still descending keep an open frontier so active_mask holds
+        # them resident even when a level admitted nothing fresh (the next
+        # level's child rows may still reach new points)
+        if cont.any():
+            if eng._stepper is not None:
+                self.state = eng._stepper.reopen(self.state,
+                                                 jnp.asarray(cont))
+            else:
+                self.state = _reopen_j(self.state, jnp.asarray(cont))
 
     def _drain_and_commit(self, safe, keep) -> None:
         """Entry-wave drain + commit (same tower lane as the step drains)."""
@@ -564,6 +697,7 @@ class _SlotPool:
         self.ms[s] = 0
         self.k[s] = 1
         self.ew[s] = 1
+        self.ct_level[s] = 0
 
     def fail_all(self, exc: BaseException) -> None:
         """Poisoned resident state (e.g. a tower error mid-step): fail every
@@ -629,7 +763,8 @@ class BiMetricEngine:
                  max_batch: int = 8, max_wait_ms: float = 5.0,
                  max_inflight: int = 2, dedup: str = "auto",
                  backend="ref", quantize: str | None = None,
-                 slots: int | None = None):
+                 slots: int | None = None, index: str = "vamana",
+                 covertree_eps: float = 0.5, covertree_T: float = 2.0):
         self.cheap = cheap
         self.expensive = expensive
         self.corpus_tokens = corpus_tokens
@@ -647,27 +782,50 @@ class BiMetricEngine:
             raise ValueError("slots must be >= 1")
         self.max_wait = max_wait_ms / 1e3
         self.max_inflight = max(1, max_inflight)  # retired knob, kept inert
+        if index not in ("vamana", "covertree"):
+            raise ValueError(f"unknown index kind {index!r}")
+        self.index_kind = index
+        self.ct_eps = float(covertree_eps)
         # --- index build: cheap metric ONLY --------------------------------
         self.emb_d = jnp.asarray(cheap.embed(corpus_tokens))
-        self.index = vamana.build(self.emb_d,
-                                  index_cfg or vamana.VamanaConfig(
-                                      max_degree=16, l_build=24, pool_size=48,
-                                      rev_candidates=16))
-        self._em_d = distances.EmbeddingMetric(self.emb_d)
-        # stage-1 scoring route: the matmul backends thread the corpus-norm
-        # cache (built ONCE here, like the index) through every wave; with
-        # quantize= the view is built quantized, also once — the graph is
-        # still built on the exact embeddings, only wave scoring is lossy
-        need_view = self.backend.matmul or self.backend.quantize is not None
-        self._view_d = (kernels.as_corpus_view(
-            self.emb_d, quantize=self.backend.quantize)
-            if need_view else None)
-        if need_view and shards == 1:
-            self._dist_d = beam.fused_dist_fn(
-                self._view_d, self._em_d.metric, backend=self.backend)
+        if index == "covertree":
+            # Algorithm 2 on the cheap embeddings (offline, per-query NumPy
+            # — the query path is the batched engine); the flattened layout
+            # is what the plan/commit programs index with static shapes
+            tree = covertree.build(
+                np.asarray(self.emb_d, np.float64), T=covertree_T)
+            self._flat = covertree.flatten(tree)
+            self._ct_children = jnp.asarray(self._flat.children)
+            self._ct_radii = np.asarray(self._flat.radii, np.float64)
+            self._ct_chunk = covertree.wave_chunk(self._flat.fanout)
+            self.index = None
+            self._em_d = None
+            self._view_d = None
+            self._dist_d = None
+            self._adjacency = None
         else:
-            self._dist_d = self._em_d.dists_batch
-        self._adjacency = self.index.adjacency.astype(jnp.int32)
+            self._flat = None
+            self.index = vamana.build(self.emb_d,
+                                      index_cfg or vamana.VamanaConfig(
+                                          max_degree=16, l_build=24,
+                                          pool_size=48, rev_candidates=16))
+            self._em_d = distances.EmbeddingMetric(self.emb_d)
+            # stage-1 scoring route: the matmul backends thread the
+            # corpus-norm cache (built ONCE here, like the index) through
+            # every wave; with quantize= the view is built quantized, also
+            # once — the graph is still built on the exact embeddings, only
+            # wave scoring is lossy
+            need_view = (self.backend.matmul
+                         or self.backend.quantize is not None)
+            self._view_d = (kernels.as_corpus_view(
+                self.emb_d, quantize=self.backend.quantize)
+                if need_view else None)
+            if need_view and shards == 1:
+                self._dist_d = beam.fused_dist_fn(
+                    self._view_d, self._em_d.metric, backend=self.backend)
+            else:
+                self._dist_d = self._em_d.dists_batch
+            self._adjacency = self.index.adjacency.astype(jnp.int32)
         # one mesh for the engine lifetime; stage 2 steps through the same
         # mesh as stage 1 (ShardedStepper = the in-mesh plan/commit programs)
         self._mesh = (sharding.search_mesh(shards) if shards > 1 else None)
@@ -753,6 +911,19 @@ class BiMetricEngine:
     # -------------------------------------------------------- wave coroutine
     def _wave_gen(self, query_tokens: np.ndarray, quota, k, n_seeds,
                   expand_width):
+        """Dispatch the synchronous batch to the index kind's coroutine.
+
+        Plain function (not a generator) so the dispatch runs eagerly;
+        ``n_seeds`` / ``expand_width`` are vamana stage-1/2 knobs — the
+        cover-tree descent seeds from the root cover and sizes its own
+        frontier per level, so they are accepted and ignored there."""
+        if self.index_kind == "covertree":
+            return self._wave_gen_ct(query_tokens, quota, k)
+        return self._wave_gen_vamana(query_tokens, quota, k, n_seeds,
+                                     expand_width)
+
+    def _wave_gen_vamana(self, query_tokens: np.ndarray, quota, k, n_seeds,
+                         expand_width):
         """The two-stage search for one synchronous batch, as a coroutine.
 
         Yields tower-lane work items — ``("embed_queries", tokens)`` then one
@@ -850,6 +1021,102 @@ class BiMetricEngine:
         dd = np.asarray(state.pool_dists[:, :kmax], np.float64)
         D_calls = np.asarray(state.n_calls)
         stats = [ServeStats(d_calls=int(d_calls[i]), D_calls=int(D_calls[i]),
+                            tower_batches=tower_batches) for i in range(b)]
+        return ids, dd, stats
+
+    def _wave_gen_ct(self, query_tokens: np.ndarray, quota, k):
+        """Algorithm 3 for one synchronous batch, as a coroutine.
+
+        Same tower-lane protocol as the vamana coroutine — one
+        ``("embed_queries", tokens)`` then one ``("drain", ids)`` per
+        level-chunk wave — but the device side is the cover-tree descent of
+        :func:`repro.core.covertree.search_batched` (host-chunk drive): per
+        level, size each row's frontier, re-open it, plan all chunk waves
+        before committing any, then drain/score/commit each wave. Per-row
+        math is independent of batch-mates and of the pool capacity, which
+        is what keeps this bit-exact vs the async slot drive."""
+        b = query_tokens.shape[0]
+        quota_np = np.broadcast_to(np.asarray(quota, np.int32), (b,)).copy()
+        k_np = np.broadcast_to(np.asarray(k, np.int32), (b,))
+        q_D = yield ("embed_queries", query_tokens)
+
+        flat = self._flat
+        l1 = flat.depth - 1
+        chunk = self._ct_chunk
+        radii = self._ct_radii
+        e0 = int(flat.root_ids.shape[0])
+        # identical static shapes to the slot pool's p_need so the two
+        # drives share jitted programs (capacity is invisible to a row)
+        P = max(_round_capacity(int(max(
+            int(k_np.max()), e0, min(self.n, int(quota_np.max()))))), chunk)
+        dedup, cap = beam.resolve_dedup(
+            self.dedup, _round_capacity(int(quota_np.max())), quota_np,
+            self.n, drive="host")
+        quota_j = jnp.asarray(quota_np)
+        L_j = jnp.full((b,), beam.NO_QUOTA, jnp.int32)
+        ms_j = jnp.full((b,), beam.NO_QUOTA, jnp.int32)
+        entries = jnp.broadcast_to(
+            jnp.asarray(flat.root_ids, jnp.int32)[None, :], (b, e0))
+        stepper = self._stepper
+        if stepper is not None:
+            state, safe, keep = stepper.init(
+                entries, quota_j, pool_size=P, dedup=dedup, set_capacity=cap)
+        else:
+            state, safe, keep = _init_j(
+                entries, quota_j, n_points=self.n, pool_size=P,
+                dedup=dedup, set_capacity=cap)
+        tower_batches = 0
+
+        def _commit(s, sf, kp):
+            nonlocal tower_batches
+            safe_np = np.asarray(sf)
+            batches = yield ("drain", safe_np[np.asarray(kp)])
+            tower_batches += batches
+            doc = jnp.asarray(self._doc_embs(safe_np, q_D.shape[1]))
+            dists = _wave_dists_j(doc, q_D)
+            if stepper is not None:
+                return stepper.commit(s, sf, kp, dists)
+            return _commit_j(s, sf, kp, dists, backend=self.backend)
+
+        state = yield from _commit(state, safe, keep)
+        alive = np.ones(b, bool)
+        for t in range(l1):
+            radius = np.inf if t == 0 else float(radii[t - 1])
+            ew_t = np.asarray(_frontier_j(state.pool_dists,
+                                          jnp.float32(radius)))
+            ew_t = np.where(alive, ew_t, 0).astype(np.int32)
+            if not ew_t.any():
+                break
+            if stepper is not None:
+                state = stepper.reopen(state, jnp.asarray(alive))
+            else:
+                state = _reopen_j(state, jnp.asarray(alive))
+            lev = jnp.full((b,), t, jnp.int32)
+            planned = []
+            remaining = ew_t.copy()
+            while remaining.max() > 0:
+                ew = np.minimum(remaining, chunk).astype(np.int32)
+                if stepper is not None:
+                    state, safe, keep, _ = stepper.plan(
+                        state, self._ct_children, quota_j, L_j, ms_j,
+                        expand_width=jnp.asarray(ew), expand_cap=chunk,
+                        level=lev, wave_dedup=False)
+                else:
+                    state, safe, keep, _ = _plan_ct_j(
+                        state, self._ct_children, lev, quota_j, L_j, ms_j,
+                        jnp.asarray(ew), expand_cap=chunk)
+                planned.append((safe, keep))
+                remaining -= ew
+            for safe, keep in planned:
+                state = yield from _commit(state, safe, keep)
+            dmin = np.asarray(state.pool_dists[:, 0], np.float64)
+            alive &= dmin < radii[t] * (1.0 + 1.0 / self.ct_eps)
+
+        kmax = int(k_np.max())
+        ids = np.asarray(state.pool_ids[:, :kmax], np.int64)
+        dd = np.asarray(state.pool_dists[:, :kmax], np.float64)
+        D_calls = np.asarray(state.n_calls)
+        stats = [ServeStats(d_calls=0, D_calls=int(D_calls[i]),
                             tower_batches=tower_batches) for i in range(b)]
         return ids, dd, stats
 
@@ -1133,6 +1400,10 @@ class BiMetricEngine:
                            k: int = 10,
                            ) -> tuple[np.ndarray, np.ndarray, list[ServeStats]]:
         """"Bi-metric (baseline)": top-quota by d, embed all with D, rerank."""
+        if self.index_kind == "covertree":
+            raise ValueError(
+                "the rerank baseline needs the vamana proxy graph; "
+                "build the engine with index='vamana'")
         b = query_tokens.shape[0]
         q_d, q_D = self._embed_queries(query_tokens)
         width = max(32, quota)

@@ -61,3 +61,267 @@ def test_bimetric_cover_tree(data):
     # generous slack: C is an empirical estimate on sampled pairs
     assert dists[0] <= (1 + 0.5) * true_d * 1.5 + 1e-9
     assert calls < 400
+
+
+# ---------------------------------------------------------------------------
+# Flattened layout + batched engine drive (the PR-8 port): parity against
+# the frozen per-query NumPy oracle above, across backends and shards.
+# ---------------------------------------------------------------------------
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import beam, bimetric
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+GRID_EPS = (1.0, 0.5, 0.25)
+BACKENDS = ("ref", "xla_matmul", "pallas-interpret")
+
+
+@pytest.fixture(scope="module")
+def flat_parts():
+    rng = np.random.default_rng(3)
+    n, dim = 300, 12
+    corpus = rng.normal(size=(n, dim)).astype(np.float32)  # expensive D
+    proj = rng.normal(size=(dim, 5)) / np.sqrt(5)
+    x_d = (corpus @ proj).astype(np.float64)               # cheap proxy d
+    tree = covertree.build(x_d, T=2.0)
+    flat = covertree.flatten(tree)
+    queries = rng.normal(size=(8, dim)).astype(np.float32)
+    return tree, flat, corpus, queries
+
+
+def _oracle(tree, corpus, q, *, eps, k, quota=None):
+    def D(ids):
+        d = corpus[ids].astype(np.float64) - np.asarray(q, np.float64)
+        return np.sqrt((d * d).sum(-1))
+    return covertree.search(tree, D, eps=eps, k=k, quota=quota)
+
+
+def test_flatten_invariants(flat_parts):
+    tree, flat, _, _ = flat_parts
+    l1 = tree.depth - 1
+    assert flat.children.shape[0] == l1 and flat.depth == tree.depth
+    np.testing.assert_array_equal(flat.root_ids,
+                                  np.asarray(tree.levels[0], np.int32))
+    np.testing.assert_allclose(
+        flat.radii, np.asarray(tree.level_scales[:l1]) / tree.scale)
+    for j in range(l1):
+        for p in tree.levels[j]:
+            row = flat.children[j, int(p)]
+            row = row[row >= 0]
+            want = np.union1d(tree.children[j].get(int(p), []), [int(p)])
+            np.testing.assert_array_equal(row, want.astype(np.int32))
+            assert np.all(np.diff(row) > 0)  # ascending, no dups
+        # rows of points absent from level j are fully padded
+        absent = np.setdiff1d(np.arange(tree.n), tree.levels[j])
+        assert (flat.children[j, absent] == -1).all()
+
+
+def test_batched_parity_vs_oracle_eps_grid(flat_parts):
+    """Batched descent == per-query oracle on neighbor ids AND memoized
+    D-call counts, at every eps; every kernel backend is bit-identical."""
+    tree, flat, corpus, queries = flat_parts
+    for eps in GRID_EPS:
+        ref = None
+        for be in BACKENDS:
+            res = covertree.search_corpus(
+                flat, corpus, queries, eps=eps, k=10, backend=be)
+            ids = np.asarray(res.ids)
+            calls = np.asarray(res.n_calls)
+            if ref is None:
+                ref = (ids, calls)
+                for i, q in enumerate(queries):
+                    oids, _, ocalls = _oracle(tree, corpus, q, eps=eps, k=10)
+                    got = ids[i][ids[i] >= 0]
+                    assert list(got) == list(oids[:len(got)]), (eps, i)
+                    assert calls[i] == ocalls, (eps, i)
+            else:
+                np.testing.assert_array_equal(ids, ref[0],
+                                              err_msg=f"{eps}/{be}")
+                np.testing.assert_array_equal(calls, ref[1],
+                                              err_msg=f"{eps}/{be}")
+
+
+def test_quota_call_counts_match_oracle(flat_parts):
+    """The D-call budget is enforced exactly: the engine's memoized counts
+    equal the oracle's at every quota (both admit min(quota, demand))."""
+    tree, flat, corpus, queries = flat_parts
+    for quota in (1, 7, 40, 120):
+        res = covertree.search_corpus(
+            flat, corpus, queries, eps=0.5, k=10, quota=quota)
+        calls = np.asarray(res.n_calls)
+        assert (calls <= quota).all()
+        for i, q in enumerate(queries):
+            _, _, ocalls = _oracle(tree, corpus, q, eps=0.5, k=10,
+                                   quota=quota)
+            assert calls[i] == ocalls, (quota, i)
+
+
+def test_bimetric_search_covertree_dispatch(flat_parts):
+    """bimetric_search(index=FlatCoverTree) routes to the cover-tree
+    descent: the corpora form and the callable form agree exactly."""
+    tree, flat, corpus, queries = flat_parts
+    corpus_j = jnp.asarray(corpus)
+
+    def exp_one(q_ctx, ids):
+        d = corpus_j[jnp.maximum(ids, 0)] - q_ctx[None, :]
+        out = jnp.sqrt(jnp.sum(d * d, -1))
+        return jnp.where(ids >= 0, out, jnp.inf)
+
+    res_c = bimetric.bimetric_search(
+        None, None, flat, None, jnp.asarray(queries),
+        n_points=flat.n, quota=120, k=10,
+        corpora=(corpus, corpus), eps=0.5)
+    res_f = bimetric.bimetric_search(
+        None, exp_one, flat, None, jnp.asarray(queries),
+        n_points=flat.n, quota=120, k=10, eps=0.5)
+    np.testing.assert_array_equal(np.asarray(res_c.ids),
+                                  np.asarray(res_f.ids))
+    np.testing.assert_array_equal(np.asarray(res_c.D_calls),
+                                  np.asarray(res_f.D_calls))
+    assert (np.asarray(res_c.d_calls) == 0).all()
+    # and the dispatch agrees with the oracle (untruncating quota: under
+    # truncation only the call *counts* are pinned, not the id sets)
+    res_full = bimetric.bimetric_search(
+        None, None, flat, None, jnp.asarray(queries),
+        n_points=flat.n, quota=flat.n, k=10,
+        corpora=(corpus, corpus), eps=0.5)
+    ids = np.asarray(res_full.ids)
+    calls = np.asarray(res_full.D_calls)
+    for i, q in enumerate(queries):
+        oids, _, ocalls = _oracle(tree, corpus, q, eps=0.5, k=10)
+        got = ids[i][ids[i] >= 0]
+        assert list(got) == list(oids[:len(got)]), i
+        assert calls[i] == ocalls, i
+
+
+def _run(body: str) -> str:
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp
+        import numpy as np
+    """) + textwrap.dedent(body)
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=ROOT, timeout=900)
+    assert res.returncode == 0, res.stderr[-3000:]
+    return res.stdout
+
+
+@pytest.mark.slow
+def test_sharded_parity():
+    """shards in {1, 2, 4}: the mesh-stepped descent is bit-exact vs the
+    single-device host drive (the fused single-device path may differ in
+    dists by fp fusion only — ids and call counts are identical)."""
+    out = _run("""
+        from repro.core import beam, covertree
+        rng = np.random.default_rng(3)
+        corpus = rng.normal(size=(300, 12)).astype(np.float32)
+        proj = rng.normal(size=(12, 5)) / np.sqrt(5)
+        x_d = (corpus @ proj).astype(np.float64)
+        tree = covertree.build(x_d, T=2.0)
+        flat = covertree.flatten(tree)
+        queries = rng.normal(size=(8, 12)).astype(np.float32)
+        fn = beam.fused_dist_fn(jnp.asarray(corpus), "l2")
+        for eps in (1.0, 0.5, 0.25):
+            ref = covertree.search_batched(
+                flat, fn, queries, eps=eps, k=10, quota=120,
+                fuse_levels=False)
+            for s in (1, 2, 4):
+                res = covertree.search_corpus(
+                    flat, corpus, queries, eps=eps, k=10, quota=120,
+                    shards=s)
+                np.testing.assert_array_equal(
+                    np.asarray(res.ids), np.asarray(ref.ids))
+                np.testing.assert_array_equal(
+                    np.asarray(res.n_calls), np.asarray(ref.n_calls))
+                if s > 1:   # in-mesh drive: bit-exact incl. dists
+                    np.testing.assert_array_equal(
+                        np.asarray(res.dists), np.asarray(ref.dists))
+                else:       # fused lax.scan drive: fp-fusion slack only
+                    np.testing.assert_allclose(
+                        np.asarray(res.dists), np.asarray(ref.dists),
+                        rtol=2e-6)
+        print("CT_SHARDED_OK")
+    """)
+    assert "CT_SHARDED_OK" in out
+
+
+# ------------------------------------------------------------------- serving
+@pytest.fixture(scope="module")
+def ct_engine():
+    from repro.configs import qwen3_0_6b
+    from repro.models import transformer as T
+    from repro.serve import BiMetricEngine, EmbedTower
+    key = jax.random.PRNGKey(0)
+    cheap_cfg = qwen3_0_6b.smoke()
+    exp_cfg = T.TransformerConfig(
+        name="exp-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        head_dim=16, d_ff=128, vocab=cheap_cfg.vocab, embed_dim=32)
+    cheap = EmbedTower(T.init_params(key, cheap_cfg), cheap_cfg)
+    expensive = EmbedTower(
+        T.init_params(jax.random.fold_in(key, 1), exp_cfg), exp_cfg)
+    corpus = np.random.default_rng(0).integers(
+        0, cheap_cfg.vocab, (96, 10), dtype=np.int32)
+    eng = BiMetricEngine(cheap, expensive, corpus, index="covertree",
+                         slots=3)
+    yield eng, corpus
+    eng.close()
+
+
+def test_engine_covertree_slot_pool_parity(ct_engine):
+    """index="covertree" serves through the slot pool bit-exact vs the
+    synchronous query_batch — mixed quotas, ks, quota-0 padding rows, more
+    requests than slots."""
+    from repro.serve import SearchRequest
+    eng, corpus = ct_engine
+    rows = [3, 40, 77, 12, 55, 9, 61]
+    quotas = [24, 8, 16, 96, 0, 12, 24]
+    ks = [10, 5, 10, 10, 5, 3, 10]
+    reqs = [SearchRequest(tokens=corpus[r], quota=q, k=kk)
+            for r, q, kk in zip(rows, quotas, ks)]
+    ref = eng.query_batch(reqs)
+    futs = [eng.submit(r) for r in reqs]
+    for i, f in enumerate(futs):
+        got = f.result(timeout=300)
+        assert np.array_equal(got.ids, ref[i].ids), i
+        np.testing.assert_array_equal(got.dists, ref[i].dists)
+        assert got.stats.D_calls == ref[i].stats.D_calls, i
+        assert got.stats.d_calls == 0  # no proxy stage under the tree
+    c = eng.counters()
+    assert c.completed >= len(reqs) and c.slot_occupancy == 0
+
+
+def test_engine_covertree_matches_oracle(ct_engine):
+    """The served answer IS Algorithm 3: rebuild the same offline tree and
+    replay the per-query oracle on the tower metric."""
+    from repro.serve import SearchRequest
+    eng, corpus = ct_engine
+    emb_d = np.asarray(eng.emb_d, np.float64)
+    tree = covertree.build(emb_d, T=2.0)
+    emb_D = np.asarray(eng.expensive.embed(corpus))
+    rows = [3, 40, 77]
+    reqs = [SearchRequest(tokens=corpus[r], quota=96, k=5) for r in rows]
+    got = eng.query_batch(reqs)
+    q_D = np.asarray(eng.expensive.embed(np.stack(
+        [corpus[r] for r in rows])))
+    for i, res in enumerate(got):
+        def D(ids, qv=q_D[i]):
+            d = emb_D[ids].astype(np.float32) - qv.astype(np.float32)
+            return np.sqrt((d * d).sum(-1)).astype(np.float64)
+        oids, _, ocalls = covertree.search(tree, D, eps=eng.ct_eps, k=5,
+                                           quota=96)
+        assert list(res.ids) == list(oids[:len(res.ids)]), i
+        assert res.stats.D_calls == ocalls, i
+
+
+def test_engine_covertree_rerank_raises(ct_engine):
+    eng, corpus = ct_engine
+    with pytest.raises(ValueError, match="vamana"):
+        eng.rerank_query_batch(corpus[:2], quota=8, k=5)
