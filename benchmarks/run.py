@@ -69,7 +69,7 @@ def main() -> None:
                 "rows": common.drain_emitted(),
                 "result": result,
             })
-        except Exception as e:  # noqa: BLE001
+        except Exception as e:
             traceback.print_exc()
             failures.append((name, repr(e)))
     if failures:

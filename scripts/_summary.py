@@ -1,0 +1,51 @@
+"""Shared CI table rendering: aligned stdout tables + GitHub step summaries.
+
+Extracted from ``check_bench.py`` so every gate script (bench gates,
+the analysis lane) renders verdicts the same way: the full table goes to
+stdout on success AND failure — every CI log records what was measured —
+and, when ``$GITHUB_STEP_SUMMARY`` is set (GitHub Actions), the same
+table is appended there as markdown so verdicts are readable from the
+Actions summary page without digging through logs.
+"""
+from __future__ import annotations
+
+import os
+from typing import Iterable, Sequence
+
+
+def format_table(headers: Sequence[str],
+                 rows: Iterable[Sequence[str]]) -> str:
+    """Fixed-width aligned text table (headers + rule + rows)."""
+    rows = [tuple(str(c) for c in r) for r in rows]
+    widths = [max(len(h), *(len(r[i]) for r in rows)) if rows else len(h)
+              for i, h in enumerate(headers)]
+    line = "  ".join(h.ljust(w) for h, w in zip(headers, widths))
+    out = [line, "-" * len(line)]
+    out.extend("  ".join(c.ljust(w) for c, w in zip(r, widths))
+               for r in rows)
+    return "\n".join(out)
+
+
+def print_table(headers: Sequence[str],
+                rows: Iterable[Sequence[str]]) -> None:
+    print(format_table(headers, rows))
+
+
+def append_step_summary(title: str, headers: Sequence[str],
+                        rows: Iterable[Sequence[str]],
+                        highlight: Sequence[str] = ()) -> None:
+    """Append a markdown table to ``$GITHUB_STEP_SUMMARY`` (no-op when the
+    env var is unset, i.e. outside GitHub Actions). Cells whose text is in
+    ``highlight`` are bolded — failure verdicts should jump out."""
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not summary:
+        return
+    with open(summary, "a") as f:
+        f.write(f"### {title}\n\n")
+        f.write("| " + " | ".join(headers) + " |\n")
+        f.write("|" + " --- |" * len(headers) + "\n")
+        for r in rows:
+            cells = [f"**{c}**" if str(c) in highlight else str(c)
+                     for c in r]
+            f.write("| " + " | ".join(cells) + " |\n")
+        f.write("\n")

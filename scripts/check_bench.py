@@ -33,6 +33,8 @@ import json
 import os
 import sys
 
+import _summary
+
 
 def lookup(payload, dotted: str) -> float:
     node = payload
@@ -43,7 +45,8 @@ def lookup(payload, dotted: str) -> float:
                 continue
             except (ValueError, IndexError):
                 raise KeyError(
-                    f"key {dotted!r}: {part!r} is not a valid list index")
+                    f"key {dotted!r}: {part!r} is not a valid list "
+                    "index") from None
         if not isinstance(node, dict) or part not in node:
             raise KeyError(f"key {dotted!r} not found (missing {part!r})")
         node = node[part]
@@ -79,10 +82,9 @@ def check_one(base: float, new: float, *, key: str, direction: str,
 
 def print_gate_table(rows: list[dict]) -> None:
     """The full gate table — printed on success AND failure, so every CI log
-    records what was measured against what, not just the verdict. When
-    ``$GITHUB_STEP_SUMMARY`` is set (GitHub Actions), the same table is also
-    appended there as markdown, so gate verdicts are readable from the
-    Actions summary page without digging through logs."""
+    records what was measured against what, not just the verdict (table
+    rendering + ``$GITHUB_STEP_SUMMARY`` markdown live in ``_summary.py``,
+    shared with the analysis lane)."""
     if not rows:
         print("bench-gate: no gates to check")
         return
@@ -93,26 +95,11 @@ def print_gate_table(rows: list[dict]) -> None:
         f"{r['bound']:.4f}", f"{r['tolerance']:.0%}", r["direction"],
         r["verdict"],
     ) for r in rows]
-    widths = [max(len(h), *(len(fr[i]) for fr in fmt_rows))
-              for i, h in enumerate(headers)]
-    line = "  ".join(h.ljust(w) for h, w in zip(headers, widths))
-    print(line)
-    print("-" * len(line))
-    for fr in fmt_rows:
-        print("  ".join(c.ljust(w) for c, w in zip(fr, widths)))
-    summary = os.environ.get("GITHUB_STEP_SUMMARY")
-    if summary:
-        n_fail = sum(r["verdict"] != "OK" for r in rows)
-        with open(summary, "a") as f:
-            f.write("### Bench gates — "
-                    f"{len(rows) - n_fail}/{len(rows)} passed\n\n")
-            f.write("| " + " | ".join(headers) + " |\n")
-            f.write("|" + " --- |" * len(headers) + "\n")
-            for fr in fmt_rows:
-                cells = [c if c != "REGRESSION" else "**REGRESSION**"
-                         for c in fr]
-                f.write("| " + " | ".join(cells) + " |\n")
-            f.write("\n")
+    _summary.print_table(headers, fmt_rows)
+    n_fail = sum(r["verdict"] != "OK" for r in rows)
+    _summary.append_step_summary(
+        f"Bench gates — {len(rows) - n_fail}/{len(rows)} passed",
+        headers, fmt_rows, highlight=("REGRESSION",))
 
 
 def run_manifest(manifest_path: str, baseline_dir: str, new_dir: str) -> int:

@@ -9,8 +9,34 @@
 # each gated metric against the committed baselines with
 # `scripts/check_bench.py --manifest` (regression beyond a gate's tolerance
 # fails the job).
+#
+# `scripts/ci.sh --lint-contracts` runs the AST contract lint over src/repro
+# (retired kwargs, quantize flow, raw knob literals — see
+# src/repro/analysis/astlint.py).
+#
+# `scripts/ci.sh --analysis [run_analysis args...]` runs the program-contract
+# analysis lane: lint-contracts plus the registry checkers (retrace audit,
+# dtype-flow lint, donation/aliasing verification) over 8 forced host
+# devices, as the CI `analysis` job does.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+if [[ "${1:-}" == "--lint-contracts" ]]; then
+  shift
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.analysis.astlint src/repro "$@"
+  exit 0
+fi
+
+if [[ "${1:-}" == "--analysis" ]]; then
+  shift
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.analysis.astlint src/repro
+  XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python scripts/run_analysis.py "$@"
+  exit 0
+fi
 
 if [[ "${1:-}" == "--bench" ]]; then
   shift

@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""CI analysis lane: run the program-contract checkers over the registry.
+
+Drives ``repro.analysis.runner.run_registry()`` — for every program in
+``repro.analysis.registry.REGISTRY``, audit retrace counts over its input
+grid, lint the jaxpr dtype flow, and verify donation / buffer aliasing
+against the compiled HLO — then print one verdict row per program (and
+append the same table to ``$GITHUB_STEP_SUMMARY`` on GitHub Actions).
+Exit 1 when any program fails any checker.
+
+Programs whose ``min_devices`` exceeds the host's report SKIP (the CI
+lane forces 8 host devices via ``XLA_FLAGS=--xla_force_host_platform_
+device_count=8`` so nothing skips there).
+
+    PYTHONPATH=src python scripts/run_analysis.py [--only name[,name...]]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import _summary
+
+
+def _checks_cell(v) -> str:
+    """Compact per-checker summary, e.g. ``retrace 9/9 dtype[3] donate``."""
+    parts = []
+    if v.retrace is not None:
+        parts.append(f"retrace {v.retrace.traces}/{v.retrace.bound}")
+    if v.dtype:
+        bad = sum(not d.ok for d in v.dtype)
+        parts.append(f"dtype[{len(v.dtype)}]"
+                     + (f" {bad} bad" if bad else ""))
+    if v.donation is not None:
+        parts.append("donate" + ("" if v.donation.ok else " MISSING"))
+    if v.double_donation is not None:
+        parts.append("dd" + (f" {len(v.double_donation)}"
+                             if v.double_donation else ""))
+    if v.while_carry is not None:
+        parts.append("carry" + ("" if v.while_carry.ok
+                                else f" {len(v.while_carry.copies)} copies"))
+    return " ".join(parts)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="comma-joined registry names to run (default: all)")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.runner import run_registry
+
+    names = args.only.split(",") if args.only else None
+    verdicts = run_registry(names)
+    if not verdicts:
+        print(f"analysis: no registered programs match {args.only!r}",
+              file=sys.stderr)
+        return 1
+
+    headers = ("program", "checks", "verdict")
+    rows = []
+    failures = 0
+    for v in verdicts:
+        if v.skipped is not None:
+            rows.append((v.program, v.skipped, "SKIP"))
+            continue
+        ok = v.ok
+        failures += not ok
+        rows.append((v.program, _checks_cell(v), "OK" if ok else "FAIL"))
+    _summary.print_table(headers, rows)
+    n_run = sum(r[2] != "SKIP" for r in rows)
+    _summary.append_step_summary(
+        f"Program contracts — {n_run - failures}/{n_run} passed"
+        + (f", {len(rows) - n_run} skipped" if n_run != len(rows) else ""),
+        headers, rows, highlight=("FAIL",))
+
+    for v in verdicts:
+        for line in v.failures():
+            print(f"FAIL {v.program}: {line}", file=sys.stderr)
+    print(f"analysis: {n_run - failures}/{n_run} programs passed"
+          + (f" ({len(rows) - n_run} skipped)" if n_run != len(rows) else ""))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,74 @@
+"""Program-contract analyzers: the repo's load-bearing invariants, CI-gated.
+
+The hot paths earn their guarantees from properties that neither unit
+tests nor type checkers see — what is a jit *operand* vs a *static*, which
+dtypes flow through a merge, which buffers XLA actually aliased. This
+package checks those properties on the artifacts where they are decided
+(traced jaxprs, optimized HLO text, the AST) against declarations a
+program makes when it registers in :mod:`repro.analysis.registry`.
+
+**The four checkers** (one module each):
+
+* **retrace audit** (:mod:`.retrace`) — every budget knob on the serving
+  path (quota / beam_width / max_steps / expand_width) is a per-query
+  ``(B,)`` *operand*, and the only statics are shape-class knobs whose
+  values are deliberately bucketed (pow2 ``set_capacity``, ``expand_cap``,
+  the dedup backend, the frozen ``Backend``). A registered program
+  declares a trace bound; the auditor drives a representative input grid
+  (mixed quotas, both dedup backends, capacity buckets, shard counts)
+  through the *real* jitted entry point and fails if the trace-cache grew
+  past the bound — the regression where a kwarg silently becomes
+  per-request-static and every request compiles.
+
+* **dtype-flow lint** (:mod:`.dtypeflow`) — no ``convert_element_type``
+  *widening* (bf16/f16 → f32/f64) in a program's jaxpr beyond its
+  explicit allowlist, and output dtypes stay what the contract says.
+  Kernel merges order by an f32 *view* of the keys but must carry
+  payloads (and return dists) in the storage dtype — the PR-5 upcast bug
+  class. Allowlist entries name the sanctioned widenings (e.g. the
+  ordering view), so a new one is a lint failure, not a silent copy.
+
+* **donation/aliasing verify** (:mod:`.aliasing`) — every
+  ``donate_argnums`` declaration actually lands in the compiled module's
+  ``input_output_alias`` table (a dropped donation is a silent full-size
+  copy per step), no two donated leaves share one buffer (double
+  donation — the hazard the optimizer's ``copy=True`` master-weight init
+  guards), and the fused ``while_loop``'s dedup-bitmap carry aliases in
+  place: no per-step ``copy`` of the bitmap inside the loop body. Built
+  on :mod:`repro.launch.hlo_analysis`'s HLO-text parser.
+
+* **AST contract lint** (:mod:`.astlint`, ``scripts/ci.sh
+  --lint-contracts``) — source-level rules the runtime can't see: the
+  retired boolean kwargs (``use_pallas`` / ``use_fused_merge`` /
+  ``interpret``) appear only inside the kernel shim layer or funneled
+  into ``resolve_backend``; ``quantize=`` flows only into the sanctioned
+  residency funnels (``resolve_backend`` / ``as_corpus_view`` /
+  ``shard_corpus_view``) so the lossy proxy can never reach a
+  stage-2/ground-truth call site (the paper's bi-metric contract); and
+  internal call sites pass resolved knobs, not raw ``backend=``/
+  ``dedup=`` string literals.
+
+**Registering a program** (see :mod:`.registry`): add a
+:class:`~repro.analysis.registry.Program` with a ``build()`` returning a
+:class:`~repro.analysis.registry.Probe` — the real jitted entry point,
+its input grid, a trace counter, and optional dtype/donation/while-carry
+declarations. ``scripts/run_analysis.py`` (the CI ``analysis`` lane) and
+``tests/test_analysis.py`` both run the full registry; a program that
+needs more devices than the host has (``min_devices``) is skipped there
+and exercised in the multi-device lane.
+"""
+from repro.analysis.aliasing import (  # noqa: F401
+    DonationReport,
+    WhileCarryReport,
+    check_donation,
+    check_while_carry,
+    detect_double_donation,
+    donated_leaf_params,
+)
+from repro.analysis.astlint import Violation, lint_paths, lint_source  # noqa: F401
+from repro.analysis.dtypeflow import (  # noqa: F401
+    DtypeReport,
+    check_dtype_flow,
+    widening_events,
+)
+from repro.analysis.retrace import RetraceReport, audit_retrace  # noqa: F401

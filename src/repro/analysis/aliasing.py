@@ -1,0 +1,156 @@
+"""Donation/aliasing verifier over optimized HLO text.
+
+A ``donate_argnums`` declaration is a *request*: jax forwards it to XLA,
+and XLA either records the alias in the compiled module's
+``input_output_alias`` table or silently drops it (shape/dtype mismatch,
+the buffer still read after the donated output is written) — in which
+case every step pays a full-size copy and the declaration is dead code.
+This module checks the declaration against what the compiler actually
+did, via :mod:`repro.launch.hlo_analysis`'s text parser:
+
+* :func:`check_donation` — every donated leaf's flat parameter number
+  appears as an alias source in the compiled module;
+* :func:`detect_double_donation` — no two donated leaves share one
+  device buffer (donating the same buffer twice is undefined; the
+  optimizer's ``copy=True`` master-weight init exists to prevent it);
+* :func:`check_while_carry` — a fused ``while_loop`` carry (the dedup
+  bitmap) aliases in place: no per-step ``copy`` of that buffer inside
+  the loop body.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+
+from repro.launch import hlo_analysis as H
+
+
+def _leaf_spans(args: Sequence[Any]) -> list[tuple[int, int]]:
+    """Flat-parameter index range [start, stop) contributed by each arg."""
+    spans, off = [], 0
+    for a in args:
+        n = len(jax.tree_util.tree_leaves(a))
+        spans.append((off, off + n))
+        off += n
+    return spans
+
+
+def donated_leaf_params(args: Sequence[Any],
+                        donate_argnums: Sequence[int]) -> set[int]:
+    """Flat XLA parameter numbers covered by ``donate_argnums``.
+
+    jax flattens positional args to one leaf list in order; entry
+    parameter N of the compiled module is leaf N of that list.
+    """
+    spans = _leaf_spans(args)
+    out: set[int] = set()
+    for i in donate_argnums:
+        lo, hi = spans[i]
+        out.update(range(lo, hi))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class DonationReport:
+    name: str
+    donated: tuple[int, ...]  # flat param numbers declared donated
+    aliased: tuple[int, ...]  # flat param numbers XLA aliased
+    missing: tuple[int, ...]  # declared but NOT aliased: silent copies
+
+    @property
+    def ok(self) -> bool:
+        return not self.missing
+
+
+def check_donation(
+    fn: Callable,
+    args: Sequence[Any],
+    donate_argnums: Sequence[int],
+    *,
+    jitted: Callable | None = None,
+    name: str = "",
+) -> DonationReport:
+    """Compile and verify that every donated leaf aliases an output.
+
+    ``jitted`` passes a pre-built jit wrapper (e.g. a Trainer's fused
+    step) that already carries the donation declaration; otherwise ``fn``
+    is wrapped here. Lowering/compiling does not consume the example
+    buffers — only a real call would.
+    """
+    j = jitted if jitted is not None else jax.jit(
+        fn, donate_argnums=tuple(donate_argnums))
+    text = j.lower(*args).compile().as_text()
+    aliased = {e.param_number for e in H.parse_input_output_alias(text)}
+    donated = donated_leaf_params(args, donate_argnums)
+    return DonationReport(
+        name=name,
+        donated=tuple(sorted(donated)),
+        aliased=tuple(sorted(aliased)),
+        missing=tuple(sorted(donated - aliased)),
+    )
+
+
+def _buffer_key(leaf: Any):
+    try:
+        return leaf.unsafe_buffer_pointer()
+    except Exception:
+        return id(leaf)
+
+
+def detect_double_donation(args: Sequence[Any],
+                           donate_argnums: Sequence[int]) -> list[tuple]:
+    """Donated leaves that share one device buffer.
+
+    Returns ``(flat_param_a, flat_param_b)`` pairs (a < b). A non-empty
+    result means the same buffer would be handed to XLA as two distinct
+    donations — exactly what a no-op ``astype`` aliasing the param buffer
+    into the optimizer's master weights would cause.
+    """
+    spans = _leaf_spans(args)
+    seen: dict[Any, int] = {}
+    dupes: list[tuple] = []
+    for i in donate_argnums:
+        lo, _hi = spans[i]
+        for k, leaf in enumerate(jax.tree_util.tree_leaves(args[i])):
+            key = _buffer_key(leaf)
+            if key in seen:
+                dupes.append((seen[key], lo + k))
+            else:
+                seen[key] = lo + k
+    return dupes
+
+
+@dataclasses.dataclass(frozen=True)
+class WhileCarryReport:
+    name: str
+    carry_shape: str
+    copies: tuple[str, ...]  # raw copy instrs of that shape in loop bodies
+
+    @property
+    def ok(self) -> bool:
+        return not self.copies
+
+
+def check_while_carry(
+    fn_or_text: Callable | str,
+    args: Sequence[Any] = (),
+    *,
+    carry_shape: str,
+    name: str = "",
+) -> WhileCarryReport:
+    """Assert a while-carry buffer aliases in place across loop steps.
+
+    ``carry_shape`` is the HLO type prefix of the carried buffer (e.g.
+    ``"pred[4,64]"`` for a (B=4, N=64) dedup bitmap). Accepts either a
+    callable to compile against ``args`` or pre-compiled HLO text.
+    """
+    if callable(fn_or_text):
+        text = jax.jit(fn_or_text).lower(*args).compile().as_text()
+    else:
+        text = fn_or_text
+    copies = H.while_body_copies(text, result_type_prefix=carry_shape)
+    return WhileCarryReport(
+        name=name, carry_shape=carry_shape,
+        copies=tuple(c.raw.strip() for c in copies))

@@ -1,0 +1,135 @@
+"""AST contract lint: source-level rules the runtime can't observe.
+
+Three rules, all scoped to ``src/repro`` (tests and benchmarks may
+exercise the public shims deliberately); the kernel dispatch layer
+(``src/repro/kernels/``) is the shim itself and is exempt:
+
+* **retired-kwarg** — the boolean knobs the unified ``backend=`` replaced
+  (``use_pallas`` / ``use_fused_merge`` / ``interpret``) may appear at a
+  call site only when funneled into ``resolve_backend`` (the deprecation
+  shim). Anywhere else they are a reintroduction of the retired API.
+* **quantize-flow** — ``quantize=`` may flow only into the residency
+  funnels (``resolve_backend`` / ``as_corpus_view`` /
+  ``shard_corpus_view``). The bi-metric contract strips quantization
+  before stage 2; a ``quantize=`` kwarg on any other internal call is a
+  path for the lossy proxy to reach a ground-truth call site. A literal
+  ``quantize=None`` is always legal — it *strips* residency (what the
+  stage-2 boundary does), it cannot introduce it.
+* **raw-knob-literal** — internal call sites pass resolved knobs, not raw
+  ``backend="..."`` / ``dedup="..."`` string literals; a literal is legal
+  only as the argument of ``resolve_backend`` / ``resolve_dedup`` (public
+  entry-point *defaults* live in ``def`` signatures, which this rule does
+  not touch).
+
+Run as ``python -m repro.analysis.astlint [paths...]`` — what
+``scripts/ci.sh --lint-contracts`` does.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import sys
+from typing import Iterable
+
+RETIRED_KWARGS = frozenset({"use_pallas", "use_fused_merge", "interpret"})
+RESOLVE_FUNNELS = frozenset({"resolve_backend"})
+QUANTIZE_FUNNELS = frozenset(
+    {"resolve_backend", "as_corpus_view", "shard_corpus_view"})
+KNOB_FUNNELS = frozenset({"resolve_backend", "resolve_dedup"})
+#: path fragments of the shim layer — the dispatch code that *implements*
+#: the knobs is allowed to plumb them; the analysis registry's probe
+#: fixtures exercise literal knob grids deliberately, like tests
+SHIM_PATH_PARTS = ("repro/kernels/", "repro/analysis/registry.py")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _callee_name(call: ast.Call) -> str:
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+def _is_shim(path: str) -> bool:
+    norm = path.replace("\\", "/")
+    return any(part in norm for part in SHIM_PATH_PARTS)
+
+
+def lint_source(source: str, path: str = "<string>") -> list[Violation]:
+    """Lint one module's source; ``path`` scopes the shim exemption."""
+    if _is_shim(path):
+        return []
+    tree = ast.parse(source, filename=path)
+    out: list[Violation] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = _callee_name(node)
+        for kw in node.keywords:
+            if kw.arg in RETIRED_KWARGS and callee not in RESOLVE_FUNNELS:
+                out.append(Violation(
+                    path, kw.value.lineno, "retired-kwarg",
+                    f"`{kw.arg}=` at a call to `{callee or '<expr>'}` — the "
+                    "boolean knobs are retired; pass `backend=` (or funnel "
+                    "through resolve_backend)"))
+            elif (kw.arg == "quantize" and callee not in QUANTIZE_FUNNELS
+                  and not (isinstance(kw.value, ast.Constant)
+                           and kw.value.value is None)):
+                out.append(Violation(
+                    path, kw.value.lineno, "quantize-flow",
+                    f"`quantize=` at a call to `{callee or '<expr>'}` — "
+                    "residency may only enter via resolve_backend/"
+                    "as_corpus_view/shard_corpus_view; stage-2 call sites "
+                    "must never see the lossy proxy"))
+            elif (kw.arg in ("backend", "dedup")
+                  and isinstance(kw.value, ast.Constant)
+                  and isinstance(kw.value.value, str)
+                  and callee not in KNOB_FUNNELS):
+                out.append(Violation(
+                    path, kw.value.lineno, "raw-knob-literal",
+                    f"`{kw.arg}={kw.value.value!r}` literal at a call to "
+                    f"`{callee or '<expr>'}` — resolve the knob "
+                    "(resolve_backend/resolve_dedup) and pass the result"))
+    return out
+
+
+def lint_paths(paths: Iterable[str]) -> list[Violation]:
+    out: list[Violation] = []
+    for root in paths:
+        p = pathlib.Path(root)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            out.extend(lint_source(f.read_text(), str(f)))
+    return out
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = list(sys.argv[1:] if argv is None else argv)
+    paths = args or ["src/repro"]
+    violations = lint_paths(paths)
+    for v in violations:
+        print(v)
+    n_files = sum(
+        len(sorted(pathlib.Path(p).rglob("*.py"))) if pathlib.Path(p).is_dir()
+        else 1 for p in paths)
+    status = "FAIL" if violations else "OK"
+    print(f"astlint: {n_files} file(s), {len(violations)} violation(s) "
+          f"[{status}]")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,111 @@
+"""Jaxpr dtype-flow lint: no unsanctioned float widening.
+
+The kernel merges (``local_topk``, ``merge_pool_batch``,
+``beam_merge_topk``) order by an f32 *view* of the distance keys — a
+deliberate, counted ``convert_element_type`` — but payloads and returned
+dists must stay in the storage dtype. PR 5 shipped (and reverted) a
+merge that upcast the values themselves; this lint walks a program's
+closed jaxpr, counts every widening convert (bf16/f16 → f32/f64,
+f32 → f64), and fails when a widening is not covered by the program's
+allowlist or an output dtype drifts from the declared contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+# in-dtype -> the set of dtypes that count as a *widening* of it
+_WIDENINGS = {
+    "bfloat16": {"float32", "float64"},
+    "float16": {"float32", "float64"},
+    "float32": {"float64"},
+}
+
+
+def _sub_jaxprs(params: Mapping[str, Any]):
+    """Sub-jaxprs hiding in an eqn's params (pjit/scan/while/cond/...)."""
+    for v in params.values():
+        items = v if isinstance(v, (tuple, list)) else (v,)
+        for x in items:
+            if hasattr(x, "eqns") or hasattr(x, "jaxpr"):
+                yield x  # Jaxpr or ClosedJaxpr (unwrapped by the caller)
+
+
+def widening_events(jaxpr) -> list[tuple[str, str]]:
+    """All float-widening converts in ``jaxpr`` (recursing into subjaxprs).
+
+    Returns ``(tag, context)`` pairs where ``tag`` is
+    ``"<in_dtype>-><out_dtype>"`` (numpy dtype names, e.g.
+    ``"bfloat16->float32"``) and ``context`` is the eqn rendered as text.
+    """
+    if hasattr(jaxpr, "jaxpr"):  # ClosedJaxpr
+        jaxpr = jaxpr.jaxpr
+    events: list[tuple[str, str]] = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "convert_element_type":
+            aval = getattr(eqn.invars[0], "aval", None)
+            src = getattr(aval, "dtype", None)
+            dst = eqn.params.get("new_dtype")
+            if src is not None and dst is not None:
+                src_n = jnp.dtype(src).name
+                dst_n = jnp.dtype(dst).name
+                if dst_n in _WIDENINGS.get(src_n, ()):
+                    events.append((f"{src_n}->{dst_n}", str(eqn)))
+        for sub in _sub_jaxprs(eqn.params):
+            events.extend(widening_events(sub))
+    return events
+
+
+@dataclasses.dataclass(frozen=True)
+class DtypeReport:
+    name: str
+    counts: dict[str, int]  # widening tag -> occurrences
+    allow: dict[str, int]  # tag -> max sanctioned occurrences
+    violations: list[str]
+    out_dtypes: tuple[str, ...]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+
+def check_dtype_flow(
+    fn: Callable,
+    args: Sequence[Any],
+    *,
+    allow: Mapping[str, int] | None = None,
+    expect_out_dtypes: Sequence[Any | None] | None = None,
+    name: str = "",
+) -> DtypeReport:
+    """Trace ``fn(*args)`` and lint its widening converts.
+
+    ``allow`` maps widening tags to the number of *sanctioned* occurrences
+    (the ordering-view converts); any tag beyond its allowance — or absent
+    from the allowlist entirely — is a violation. ``expect_out_dtypes``
+    optionally pins output dtypes positionally (None entries skip).
+    """
+    allow = dict(allow or {})
+    closed = jax.make_jaxpr(fn)(*args)
+    counts = Counter(tag for tag, _ in widening_events(closed))
+    violations = [
+        f"{tag}: {n} widening convert(s), allowlist permits "
+        f"{allow.get(tag, 0)}"
+        for tag, n in sorted(counts.items()) if n > allow.get(tag, 0)
+    ]
+    out_dtypes = tuple(jnp.dtype(a.dtype).name for a in closed.out_avals
+                       if hasattr(a, "dtype"))
+    if expect_out_dtypes is not None:
+        for i, want in enumerate(expect_out_dtypes):
+            if want is None:
+                continue
+            want_n = jnp.dtype(want).name
+            got = out_dtypes[i] if i < len(out_dtypes) else "<missing>"
+            if got != want_n:
+                violations.append(
+                    f"output[{i}] dtype {got}, contract says {want_n}")
+    return DtypeReport(name=name, counts=dict(counts), allow=allow,
+                       violations=violations, out_dtypes=out_dtypes)

@@ -1,0 +1,504 @@
+"""The program registry: every hot jitted entry point, with its contract.
+
+Each :class:`Program` names a real entry point, a representative input
+grid (mixed per-query quotas, both dedup backends, pow2 capacity
+buckets, shard counts — the shapes production traffic actually takes),
+and the declared invariants the checkers gate:
+
+* ``retrace_bound`` — max trace-cache growth over the grid (the pow2 /
+  static-knob budget; one extra trace per *request* blows well past it);
+* dtype allowlists — the sanctioned f32 ordering-view widenings;
+* donation declarations — ``donate_argnums`` that must land in the
+  compiled ``input_output_alias`` table;
+* while-carry shapes — fused-loop buffers that must alias in place.
+
+Programs needing more devices than the host exposes (``min_devices``)
+are skipped by the runner; the CI ``analysis`` lane forces 8 host
+devices so they always run there.
+
+Bounds are measured on the committed grids and deliberately exact-ish:
+slack hides regressions. If a legitimate new static (a new capacity
+bucket, a new dedup route) raises a bound, raise it *in the same PR*
+with a comment saying which static grew.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.retrace import jit_cache_size, stepper_trace_count
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Probe:
+    """What a built program hands the checkers (see the runner)."""
+
+    run_grid: Callable[[], int]  # drive every grid point; return the count
+    count: Callable[[], int]  # current trace count of the entry point(s)
+    # dtype-flow checks: (label, fn, args, allow, expect_out_dtypes)
+    dtype_checks: list[tuple] = dataclasses.field(default_factory=list)
+    # donation check: (jitted, args, donate_argnums)
+    donation: tuple | None = None
+    # double-donation scan: (args, donate_argnums)
+    double_donation: tuple | None = None
+    # while-carry check: (fn, args, carry_shape)
+    while_carry: tuple | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Program:
+    name: str
+    retrace_bound: int
+    build: Callable[[], Probe]
+    min_devices: int = 1
+    notes: str = ""
+
+
+# ---------------------------------------------------------------------------
+# shared small fixtures (deterministic, no PRNG: probes must be replayable)
+# ---------------------------------------------------------------------------
+_N, _D, _B, _R = 64, 8, 4, 4
+
+
+def _corpus() -> Array:
+    return jnp.sin(jnp.arange(_N * _D, dtype=jnp.float32)).reshape(_N, _D)
+
+
+def _adjacency() -> Array:
+    return ((jnp.arange(_N)[:, None] + jnp.arange(1, _R + 1)[None, :])
+            % _N).astype(jnp.int32)
+
+
+def _queries() -> Array:
+    return jnp.cos(jnp.arange(_B * _D, dtype=jnp.float32)).reshape(_B, _D)
+
+
+def _entries() -> Array:
+    return jnp.broadcast_to(jnp.arange(2, dtype=jnp.int32)[None, :], (_B, 2))
+
+
+#: the mixed-budget operand grid: none of these may retrace
+_QUOTA_GRID = ((3, 5, 7, 9), (7, 7, 7, 7), (9, 2, 9, 2), (1, 1, 1, 1))
+_BW_GRID = ((8, 8, 8, 8), (4, 8, 4, 8))
+
+
+def _vec(vals) -> Array:
+    return jnp.asarray(vals, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# 1+2. the fused batched greedy search, both dedup backends
+# ---------------------------------------------------------------------------
+def _build_batched_greedy(dedup: str) -> Probe:
+    from repro.core import beam
+
+    corpus, adj = _corpus(), _adjacency()
+    dist_fn = beam.fused_dist_fn(corpus, "sqeuclidean", backend="ref")
+
+    @functools.partial(jax.jit, static_argnames=("set_capacity",))
+    def search(q, entries, quota, bw, ms, *, set_capacity=None):
+        r = beam.batched_greedy_search(
+            dist_fn, adj, q, entries, n_points=_N, beam_width=bw,
+            pool_size=8, quota=quota, max_steps=ms, dedup=dedup,
+            set_capacity=set_capacity)
+        return r.pool_ids, r.pool_dists, r.n_calls
+
+    caps = (8, 16) if dedup == "sorted" else (None,)
+
+    def run_grid() -> int:
+        pts = 0
+        for cap in caps:
+            for quota in _QUOTA_GRID:
+                for bw in _BW_GRID:
+                    search(_queries(), _entries(), _vec(quota), _vec(bw),
+                           _vec((12, 12, 12, 12)), set_capacity=cap)
+                    pts += 1
+        return pts
+
+    probe = Probe(run_grid=run_grid, count=lambda: jit_cache_size(search))
+    # the whole fused loop is f32 end-to-end: zero widenings allowed
+    probe.dtype_checks.append((
+        "fused-loop", lambda q, e, quota: search(
+            q, e, quota, _vec(_BW_GRID[0]), _vec((12,) * _B),
+            set_capacity=caps[0]),
+        (_queries(), _entries(), _vec(_QUOTA_GRID[0])), {}, None))
+    if dedup == "bitmap":
+        # the dedup bitmap is the while carry XLA must alias in place
+        probe.while_carry = (
+            lambda q, e, quota: search(
+                q, e, quota, _vec(_BW_GRID[0]), _vec((12,) * _B)),
+            (_queries(), _entries(), _vec(_QUOTA_GRID[0])),
+            f"pred[{_B},{_N}]")
+    return probe
+
+
+# ---------------------------------------------------------------------------
+# 3. the serve engine's host-driven stage-2 stack (module-level jitted fns)
+# ---------------------------------------------------------------------------
+def _build_serve_stage2() -> Probe:
+    from repro.core import beam
+    from repro.kernels import backend as kernel_backend
+    from repro.serve import engine as E
+
+    be = kernel_backend.resolve_backend("ref")
+    adj = _adjacency()
+    entry_fns = (E._init_j, E._plan_step_j, E._commit_j, E._active_j,
+                 E._active_any_j)
+
+    # dedup/capacity configs: bitmap + two pow2 sorted buckets
+    configs = (("bitmap", None), ("sorted", 8), ("sorted", 16))
+
+    def drive(dedup, cap, quota, bw) -> None:
+        state, safe, keep = E._init_j(
+            _entries(), _vec(quota), n_points=_N, pool_size=8,
+            dedup=dedup, set_capacity=cap)
+        ms = _vec((12,) * _B)
+        dists = jnp.where(safe >= 0, jnp.abs(safe).astype(jnp.float32),
+                          jnp.inf)
+        state = E._commit_j(state, safe, keep, dists, backend=be)
+        for _ in range(2):
+            state, safe, keep, _w = E._plan_step_j(
+                state, adj, _vec(quota), _vec(bw), ms, _vec((1,) * _B),
+                expand_cap=1)
+            dists = jnp.where(safe >= 0, jnp.abs(safe).astype(jnp.float32),
+                              jnp.inf)
+            state = E._commit_j(state, safe, keep, dists, backend=be)
+        E._active_j(state, _vec(quota), _vec(bw), ms)
+        E._active_any_j(state, _vec(quota), _vec(bw), ms)
+
+    def run_grid() -> int:
+        pts = 0
+        for dedup, cap in configs:
+            for quota in _QUOTA_GRID:
+                for bw in _BW_GRID:
+                    drive(dedup, cap, quota, bw)
+                    pts += 1
+        return pts
+
+    return Probe(
+        run_grid=run_grid,
+        count=lambda: sum(jit_cache_size(f) for f in entry_fns))
+
+
+# ---------------------------------------------------------------------------
+# 4. the sharded mesh path (needs forced host devices). The eager
+# sharded_greedy_search entry builds its shard_map program per call (no
+# introspectable cache), so the *countable* retrace contract of the mesh
+# path is audited through ShardedStepper at shards {2, 4}; the eager entry
+# rides the same grid as a crash canary at shards {1, 2, 4}.
+# ---------------------------------------------------------------------------
+def _build_sharded_mesh() -> Probe:
+    from repro.core import beam
+
+    corpus, adj = _corpus(), _adjacency()
+    steppers = {s: beam.ShardedStepper(shards=s, n_points=_N, backend="ref")
+                for s in (2, 4)}
+
+    def drive(stepper, quota) -> None:
+        state, safe, keep = stepper.init(
+            _entries(), _vec(quota), pool_size=8, dedup="bitmap")
+        ms = _vec((12,) * _B)
+        dists = jnp.where(safe >= 0, jnp.abs(safe).astype(jnp.float32),
+                          jnp.inf)
+        state = stepper.commit(state, safe, keep, dists)
+        state, safe, keep, _w = stepper.plan(
+            state, adj, _vec(quota), _vec(_BW_GRID[0]), ms)
+        stepper.active(state, _vec(quota), _vec(_BW_GRID[0]), ms)
+
+    def run_grid() -> int:
+        pts = 0
+        for stepper in steppers.values():
+            for quota in _QUOTA_GRID:
+                drive(stepper, quota)
+                pts += 1
+        for s in (1, 2, 4):
+            for quota in _QUOTA_GRID[:2]:
+                beam.sharded_greedy_search(
+                    corpus, adj, _queries(), _entries(), shards=s,
+                    beam_width=8, pool_size=8, quota=_vec(quota),
+                    max_steps=12, backend="ref", dedup="bitmap")
+                pts += 1
+        return pts
+
+    return Probe(
+        run_grid=run_grid,
+        count=lambda: sum(stepper_trace_count(s)
+                          for s in steppers.values()))
+
+
+# ---------------------------------------------------------------------------
+# 5. ShardedStepper plan/commit (the serving mesh's stage-2 bookkeeping)
+# ---------------------------------------------------------------------------
+def _build_stepper(shards: int) -> Probe:
+    from repro.core import beam
+
+    adj = _adjacency()
+    stepper = beam.ShardedStepper(shards=shards, n_points=_N, backend="ref")
+    configs = (("bitmap", None), ("sorted", 8), ("sorted", 16))
+
+    def drive(dedup, cap, quota, bw) -> None:
+        state, safe, keep = stepper.init(
+            _entries(), _vec(quota), pool_size=8, dedup=dedup,
+            set_capacity=cap)
+        ms = _vec((12,) * _B)
+        dists = jnp.where(safe >= 0, jnp.abs(safe).astype(jnp.float32),
+                          jnp.inf)
+        state = stepper.commit(state, safe, keep, dists)
+        state, safe, keep, _w = stepper.plan(
+            state, adj, _vec(quota), _vec(bw), ms)
+        dists = jnp.where(safe >= 0, jnp.abs(safe).astype(jnp.float32),
+                          jnp.inf)
+        state = stepper.commit(state, safe, keep, dists)
+        stepper.active(state, _vec(quota), _vec(bw), ms)
+        stepper.scored_count(state)
+
+    def run_grid() -> int:
+        pts = 0
+        for dedup, cap in configs:
+            for quota in _QUOTA_GRID:
+                for bw in _BW_GRID:
+                    drive(dedup, cap, quota, bw)
+                    pts += 1
+        return pts
+
+    return Probe(run_grid=run_grid,
+                 count=lambda: stepper_trace_count(stepper))
+
+
+# ---------------------------------------------------------------------------
+# 6. cover-tree level scan (fused per-level lax.scan programs)
+# ---------------------------------------------------------------------------
+def _build_covertree() -> Probe:
+    import numpy as np
+
+    from repro.core import beam, covertree
+
+    rng = np.random.default_rng(0)
+    pts = rng.standard_normal((40, 4)).astype(np.float32)
+    tree = covertree.build(pts)
+    flat = covertree.flatten(tree)
+    corpus = jnp.asarray(pts)
+    qs = jnp.asarray(rng.standard_normal((_B, 4)).astype(np.float32))
+    dist_fn = beam.fused_dist_fn(corpus, "l2", backend="ref")
+    entry_fns = (covertree._init_j, covertree._commit_j, covertree._plan_j,
+                 covertree._reopen_j, covertree._count_j)
+
+    # mixed quotas within one pow2 bucket (max 9..12 -> 16): operands only
+    quota_grid = ((12, 9, 12, 9), (10, 10, 10, 10), (11, 12, 9, 10))
+
+    def run_grid() -> int:
+        n = 0
+        for quota in quota_grid:
+            covertree.search_batched(
+                flat, dist_fn, qs, eps=0.5, k=4,
+                quota=np.asarray(quota, np.int32), pool_size=8,
+                backend="ref")
+            n += 1
+        return n
+
+    def count() -> int:
+        total = sum(jit_cache_size(f) for f in entry_fns)
+        # _level_fused's statics include the (hashed-by-identity) dist_fn —
+        # its cache growth is the pow2 n_chunks bucket count
+        total += jit_cache_size(covertree._level_fused)
+        return total
+
+    return Probe(run_grid=run_grid, count=count)
+
+
+# ---------------------------------------------------------------------------
+# 7. the fused train step (donation + double-donation live here)
+# ---------------------------------------------------------------------------
+def _build_train_step() -> Probe:
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"] + params["b"]
+        err = pred - batch["y"]
+        return jnp.mean(err * err), {}
+
+    params = {"w": jnp.ones((_D, 2), jnp.float32) * 0.01,
+              "b": jnp.zeros((2,), jnp.float32)}
+    tr = Trainer(loss_fn, params, AdamWConfig(), TrainerConfig(),
+                 donate=True)
+
+    def batch(i: int) -> dict:
+        x = jnp.sin(jnp.arange(8 * _D, dtype=jnp.float32) + i).reshape(8, _D)
+        return {"x": x, "y": jnp.cos(jnp.arange(16,
+                                                dtype=jnp.float32)).reshape(8, 2)}
+
+    def run_grid() -> int:
+        p, o, ef = tr.params, tr.opt_state, tr.ef
+        for i in range(3):
+            p, o, ef, _loss, _stats = tr._train_step(p, o, ef, batch(i))
+        return 3
+
+    args = (tr.params, tr.opt_state, tr.ef, batch(0))
+    return Probe(
+        run_grid=run_grid,
+        count=lambda: jit_cache_size(tr._train_step),
+        donation=(tr._train_step, args, (0, 1, 2)),
+        double_donation=(args, (0, 1, 2)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# 8-10. kernel merge/scoring dtype programs (the PR-5 upcast guard)
+# ---------------------------------------------------------------------------
+def _build_local_topk_bf16() -> Probe:
+    from repro.kernels import ops
+
+    ids = jnp.arange(_B * 16, dtype=jnp.int32).reshape(_B, 16)
+    dists = jnp.sin(jnp.arange(_B * 16,
+                               dtype=jnp.float32)).reshape(_B, 16)
+    dists = dists.astype(jnp.bfloat16)
+    fn = jax.jit(lambda i, d: ops.local_topk(i, d, 4))
+
+    def run_grid() -> int:
+        fn(ids, dists)
+        fn(ids, dists * 2)
+        return 2
+
+    return Probe(
+        run_grid=run_grid, count=lambda: jit_cache_size(fn),
+        dtype_checks=[(
+            "local_topk[bf16]", lambda i, d: ops.local_topk(i, d, 4),
+            (ids, dists),
+            # one sanctioned widening: the f32 *ordering view* of the keys
+            {"bfloat16->float32": 1},
+            (jnp.int32, jnp.bfloat16))])
+
+
+def _build_merge_pool_bf16() -> Probe:
+    from repro.kernels import ops
+
+    pool_ids = jnp.arange(_B * 8, dtype=jnp.int32).reshape(_B, 8)
+    pool_d = jnp.sin(jnp.arange(_B * 8, dtype=jnp.float32)
+                     ).reshape(_B, 8).astype(jnp.bfloat16)
+    expanded = jnp.zeros((_B, 8), bool)
+    cand_ids = (pool_ids + 100).astype(jnp.int32)
+    cand_d = (pool_d * 0.5).astype(jnp.bfloat16)
+    fn = jax.jit(lambda pi, pd, ex, ci, cd: ops.merge_pool_batch(
+        pi, pd, ex, ci, cd))
+
+    def run_grid() -> int:
+        fn(pool_ids, pool_d, expanded, cand_ids, cand_d)
+        fn(pool_ids, pool_d * 2, expanded, cand_ids, cand_d)
+        return 2
+
+    return Probe(
+        run_grid=run_grid, count=lambda: jit_cache_size(fn),
+        dtype_checks=[(
+            "merge_pool_batch[bf16]",
+            lambda pi, pd, ex, ci, cd: ops.merge_pool_batch(
+                pi, pd, ex, ci, cd),
+            (pool_ids, pool_d, expanded, cand_ids, cand_d),
+            {"bfloat16->float32": 1},
+            (jnp.int32, jnp.bfloat16, None))])
+
+
+def _build_wave_dists_bf16() -> Probe:
+    from repro.serve import engine as E
+
+    doc = jnp.sin(jnp.arange(_B * 8 * _D, dtype=jnp.float32)
+                  ).reshape(_B, 8, _D).astype(jnp.bfloat16)
+    q = jnp.cos(jnp.arange(_B * _D,
+                           dtype=jnp.float32)).reshape(_B, _D).astype(
+        jnp.bfloat16)
+
+    def run_grid() -> int:
+        E._wave_dists_j(doc, q)
+        E._wave_dists_j(doc * 2, q)
+        return 2
+
+    return Probe(
+        run_grid=run_grid,
+        count=lambda: jit_cache_size(E._wave_dists_j),
+        dtype_checks=[(
+            "wave_dists[bf16-tower]",
+            lambda d, qq: E._wave_dists_j(d, qq), (doc, q),
+            # contractual upcasts: ground-truth distances are f32 — both
+            # operands widen before the subtract
+            {"bfloat16->float32": 2},
+            (jnp.float32,))])
+
+
+# ---------------------------------------------------------------------------
+# the registry
+# ---------------------------------------------------------------------------
+REGISTRY: tuple[Program, ...] = (
+    Program(
+        name="beam.batched_greedy_search[bitmap]",
+        retrace_bound=1,
+        build=lambda: _build_batched_greedy("bitmap"),
+        notes="all budget knobs (B,) operands; one trace over the grid; "
+              "dedup-bitmap while-carry must alias"),
+    Program(
+        name="beam.batched_greedy_search[sorted]",
+        retrace_bound=2,
+        build=lambda: _build_batched_greedy("sorted"),
+        notes="one trace per pow2 set_capacity bucket {8, 16}"),
+    Program(
+        name="serve.stage2[init/plan/commit/active]",
+        retrace_bound=18,
+        build=_build_serve_stage2,
+        notes="3 dedup/cap configs x 5 entry points, plus commit_scores "
+              "compiling once per wave width (entry wave (B,2) vs plan "
+              "wave (B,4)); quotas/widths are operands"),
+    Program(
+        name="beam.sharded_mesh[shards=2,4]",
+        retrace_bound=8,
+        build=_build_sharded_mesh,
+        min_devices=4,
+        notes="stepper {init, commit, plan, active} keys per shard count, "
+              "one trace each; eager sharded_greedy_search rides the grid "
+              "at shards {1, 2, 4} as a crash canary"),
+    Program(
+        name="beam.ShardedStepper[shards=1]",
+        retrace_bound=18,
+        build=lambda: _build_stepper(1),
+        notes="3 dedup/cap configs x {init, commit, plan, active, "
+              "scored_count} program keys, one trace each"),
+    Program(
+        name="covertree.search_batched[fused-levels]",
+        retrace_bound=9,
+        build=_build_covertree,
+        notes="per-level plan/commit + pow2 n_chunks buckets of "
+              "_level_fused; quota vectors are operands"),
+    Program(
+        name="train.Trainer.step[donated]",
+        retrace_bound=1,
+        build=_build_train_step,
+        notes="one trace across batches; params/opt/ef donation must "
+              "alias; no donated leaf shared (double-donation guard)"),
+    Program(
+        name="kernels.local_topk[bf16]",
+        retrace_bound=1,
+        build=_build_local_topk_bf16,
+        notes="single sanctioned bf16->f32 ordering-view widening"),
+    Program(
+        name="kernels.merge_pool_batch[bf16]",
+        retrace_bound=1,
+        build=_build_merge_pool_bf16,
+        notes="single sanctioned bf16->f32 ordering-view widening"),
+    Program(
+        name="serve.wave_dists[bf16-tower]",
+        retrace_bound=1,
+        build=_build_wave_dists_bf16,
+        notes="contractual f32 upcast of tower embeddings (ground-truth "
+              "distances are f32)"),
+)
+
+
+def get(name: str) -> Program:
+    for p in REGISTRY:
+        if p.name == name:
+            return p
+    raise KeyError(name)

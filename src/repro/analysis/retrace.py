@@ -1,0 +1,65 @@
+"""Retrace auditor: budget knobs stay operands, statics stay bucketed.
+
+The serving path's compile-cost contract: per-request values (quota,
+beam_width, max_steps, expand_width — all ``(B,)`` vectors) ride as jit
+*operands*, so heterogeneous requests share one program; the only statics
+are shape-class knobs with deliberately bounded value sets (pow2
+``set_capacity`` buckets, ``expand_cap``, the dedup backend name, the
+frozen ``Backend``). The regression this audits: a kwarg silently
+becoming per-request-static, turning every distinct request into a fresh
+trace + XLA compile.
+
+The audit is behavioral, not structural: drive the *real* jitted entry
+point over a representative input grid and measure how much its trace
+cache grew. Registered programs declare the grid and the bound
+(:mod:`repro.analysis.registry`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+
+def jit_cache_size(jitted) -> int:
+    """Compiled-program cache entries of a ``jax.jit`` callable."""
+    return jitted._cache_size()
+
+
+@dataclasses.dataclass(frozen=True)
+class RetraceReport:
+    name: str
+    traces: int  # cache growth observed while running the grid
+    bound: int  # the program's declared maximum
+    grid_points: int
+
+    @property
+    def ok(self) -> bool:
+        return self.traces <= self.bound
+
+
+def audit_retrace(
+    name: str,
+    run_grid: Callable[[], int],
+    count: Callable[[], int],
+    bound: int,
+) -> RetraceReport:
+    """Run ``run_grid`` (returns #points driven) and bound the cache delta.
+
+    ``count`` reads the program's current trace count — for a plain jitted
+    function :func:`jit_cache_size`; for a :class:`ShardedStepper`, the sum
+    of cache sizes over its ``_programs`` plus the key count (each key is
+    itself one trace family). Counting the *delta* keeps the audit correct
+    when several registered programs share one module-level jitted entry.
+    """
+    before = count()
+    points = run_grid()
+    traces = count() - before
+    return RetraceReport(name=name, traces=traces, bound=bound,
+                         grid_points=points)
+
+
+def stepper_trace_count(stepper) -> int:
+    """Trace count of a ``ShardedStepper``: cached program keys × their
+    inner jit-cache sizes (a program that retraces per call shows up here
+    even though the key set stays fixed)."""
+    return sum(jit_cache_size(p) for p in stepper._programs.values())

@@ -1,0 +1,103 @@
+"""Drive the four checkers over the program registry; produce verdicts.
+
+``run_registry()`` is what both the CI ``analysis`` lane
+(``scripts/run_analysis.py``) and ``tests/test_analysis.py`` call: for
+every registered program, build its probe, audit retraces over the grid,
+lint the dtype flow, and verify donation/aliasing — skipping programs
+whose ``min_devices`` exceeds the host's.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.analysis.aliasing import (
+    DonationReport,
+    WhileCarryReport,
+    check_donation,
+    check_while_carry,
+    detect_double_donation,
+)
+from repro.analysis.dtypeflow import DtypeReport, check_dtype_flow
+from repro.analysis.registry import REGISTRY, Program
+from repro.analysis.retrace import RetraceReport, audit_retrace
+
+
+@dataclasses.dataclass
+class Verdict:
+    program: str
+    skipped: str | None = None  # reason, when not run
+    retrace: RetraceReport | None = None
+    dtype: list[DtypeReport] = dataclasses.field(default_factory=list)
+    donation: DonationReport | None = None
+    double_donation: list[tuple] | None = None  # offending pairs
+    while_carry: WhileCarryReport | None = None
+
+    @property
+    def ok(self) -> bool:
+        if self.skipped is not None:
+            return True
+        checks = [self.retrace is None or self.retrace.ok,
+                  all(d.ok for d in self.dtype),
+                  self.donation is None or self.donation.ok,
+                  not self.double_donation,
+                  self.while_carry is None or self.while_carry.ok]
+        return all(checks)
+
+    def failures(self) -> list[str]:
+        out = []
+        if self.skipped is not None:
+            return out
+        if self.retrace is not None and not self.retrace.ok:
+            out.append(f"retrace: {self.retrace.traces} traces over "
+                       f"{self.retrace.grid_points} grid points, bound "
+                       f"{self.retrace.bound}")
+        for d in self.dtype:
+            out.extend(f"dtype[{d.name}]: {v}" for v in d.violations)
+        if self.donation is not None and not self.donation.ok:
+            out.append(
+                f"donation: params {list(self.donation.missing)} declared "
+                "donated but absent from input_output_alias (silent copy)")
+        if self.double_donation:
+            out.append(f"double-donation: leaf pairs "
+                       f"{self.double_donation} share one buffer")
+        if self.while_carry is not None and not self.while_carry.ok:
+            out.append(
+                f"while-carry: {len(self.while_carry.copies)} per-step "
+                f"copy(s) of {self.while_carry.carry_shape} in the loop "
+                "body")
+        return out
+
+
+def run_program(prog: Program) -> Verdict:
+    if jax.local_device_count() < prog.min_devices:
+        return Verdict(
+            program=prog.name,
+            skipped=f"needs {prog.min_devices} devices, host has "
+                    f"{jax.local_device_count()}")
+    probe = prog.build()
+    v = Verdict(program=prog.name)
+    v.retrace = audit_retrace(prog.name, probe.run_grid, probe.count,
+                              prog.retrace_bound)
+    for label, fn, args, allow, expect in probe.dtype_checks:
+        v.dtype.append(check_dtype_flow(
+            fn, args, allow=allow, expect_out_dtypes=expect, name=label))
+    if probe.donation is not None:
+        jitted, args, nums = probe.donation
+        v.donation = check_donation(jitted, args, nums, jitted=jitted,
+                                    name=prog.name)
+    if probe.double_donation is not None:
+        args, nums = probe.double_donation
+        v.double_donation = detect_double_donation(args, nums)
+    if probe.while_carry is not None:
+        fn, args, shape = probe.while_carry
+        v.while_carry = check_while_carry(fn, args, carry_shape=shape,
+                                          name=prog.name)
+    return v
+
+
+def run_registry(names: list[str] | None = None) -> list[Verdict]:
+    progs = REGISTRY if names is None else [
+        p for p in REGISTRY if p.name in names]
+    return [run_program(p) for p in progs]

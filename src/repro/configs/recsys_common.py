@@ -129,7 +129,7 @@ def make_recsys_arch(
             pad = (-n) % 512
             if pad:
                 cand = jnp.concatenate(
-                    [cand, jnp.zeros((pad,) + cand.shape[1:], cand.dtype)])
+                    [cand, jnp.zeros((pad, *cand.shape[1:]), cand.dtype)])
             cand = shr.constrain_axis(cand, 0, axes=("data", "model"))
             scores = retrieval_fn(params, user, cand, cfg)
             return scores[:n]

@@ -1186,7 +1186,7 @@ class ShardedStepper:
             _per_query(beam_width, b), _per_query(max_steps, b),
             _per_query(expand_width, b))
         if has_level:
-            operands = operands + (_per_query(level, b),)
+            operands = (*operands, _per_query(level, b))
         return self._program(key, build)(*operands)
 
     def reopen(self, state: BatchedSearchState,

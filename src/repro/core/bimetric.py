@@ -361,7 +361,7 @@ def rerank_search(
     dd = jax.vmap(expensive_fn_batch)(q_expensive, cand)
     dd = jnp.where(cand >= 0, dd, jnp.inf)
     order = jnp.argsort(dd, axis=1, stable=True)
-    take = lambda a: jnp.take_along_axis(a, order, axis=1)[:, :k]  # noqa: E731
+    take = lambda a: jnp.take_along_axis(a, order, axis=1)[:, :k]
     n_D = (cand >= 0).sum(axis=1, dtype=jnp.int32)
     return BiMetricResult(
         ids=take(cand), dists=take(dd), d_calls=d_calls, D_calls=n_D

@@ -180,12 +180,14 @@ def _augment_and_prune(x, adjacency, *, alpha, cfg: VamanaConfig):
     return jnp.concatenate(out, axis=0)
 
 
-def build(x: Array, cfg: VamanaConfig = VamanaConfig()) -> VamanaIndex:
+def build(x: Array, cfg: VamanaConfig | None = None) -> VamanaIndex:
     """Construct a Vamana graph over corpus embeddings ``x`` (N, dim).
 
     Only the proxy metric (cfg.metric over ``x``) is evaluated — the expensive
     metric never appears here (Theorem 1.1, property 1).
     """
+    if cfg is None:
+        cfg = VamanaConfig()
     n = x.shape[0]
     r = cfg.max_degree
     key = jax.random.PRNGKey(cfg.seed)

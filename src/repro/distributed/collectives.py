@@ -79,14 +79,17 @@ def wave_gather_score(corpus_local, queries: Array, ids: Array, *,
     ``ids`` (B, K) is the replicated wave. Returns the replicated (B, K)
     distances, bit-exact vs the unsharded ``ops.gather_score`` under the
     same backend and residency (ids < 0 -> +inf). ``use_pallas`` /
-    ``interpret`` are the deprecated shims for ``backend``.
+    ``interpret`` are the deprecated shims for ``backend`` — resolved here
+    at the API boundary so only a concrete Backend flows inward.
     """
+    be = kernel_backend.resolve_backend(
+        backend, use_pallas=use_pallas, interpret=interpret,
+        _caller="collectives.wave_gather_score")
     rows = kernel_backend.corpus_rows(corpus_local)
     part = ops.gather_score_local(
         corpus_local, queries, ids,
         shard_offset(axis_name, rows.shape[0]),
-        metric=metric, backend=backend, use_pallas=use_pallas,
-        interpret=interpret)
+        metric=metric, backend=be)
     d = lax.psum(part, axis_name)
     return jnp.where(ids >= 0, d, jnp.inf)
 

@@ -361,7 +361,7 @@ def merge_pool_batch(pool_ids, pool_dists, expanded, cand_ids, cand_dists, *,
     exp = jnp.concatenate(
         [expanded, jnp.zeros(cand_ids.shape, dtype=bool)], axis=1)
     _, order = jax.lax.top_k(-d.astype(jnp.float32), p)
-    take = lambda a: jnp.take_along_axis(a, order, axis=1)  # noqa: E731
+    take = lambda a: jnp.take_along_axis(a, order, axis=1)
     return take(ids), take(d), take(exp)
 
 

@@ -190,7 +190,7 @@ def merge_pool_batch_ref(
     exp = jnp.concatenate(
         [expanded, jnp.zeros(cand_ids.shape, dtype=bool)], axis=1)
     order = jnp.argsort(d, axis=1, stable=True)
-    take = lambda a: jnp.take_along_axis(a, order, axis=1)[:, :p]  # noqa: E731
+    take = lambda a: jnp.take_along_axis(a, order, axis=1)[:, :p]
     return take(ids), take(d), take(exp)
 
 

@@ -139,7 +139,7 @@ def main() -> None:
     for arch, shape in todo:
         try:
             run_cell(arch, shape, multi_pod=args.multi_pod, out_path=args.out)
-        except Exception as e:  # noqa: BLE001 — report and continue
+        except Exception as e:  # report and continue
             failures.append((arch, shape, repr(e)))
             traceback.print_exc()
             _append(args.out, {

@@ -18,6 +18,11 @@ partitioned, optimized, per-device HLO):
   * collective bytes — Σ output bytes of all-reduce / all-gather /
                        reduce-scatter / all-to-all / collective-permute.
 
+The same text parser also exposes the module-header donation table
+(:func:`parse_input_output_alias`) and a while-body copy scanner
+(:func:`while_body_copies`) — the raw material for
+``repro.analysis.aliasing``'s donation/carry verifier.
+
 Shapes in this text are per-device; all numbers here are per chip.
 """
 from __future__ import annotations
@@ -25,14 +30,25 @@ from __future__ import annotations
 import dataclasses
 import re
 
-_DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
-    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
-    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+# element widths in BITS: s4/u4 are packed sub-byte types (2 elems/byte),
+# everything else is byte-aligned. shape_bytes rounds each shape up to
+# whole bytes, matching the physical buffer size.
+_DTYPE_BITS = {
+    "pred": 8, "s4": 4, "u4": 4, "s8": 8, "u8": 8, "s16": 16, "u16": 16,
+    "s32": 32, "u32": 32, "s64": 64, "u64": 64,
+    "f8e4m3": 8, "f8e4m3fn": 8, "f8e4m3fnuz": 8, "f8e4m3b11fnuz": 8,
+    "f8e5m2": 8, "f8e5m2fnuz": 8,
+    "bf16": 16, "f16": 16, "f32": 32, "f64": 64, "c64": 64, "c128": 128,
     "token": 0, "opaque": 0,
 }
 
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# dims may carry XLA's bounded-dynamic marker: f32[<=1024] is a bounded
+# dynamic dim whose buffer is the bound — parse it like a static 1024
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,<=]*)\]")
+
+
+def _dims(dims_str: str) -> list[int]:
+    return [int(d.lstrip("<=")) for d in dims_str.split(",") if d]
 _COLLECTIVES = (
     "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
     "collective-permute",
@@ -45,24 +61,22 @@ _SLICE_OPS = ("dynamic-slice", "gather", "slice")
 def shape_bytes(text: str) -> int:
     total = 0
     for dt, dims in _SHAPE_RE.findall(text):
-        if dt not in _DTYPE_BYTES:
+        if dt not in _DTYPE_BITS:
             continue
         n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
+        for d in _dims(dims):
+            n *= d
+        total += (n * _DTYPE_BITS[dt] + 7) // 8
     return total
 
 
 def shape_elems(text: str) -> int:
     for dt, dims in _SHAPE_RE.findall(text):
-        if dt not in _DTYPE_BYTES:
+        if dt not in _DTYPE_BITS:
             continue
         n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
+        for d in _dims(dims):
+            n *= d
         return n
     return 0
 
@@ -168,6 +182,100 @@ def _parse_comp(name: str, lines: list[str]) -> Comp:
                 root=root)
 
 
+@dataclasses.dataclass(frozen=True)
+class AliasEntry:
+    """One entry of the module header's ``input_output_alias`` table: flat
+    output index ``output_index`` reuses the buffer of flat parameter
+    ``param_number`` (``param_index`` subindexes a tuple-shaped parameter;
+    jax emits flat parameters, so it is normally empty)."""
+
+    output_index: tuple[int, ...]
+    param_number: int
+    param_index: tuple[int, ...]
+    kind: str  # "may-alias" | "must-alias"
+
+
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{([0-9,\s]*)\}:\s*\(([0-9]+),\s*\{([0-9,\s]*)\}(?:,\s*([a-z\-]+))?\)")
+
+
+def parse_input_output_alias(hlo_text: str) -> list[AliasEntry]:
+    """The donation table of an optimized ``compiled.as_text()`` module.
+
+    Buffers jax actually donated (and XLA accepted) show up here; a
+    ``donate_argnums`` declaration whose parameter is *absent* from this
+    table was silently dropped — XLA allocates a fresh output buffer and
+    the donation is a no-op. Returns [] when the module has no table.
+    """
+    m = re.search(r"input_output_alias=\{", hlo_text)
+    if not m:
+        return []
+    depth, i = 1, m.end()
+    while i < len(hlo_text) and depth:
+        ch = hlo_text[i]
+        if ch == "{":
+            depth += 1
+        elif ch == "}":
+            depth -= 1
+        i += 1
+    block = hlo_text[m.end():i - 1]
+
+    def _idx(s: str) -> tuple[int, ...]:
+        return tuple(int(x) for x in s.replace(" ", "").split(",") if x)
+
+    return [
+        AliasEntry(output_index=_idx(e.group(1)),
+                   param_number=int(e.group(2)),
+                   param_index=_idx(e.group(3)),
+                   kind=e.group(4) or "may-alias")
+        for e in _ALIAS_ENTRY_RE.finditer(block)
+    ]
+
+
+def while_body_copies(hlo_text: str,
+                      result_type_prefix: str | None = None) -> list[Instr]:
+    """``copy`` instructions reachable from any while-loop *body*.
+
+    When XLA cannot alias a while carry in place (the body still reads the
+    old value, or layouts disagree) copy-insertion materializes a per-step
+    ``copy`` of the carried buffer inside the body — the exact failure mode
+    the fused-loop dedup-bitmap contract rules out. Copies in the entry
+    computation (initial-carry setup, one-time) are NOT reported.
+    ``result_type_prefix`` filters to copies of one buffer shape, e.g.
+    ``"pred[4,64]"`` for a (B=4, N=64) bitmap carry.
+    """
+    comps = _split_computations(hlo_text)
+    bodies: set[str] = set()
+    for lines in comps.values():
+        for line in lines:
+            if re.search(r"\bwhile\(", line):
+                mb = re.search(r"body=%?([\w.\-]+)", line)
+                if mb:
+                    bodies.add(mb.group(1))
+    # copies may hide in fusions/calls the body invokes — walk the graph
+    seen: set[str] = set()
+    stack = list(bodies)
+    while stack:
+        name = stack.pop()
+        if name in seen or name not in comps:
+            continue
+        seen.add(name)
+        for line in comps[name]:
+            for mc in re.finditer(r"(to_apply|calls|body|condition)=%?([\w.\-]+)",
+                                  line):
+                stack.append(mc.group(2))
+    out = []
+    for name in sorted(seen):
+        for line in comps[name]:
+            ins = _parse_instr(line)
+            if ins is None or ins.op != "copy":
+                continue
+            if (result_type_prefix is None
+                    or ins.result_type.startswith(result_type_prefix)):
+                out.append(ins)
+    return out
+
+
 def _dot_flops(instr: Instr, symtab: dict[str, str]) -> float:
     mc = _CONTRACT_RE.search(instr.raw)
     out_elems = shape_elems(instr.result_type)
@@ -177,7 +285,7 @@ def _dot_flops(instr: Instr, symtab: dict[str, str]) -> float:
     mshape = _SHAPE_RE.search(lhs_type)
     if not mshape:
         return 2.0 * out_elems
-    dims = [int(d) for d in mshape.group(2).split(",") if d]
+    dims = _dims(mshape.group(2))
     k = 1
     for ci in mc.group(1).split(","):
         if ci and int(ci) < len(dims):

@@ -508,8 +508,8 @@ def prefill(params: dict, tokens: Array, cfg: TransformerConfig,
         h2, _, _ = _block(lp, h, positions, cfg, use_moe)
         pad = max_seq - s
         if pad > 0:
-            ck = jnp.pad(ck, [(0, 0), (0, pad)] + [(0, 0)] * (ck.ndim - 2))
-            cv = jnp.pad(cv, [(0, 0), (0, pad)] + [(0, 0)] * (cv.ndim - 2))
+            ck = jnp.pad(ck, [(0, 0), (0, pad), *[(0, 0)] * (ck.ndim - 2)])
+            cv = jnp.pad(cv, [(0, 0), (0, pad), *[(0, 0)] * (cv.ndim - 2)])
         return h2, (ck, cv)
 
     n_dense = cfg.first_dense if cfg.moe else cfg.n_layers

@@ -905,7 +905,7 @@ class BiMetricEngine:
         guaranteed drained before the wave's commit runs."""
         emb = self._emb_D
         if emb is None:
-            return np.zeros(safe_np.shape + (dim,), np.float32)
+            return np.zeros((*safe_np.shape, dim), np.float32)
         return emb[np.maximum(safe_np, 0)]
 
     # -------------------------------------------------------- wave coroutine
@@ -1362,7 +1362,7 @@ class BiMetricEngine:
                         pool.step()
                         pool.resolve_finished()
                         continue
-                except BaseException as exc:  # noqa: BLE001 — poisoned state
+                except BaseException as exc:  # deliberately broad — poisoned state
                     pool.fail_all(exc)
                     continue
                 # idle: no occupied slots, nothing admittable right now
@@ -1383,7 +1383,7 @@ class BiMetricEngine:
             item, fut = got
             try:
                 fut.set_result(self._service_tower(item))
-            except BaseException as exc:  # noqa: BLE001 — surfaced on drive
+            except BaseException as exc:  # deliberately broad — surfaced on drive
                 fut.set_exception(exc)
 
     # --------------------------------------------------------------- rerank

@@ -62,7 +62,7 @@ def quantized_psum(tree: Pytree, axis_name: str) -> Pytree:
         gf = g.astype(jnp.float32)
         orig = gf.shape[-1]
         pad = (-orig) % QBLOCK
-        gp = jnp.pad(gf, [(0, 0)] * (gf.ndim - 1) + [(0, pad)]) if pad else gf
+        gp = jnp.pad(gf, [*[(0, 0)] * (gf.ndim - 1), (0, pad)]) if pad else gf
         blocks = gp.reshape(*gp.shape[:-1], -1, QBLOCK)
         local_scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
         scale = jax.lax.pmax(local_scale, axis_name)  # shared scale (tiny)

@@ -29,7 +29,7 @@ QBLOCK = 128
 def _pad_last(x: Array, mult: int) -> Array:
     pad = (-x.shape[-1]) % mult
     if pad:
-        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        x = jnp.pad(x, [*[(0, 0)] * (x.ndim - 1), (0, pad)])
     return x
 
 

@@ -1,0 +1,240 @@
+"""Each program-contract checker must fire on a seeded violation and pass
+on the registered programs (the CI ``analysis`` lane's guarantee)."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import analysis as A
+from repro.analysis import astlint, registry, runner
+from repro.analysis.retrace import jit_cache_size
+from repro.train.optimizer import AdamWConfig, make_adamw
+
+
+# ------------------------------------------------------------ retrace audit
+def test_retrace_audit_fires_on_static_quota():
+    """The audited regression: a budget knob as a jit static — every
+    distinct request value becomes a fresh trace."""
+    @partial(jax.jit, static_argnums=(1,))
+    def step(x, quota):
+        return x[:quota].sum()
+
+    x = jnp.arange(16.0)
+
+    def run_grid():
+        for q in (3, 5, 7, 9):
+            step(x, q).block_until_ready()
+        return 4
+
+    rep = A.audit_retrace("seeded-static-quota", run_grid,
+                          lambda: jit_cache_size(step), bound=1)
+    assert not rep.ok
+    assert rep.traces == 4 and rep.grid_points == 4
+
+
+def test_retrace_audit_passes_on_operand_quota():
+    @jax.jit
+    def step(x, quota):
+        return jnp.where(jnp.arange(16) < quota, x, 0.0).sum()
+
+    x = jnp.arange(16.0)
+
+    def run_grid():
+        for q in (3, 5, 7, 9):
+            step(x, jnp.int32(q)).block_until_ready()
+        return 4
+
+    rep = A.audit_retrace("operand-quota", run_grid,
+                          lambda: jit_cache_size(step), bound=1)
+    assert rep.ok and rep.traces == 1
+
+
+# ------------------------------------------------------------ dtype flow
+def test_dtype_lint_fires_on_unsanctioned_upcast():
+    """The PR-5 bug shape: a merge that upcasts the payload itself."""
+    def merge(d):
+        return jnp.sort(d.astype(jnp.float32), axis=-1)
+
+    d = jnp.ones((4, 8), jnp.bfloat16)
+    rep = A.check_dtype_flow(merge, (d,), allow={}, name="seeded-upcast")
+    assert not rep.ok
+    assert rep.counts.get("bfloat16->float32", 0) >= 1
+
+
+def test_dtype_lint_fires_on_output_contract_drift():
+    def merge(d):
+        return jnp.sort(d.astype(jnp.float32), axis=-1)
+
+    d = jnp.ones((4, 8), jnp.bfloat16)
+    rep = A.check_dtype_flow(
+        merge, (d,), allow={"bfloat16->float32": 1},
+        expect_out_dtypes=(jnp.bfloat16,), name="seeded-drift")
+    assert rep.violations == [
+        "output[0] dtype float32, contract says bfloat16"]
+
+
+def test_dtype_lint_passes_within_allowance():
+    """An f32 ordering *view* whose result returns to storage dtype is the
+    sanctioned pattern."""
+    def merge(d):
+        return jnp.sort(d.astype(jnp.float32), axis=-1).astype(d.dtype)
+
+    d = jnp.ones((4, 8), jnp.bfloat16)
+    rep = A.check_dtype_flow(
+        merge, (d,), allow={"bfloat16->float32": 1},
+        expect_out_dtypes=(jnp.bfloat16,))
+    assert rep.ok
+
+
+# ------------------------------------------------------------ donation
+def test_donation_check_passes_on_real_alias():
+    rep = A.check_donation(lambda x: x + 1.0, (jnp.ones((8, 8)),), (0,),
+                           name="aliasable")
+    assert rep.ok
+    assert rep.donated == (0,) and 0 in rep.aliased
+
+
+def test_donation_check_fires_on_impossible_alias():
+    """Donating a buffer no output can reuse (shape mismatch): jax forwards
+    the donation, XLA drops it, and the declaration is a silent no-op."""
+    with pytest.warns(UserWarning, match="donat"):
+        rep = A.check_donation(lambda x: x.sum(), (jnp.ones((8, 8)),), (0,),
+                               name="seeded-drop")
+    assert not rep.ok
+    assert rep.missing == (0,)
+
+
+def test_double_donation_detector():
+    x = jnp.ones((4, 4))
+    assert A.detect_double_donation((x, jnp.array(x, copy=True)),
+                                    (0, 1)) == []
+    assert A.detect_double_donation((x, x), (0, 1)) == [(0, 1)]
+
+
+def test_optimizer_master_init_guards_double_donation():
+    """The optimizer's ``copy=True`` master init (train/optimizer.py) is the
+    production guard this detector encodes: a no-op astype would alias the
+    param buffer into the master weights and donate it twice."""
+    init, _ = make_adamw(AdamWConfig())
+    params = {"w": jnp.ones((4, 2), jnp.float32),
+              "b": jnp.zeros((2,), jnp.float32)}
+    state = init(params)
+    assert A.detect_double_donation((params, state), (0, 1)) == []
+    # seeded violation: exactly what the copy guards against
+    bad = state._replace(master=params)
+    dupes = A.detect_double_donation((params, bad), (0, 1))
+    assert len(dupes) == len(params)
+
+
+# ------------------------------------------------------------ while carry
+_BAD_WHILE_HLO = """\
+HloModule synthetic_failed_carry_alias
+
+%body.1 (carry: (pred[4,64], s32[])) -> (pred[4,64], s32[]) {
+  %carry = (pred[4,64], s32[]) parameter(0)
+  %bm = pred[4,64] get-tuple-element((pred[4,64], s32[]) %carry), index=0
+  %i = s32[] get-tuple-element((pred[4,64], s32[]) %carry), index=1
+  %bm.copy = pred[4,64]{1,0} copy(pred[4,64]{1,0} %bm)
+  ROOT %t = (pred[4,64], s32[]) tuple(pred[4,64] %bm.copy, s32[] %i)
+}
+
+%cond.1 (carry: (pred[4,64], s32[])) -> pred[] {
+  %carry = (pred[4,64], s32[]) parameter(0)
+  ROOT %lt = pred[] constant(false)
+}
+
+ENTRY %main.2 (p0: pred[4,64]) -> pred[4,64] {
+  %p0 = pred[4,64] parameter(0)
+  %init.copy = pred[4,64] copy(pred[4,64] %p0)
+  %zero = s32[] constant(0)
+  %t0 = (pred[4,64], s32[]) tuple(pred[4,64] %init.copy, s32[] %zero)
+  %w = (pred[4,64], s32[]) while((pred[4,64], s32[]) %t0), \
+condition=%cond.1, body=%body.1
+  ROOT %out = pred[4,64] get-tuple-element((pred[4,64], s32[]) %w), index=0
+}
+"""
+
+
+def test_while_carry_fires_on_body_copy():
+    """A per-step copy of the carried bitmap inside the loop body is the
+    failed-aliasing signature; the entry computation's one-time initial
+    copy must NOT count."""
+    rep = A.check_while_carry(_BAD_WHILE_HLO, carry_shape="pred[4,64]",
+                              name="seeded-copy")
+    assert not rep.ok
+    assert len(rep.copies) == 1 and "bm.copy" in rep.copies[0]
+
+
+def test_while_carry_clean_on_real_inplace_loop():
+    def f(x):
+        return jax.lax.fori_loop(
+            0, 5, lambda i, c: c.at[:, i].set(True), x)
+
+    x = jnp.zeros((4, 64), jnp.bool_)
+    rep = A.check_while_carry(f, (x,), carry_shape="pred[4,64]")
+    assert rep.ok
+
+
+# ------------------------------------------------------------ AST lint
+def test_astlint_fires_on_retired_kwarg():
+    src = "ops.gather_score(view, qs, ids, use_pallas=True)\n"
+    v = astlint.lint_source(src, "src/repro/core/seeded.py")
+    assert [x.rule for x in v] == ["retired-kwarg"]
+    assert v[0].line == 1
+
+
+def test_astlint_allows_retired_kwargs_at_the_funnel():
+    src = "be = resolve_backend(None, use_pallas=True, interpret=False)\n"
+    assert astlint.lint_source(src, "src/repro/core/seeded.py") == []
+
+
+def test_astlint_fires_on_quantize_flow():
+    src = "engine.search(qs, quantize='int8')\n"
+    v = astlint.lint_source(src, "src/repro/serve/seeded.py")
+    assert [x.rule for x in v] == ["quantize-flow"]
+
+
+def test_astlint_quantize_rules():
+    ok = "view = as_corpus_view(x, quantize='int8')\n"
+    assert astlint.lint_source(ok, "src/repro/core/seeded.py") == []
+    # stripping residency (the stage-2 boundary) is always legal
+    strip = "be = dataclasses.replace(be1, quantize=None)\n"
+    assert astlint.lint_source(strip, "src/repro/core/seeded.py") == []
+
+
+def test_astlint_fires_on_raw_knob_literal():
+    src = "state = stepper.init(ids, dedup='bitmap')\n"
+    v = astlint.lint_source(src, "src/repro/core/seeded.py")
+    assert [x.rule for x in v] == ["raw-knob-literal"]
+    ok = "be = resolve_backend(backend='ref')\n"
+    assert astlint.lint_source(ok, "src/repro/core/seeded.py") == []
+
+
+def test_astlint_shim_layer_is_exempt():
+    src = "dispatch(use_pallas=True, dedup='bitmap', quantize='int8')\n"
+    assert astlint.lint_source(src, "src/repro/kernels/ops.py") == []
+
+
+def test_astlint_repo_is_clean():
+    assert astlint.lint_paths(["src/repro"]) == []
+
+
+# ------------------------------------------------------------ the registry
+def test_registry_programs_pass_all_checkers():
+    """The CI analysis lane's exact assertion: every registered program is
+    green on every checker (programs needing more devices than the host
+    has report a skip, which is not a failure)."""
+    verdicts = runner.run_registry()
+    assert len(verdicts) >= 8
+    bad = {v.program: v.failures() for v in verdicts if not v.ok}
+    assert not bad, bad
+
+
+def test_runner_skips_programs_needing_more_devices():
+    prog = registry.get("beam.sharded_mesh[shards=2,4]")
+    if jax.local_device_count() >= prog.min_devices:
+        pytest.skip("host has enough devices; skip path not reachable")
+    v = runner.run_program(prog)
+    assert v.skipped is not None and v.ok
+    assert v.retrace is None

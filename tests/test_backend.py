@@ -98,7 +98,7 @@ def test_corpus_view_zero_row_padding():
     assert ops.as_corpus_view(view) is view
     qs = jnp.asarray(rng.normal(size=(2, 8)).astype(np.float32))
     ids = jnp.array([[0, 6, 7], [7, 3, -1]], jnp.int32)
-    for be in ("ref",) + FAST_BACKENDS:
+    for be in ("ref", *FAST_BACKENDS):
         d = np.asarray(ops.gather_score(view, qs, ids, metric="cosine",
                                         backend=be))
         assert np.isfinite(d[np.asarray(ids) >= 0]).all(), be

@@ -125,10 +125,10 @@ def test_batched_matches_legacy_and_wrapper(quota):
         beam_width=8, pool_size=16, quota=quota, max_steps=100))(qs)
 
     for b in range(5):
-        legacy = jax.jit(lambda q: _legacy_beam.greedy_search(
+        legacy = jax.jit(lambda q, b=b: _legacy_beam.greedy_search(
             lambda ids: em.dists(q, ids), adj, entries[b], n_points=128,
             beam_width=8, pool_size=16, quota=quota, max_steps=100))(qs[b])
-        single = jax.jit(lambda q: greedy_search(
+        single = jax.jit(lambda q, b=b: greedy_search(
             lambda ids: em.dists(q, ids), adj, entries[b], n_points=128,
             beam_width=8, pool_size=16, quota=quota, max_steps=100))(qs[b])
         for res in (legacy, single):

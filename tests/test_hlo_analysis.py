@@ -44,6 +44,27 @@ def test_shape_bytes_parser():
     assert H.shape_bytes("pred[]") == 1 * 1
 
 
+def test_shape_bytes_fp8_and_packed_subbyte():
+    # fp8 families are one byte per element
+    assert H.shape_bytes("f8e4m3[16]{0}") == 16
+    assert H.shape_bytes("f8e4m3b11fnuz[7]") == 7
+    assert H.shape_bytes("f8e5m2fnuz[3,5]") == 15
+    # s4/u4 pack two elements per byte, rounding odd counts up
+    assert H.shape_bytes("s4[10]{0}") == 5
+    assert H.shape_bytes("u4[3]") == 2
+    assert H.shape_bytes("u4[]") == 1  # a scalar still occupies one byte
+
+
+def test_shape_bytes_bounded_dims_and_tuple_layouts():
+    # regression: bounded dynamic dims (f32[<=1024]) used to fall out of
+    # _SHAPE_RE entirely, silently dropping the buffer from byte counts —
+    # the bound IS the physical buffer size
+    assert H.shape_bytes("f32[<=1024]{0}") == 1024 * 4
+    assert H.shape_bytes("(f32[<=1024]{0}, s32[])") == 1024 * 4 + 4
+    # layout annotations must never parse as shapes of their own
+    assert H.shape_bytes("bf16[<=64,128]{1,0}") == 64 * 128 * 2
+
+
 def test_bytes_reasonable_for_elementwise():
     def f(x):
         return jnp.tanh(x) * 2.0 + 1.0
@@ -53,6 +74,67 @@ def test_bytes_reasonable_for_elementwise():
     nbytes = 1024 * 1024 * 4
     # fused chain: ~read once + write once
     assert nbytes <= an["bytes_per_device"] <= 6 * nbytes
+
+
+def test_parse_input_output_alias_header():
+    text = ("HloModule jit_step, input_output_alias={ {0}: (0, {}, "
+            "may-alias), {1}: (2, {}, must-alias) }, "
+            "entry_computation_layout={...}")
+    entries = H.parse_input_output_alias(text)
+    assert [(e.output_index, e.param_number, e.kind) for e in entries] == [
+        ((0,), 0, "may-alias"), ((1,), 2, "must-alias")]
+    assert H.parse_input_output_alias("HloModule no_table") == []
+
+
+def test_parse_input_output_alias_real_donation():
+    f = jax.jit(lambda x, y: (x + 1.0, y * 2.0), donate_argnums=(0, 1))
+    x = jnp.ones((8, 8), jnp.float32)
+    y = jnp.ones((8, 8), jnp.float32)
+    text = f.lower(x, y).compile().as_text()
+    assert {e.param_number
+            for e in H.parse_input_output_alias(text)} == {0, 1}
+
+
+_WHILE_HLO = """\
+HloModule synthetic
+
+%fused.1 (pp: pred[4,64]) -> pred[4,64] {
+  %pp = pred[4,64] parameter(0)
+  ROOT %hidden.copy = pred[4,64] copy(pred[4,64] %pp)
+}
+
+%body.1 (carry: (pred[4,64], s32[])) -> (pred[4,64], s32[]) {
+  %carry = (pred[4,64], s32[]) parameter(0)
+  %bm = pred[4,64] get-tuple-element((pred[4,64], s32[]) %carry), index=0
+  %i = s32[] get-tuple-element((pred[4,64], s32[]) %carry), index=1
+  %f = pred[4,64] fusion(pred[4,64] %bm), kind=kLoop, calls=%fused.1
+  ROOT %t = (pred[4,64], s32[]) tuple(pred[4,64] %f, s32[] %i)
+}
+
+%cond.1 (carry: (pred[4,64], s32[])) -> pred[] {
+  %carry = (pred[4,64], s32[]) parameter(0)
+  ROOT %lt = pred[] constant(false)
+}
+
+ENTRY %main.2 (p0: pred[4,64]) -> pred[4,64] {
+  %p0 = pred[4,64] parameter(0)
+  %init.copy = pred[4,64] copy(pred[4,64] %p0)
+  %zero = s32[] constant(0)
+  %t0 = (pred[4,64], s32[]) tuple(pred[4,64] %init.copy, s32[] %zero)
+  %w = (pred[4,64], s32[]) while((pred[4,64], s32[]) %t0), \
+condition=%cond.1, body=%body.1
+  ROOT %out = pred[4,64] get-tuple-element((pred[4,64], s32[]) %w), index=0
+}
+"""
+
+
+def test_while_body_copies_walks_fusions_skips_entry():
+    """Copies hiding in fusions the loop body calls ARE per-step copies;
+    the entry computation's one-time initial-carry copy is not."""
+    copies = H.while_body_copies(_WHILE_HLO, result_type_prefix="pred[4,64]")
+    assert [c.name for c in copies] == ["hidden.copy"]
+    # shape filter: no s32 copies exist anywhere
+    assert H.while_body_copies(_WHILE_HLO, result_type_prefix="s32[") == []
 
 
 def test_roofline_terms_structure():

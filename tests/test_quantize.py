@@ -72,7 +72,7 @@ def test_fp8_round_trip_error_bound(mode):
     assert (err <= bound).all(), (err / np.maximum(bound, 1e-12)).max()
 
 
-@pytest.mark.parametrize("mode", ("int8",) + FP8_MODES)
+@pytest.mark.parametrize("mode", ("int8", *FP8_MODES))
 def test_zero_rows_stay_exact(mode):
     """A zero row must dequantize to *exact* zeros (norm 0, finite inverse
     norm, cosine distance exactly 1.0) in every backend — this is what
@@ -166,7 +166,7 @@ def test_view_built_exactly_once_per_corpus(monkeypatch):
 
 
 # ------------------------------------------------------------ parity grid
-@pytest.mark.parametrize("mode", ("int8",) + FP8_MODES)
+@pytest.mark.parametrize("mode", ("int8", *FP8_MODES))
 @pytest.mark.parametrize("metric", ("sqeuclidean", "l2", "ip", "cosine"))
 def test_quantized_op_grid_matches_quant_oracle(mode, metric):
     """Op-level grid: all three backends score a quantized view identically
