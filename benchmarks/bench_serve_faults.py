@@ -1,0 +1,166 @@
+"""Fault-tolerant serving: goodput and tail latency under injected faults.
+
+Drives the ``BiMetricEngine`` slot pool through seeded fault schedules
+(``repro.serve.faults.FaultPlan``) and measures what the fault-tolerance
+layer buys:
+
+* **transient sweep** — the same 24-request burst at injected transient
+  drain-fault rates {0%, 10%, 30%}. Bounded retry + the doc cache's
+  write-after-success idempotence mean every recovered request is
+  **bit-exact** vs the fault-free synchronous reference;
+  ``goodput_under_faults`` (CI-gated at 1.0, zero tolerance) is the
+  fraction of requests at the 10% rate that resolve full-quality and
+  bit-exact — the chaos-suite claim as a number. Per-rate p95
+  submit→resolve latency rides in the artifact (ungated: retries trade
+  tail latency for goodput by design).
+
+* **degraded quality** — a persistent expensive-tower outage under
+  ``on_tower_failure="degrade"``: every request resolves with its stage-1
+  proxy ranking (``ServeStats.degraded``). ``degraded_recall_at_10``
+  (CI-gated, direction higher) is recall@10 of those proxy-only answers
+  against the fault-free full bi-metric results — the paper's premise
+  (arXiv 2406.02891: the cheap metric C-approximates the ground truth)
+  priced as an operational fallback. The two towers here are small
+  random-init transformers, so this is the *band* the degraded mode
+  lives in on this harness, not a model-quality claim.
+
+Writes ``BENCH_serve_faults.json`` (via benchmarks/run.py, or directly
+when executed as a script).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, write_bench_json
+from repro.configs import qwen3_0_6b
+from repro.models import transformer as T
+from repro.serve import (BiMetricEngine, EmbedTower, FaultPlan, FaultSpec,
+                         SearchRequest)
+
+N_DOCS = 256
+SEQ = 12
+N_REQUESTS = 24
+SLOTS = 8
+QUOTA = 24
+K = 10
+FAULT_RATES = (0.0, 0.10, 0.30)
+GOODPUT_RATE = 0.10  # the gated point of the sweep
+SEED = 17
+
+
+def _build_parts():
+    key = jax.random.PRNGKey(0)
+    cheap_cfg = qwen3_0_6b.smoke()
+    exp_cfg = T.TransformerConfig(
+        name="exp-bench", n_layers=4, d_model=128, n_heads=8, n_kv_heads=8,
+        head_dim=16, d_ff=256, vocab=cheap_cfg.vocab, embed_dim=64)
+    cheap = EmbedTower(T.init_params(key, cheap_cfg), cheap_cfg)
+    expensive = EmbedTower(
+        T.init_params(jax.random.fold_in(key, 1), exp_cfg), exp_cfg)
+    rng = np.random.default_rng(0)
+    corpus = rng.integers(0, cheap_cfg.vocab, (N_DOCS, SEQ), dtype=np.int32)
+    queries = corpus[rng.integers(0, N_DOCS, N_REQUESTS)].copy()
+    queries[:, :4] = rng.integers(0, cheap_cfg.vocab, (N_REQUESTS, 4))
+    reqs = [SearchRequest(tokens=q, quota=QUOTA, k=K) for q in queries]
+    return cheap, expensive, corpus, reqs
+
+
+def _burst(eng: BiMetricEngine, reqs):
+    eng.reset_doc_cache()
+    futs = [eng.submit(r) for r in reqs]
+    return [f.result(timeout=600) for f in futs]
+
+
+def run() -> dict:
+    cheap, expensive, corpus, reqs = _build_parts()
+
+    # fault-free synchronous reference: the bit-exactness + recall anchor
+    ref_eng = BiMetricEngine(cheap, expensive, corpus)
+    ref = ref_eng.query_batch(reqs)
+    ref_eng.close()
+
+    sweep = []
+    goodput_under_faults = 0.0
+    for rate in FAULT_RATES:
+        plan = (FaultPlan(seed=SEED, drain=FaultSpec(rate=rate))
+                if rate > 0 else None)
+        eng = BiMetricEngine(cheap, expensive, corpus, slots=SLOTS,
+                             faults=plan, retry_backoff_ms=2.0)
+        _burst(eng, reqs[:SLOTS])  # warm (jit, threads), fault stream rides
+        res = _burst(eng, reqs)
+        lats = np.array([r.stats.latency_ms for r in res])
+        good = sum(
+            1 for got, want in zip(res, ref)
+            if not got.stats.degraded
+            and np.array_equal(got.ids, want.ids)
+            and np.array_equal(got.dists, want.dists))
+        goodput = good / len(reqs)
+        c = eng.counters()
+        row = {
+            "fault_rate": rate,
+            "goodput": goodput,
+            "latency_p50_ms": float(np.percentile(lats, 50)),
+            "latency_p95_ms": float(np.percentile(lats, 95)),
+            "retries": c.retries,
+            "tower_failures": c.tower_failures,
+            "faults_fired": plan.fired("drain") if plan else 0,
+        }
+        sweep.append(row)
+        if rate == GOODPUT_RATE:
+            goodput_under_faults = goodput
+        emit(f"serve_faults/rate_{int(100 * rate)}",
+             row["latency_p95_ms"] * 1e3,
+             f"p95_us;goodput={goodput:.3f};retries={c.retries}")
+        eng.close()
+
+    # persistent outage, proxy-only serving: price the degraded mode
+    plan = FaultPlan(seed=SEED,
+                     drain=FaultSpec(rate=1.0, mode="persistent"),
+                     embed_queries=FaultSpec(rate=1.0, mode="persistent"))
+    eng = BiMetricEngine(cheap, expensive, corpus, slots=SLOTS, faults=plan,
+                         on_tower_failure="degrade", retry_backoff_ms=2.0,
+                         breaker_threshold=1, breaker_cooldown_ms=60_000.0)
+    res = _burst(eng, reqs)
+    assert all(r.stats.degraded for r in res), "outage must degrade all"
+    recalls = [
+        len(set(got.ids.tolist()) & set(want.ids.tolist())) / K
+        for got, want in zip(res, ref)]
+    degraded_recall = float(np.mean(recalls))
+    degraded_lats = np.array([r.stats.latency_ms for r in res])
+    health = eng.health()
+    eng.close()
+
+    emit("serve_faults/goodput_under_faults", goodput_under_faults * 100,
+         f"pct_at_rate_{int(100 * GOODPUT_RATE)}")
+    emit("serve_faults/degraded_recall_at_10", degraded_recall * 100,
+         f"pct;breaker={health['breaker_state']}")
+
+    return {
+        "n_requests": N_REQUESTS,
+        "slots": SLOTS,
+        "quota": QUOTA,
+        "fault_rates": list(FAULT_RATES),
+        "sweep": sweep,
+        "goodput_under_faults": goodput_under_faults,
+        "degraded_recall_at_10": degraded_recall,
+        "degraded_latency_p95_ms": float(np.percentile(degraded_lats, 95)),
+        "degraded_all": 1.0 if all(r.stats.degraded for r in res) else 0.0,
+        "breaker_opens": int(health["breaker_opens"]),
+    }
+
+
+if __name__ == "__main__":
+    from benchmarks.common import drain_emitted
+
+    drain_emitted()
+    _t0 = time.time()
+    _result = run()
+    write_bench_json("serve_faults", {  # same schema as benchmarks/run.py
+        "bench": "serve_faults",
+        "wall_seconds": time.time() - _t0,
+        "rows": drain_emitted(),
+        "result": _result,
+    })

@@ -28,7 +28,8 @@ sys.path.insert(0, _ROOT)  # the `benchmarks` package itself, in script mode
 def main() -> None:
     from benchmarks import (bench_bimetric, bench_covertree, bench_model_gap,
                             bench_search_perf, bench_seeding,
-                            bench_serve_async, bench_table1, common)
+                            bench_serve_async, bench_serve_faults,
+                            bench_table1, common)
 
     benches = [
         ("table1", "table1", bench_table1.run),
@@ -38,6 +39,7 @@ def main() -> None:
         ("covertree", "covertree", bench_covertree.run),
         ("perf", "search_perf", bench_search_perf.run),
         ("serve_async", "serve_async", bench_serve_async.run),
+        ("serve_faults", "serve_faults", bench_serve_faults.run),
     ]
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None, metavar="SLUG[,SLUG...]",

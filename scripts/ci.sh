@@ -18,6 +18,11 @@
 # analysis lane: lint-contracts plus the registry checkers (retrace audit,
 # dtype-flow lint, donation/aliasing verification) over 8 forced host
 # devices, as the CI `analysis` job does.
+#
+# `scripts/ci.sh --faults [pytest args...]` runs the chaos lane: the
+# fault-injection suite (tests/test_serve_faults.py — failure isolation,
+# retry/breaker, deadlines, degradation, and the sharded {1,2,4} chaos
+# parity test) over 8 forced host devices, as the CI `faults` job does.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -35,6 +40,14 @@ if [[ "${1:-}" == "--analysis" ]]; then
   XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python scripts/run_analysis.py "$@"
+  exit 0
+fi
+
+if [[ "${1:-}" == "--faults" ]]; then
+  shift
+  XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -q tests/test_serve_faults.py "$@"
   exit 0
 fi
 

@@ -535,6 +535,28 @@ def reset_expanded(state: BatchedSearchState, rows: Array) -> BatchedSearchState
     )
 
 
+def early_resolve(state: BatchedSearchState, rows: Array) -> BatchedSearchState:
+    """Close the frontier on the masked ``rows`` — the inverse of
+    :func:`reset_expanded`: every pool lane is marked expanded, so
+    :func:`active_mask` reports the row inactive regardless of its
+    remaining quota/step budget.
+
+    This is the serving layer's graceful-degradation primitive: a slot
+    being resolved early (mid-flight deadline expiry, or proxy-only
+    results while the expensive tower is open-circuit) is frozen in the
+    resident state so no later plan re-expands it and no level-descent
+    ``reset_expanded`` can resurrect it. Pools, scores, dedup state and
+    call counters are untouched — the already-scored pool prefix stays
+    readable for the degraded answer — and non-masked rows pass through
+    bit-for-bit. ``rows`` is a (B,) bool mask (or scalar).
+    """
+    b = state.pool_ids.shape[0]
+    rows = jnp.broadcast_to(jnp.asarray(rows, bool), (b,))
+    return state._replace(
+        expanded=jnp.where(rows[:, None], True, state.expanded)
+    )
+
+
 def plan_step(
     state: BatchedSearchState,
     adjacency: Array,

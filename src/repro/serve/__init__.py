@@ -56,8 +56,71 @@ cancelled / deadline_misses and instantaneous depth/occupancy).
 ``close()`` cancels still-queued requests (``CancelledError``) instead of
 flushing them; admitted slots still resolve. The device-side kernel route
 is the ``backend=`` knob (``repro.kernels``).
+
+Failure semantics
+-----------------
+The contract is **failures are scoped to requests, never to the engine**,
+with four nested isolation domains (async path):
+
+* **one request** — malformed input (bad token shape) fails only that
+  request's future at admission.
+* **one admission group** — a cheap-tower or stage-1 error while staging a
+  group fails that group's futures with ``AdmissionFailed`` (the original
+  exception on ``__cause__``); resident slots never notice.
+* **the tower lane** — an expensive-tower failure (query embed or document
+  drain) is retried up to ``tower_retries`` times with exponential backoff
+  starting at ``retry_backoff_ms`` (transient errors only: an exception
+  carrying ``transient=False`` — or a ``TowerTimeout``, a call that blew
+  ``drain_timeout_ms`` — is never retried inline). A retried drain is
+  idempotent: the document cache is written only after a successful
+  forward pass, so recovered runs are **bit-exact** vs fault-free runs.
+  When the lane gives up, the ``on_tower_failure`` policy decides the
+  affected residents' fate — ``"fail"`` (default) fails each future with
+  ``TowerFailure`` chaining the original traceback; ``"degrade"`` resolves
+  each with its stage-1 proxy ranking, ``ServeStats.degraded=True``.
+  Either way the engine keeps serving. ``breaker_threshold`` consecutive
+  failures open a circuit breaker for ``breaker_cooldown_ms`` (then
+  half-open probes): while open, tower calls are refused without being
+  attempted — under ``"degrade"`` the engine serves proxy-only without
+  occupying slots; under ``"fail"`` requests shed fast with
+  ``TowerFailure``.
+* **the engine** — only an error *outside* those domains (poisoned
+  resident device state) reaches ``fail_all``: every resident + staged
+  future fails with ``EngineFailure`` (original on ``__cause__``), the
+  resident state is dropped, and the next admission re-initializes it.
+  ``KeyboardInterrupt`` / ``SystemExit`` fail the residents and then
+  re-raise — they are never converted into a served error.
+
+``deadline_ms`` is enforced at three points: queued expiry and
+admission-pop expiry fail the future with ``DeadlineExceeded`` (the
+request never ran, so there is nothing to degrade to), and **mid-flight**
+expiry — checked every drive iteration and every 20 ms inside a tower
+wait when deadlines are resident — follows ``on_tower_failure``:
+``"degrade"`` resolves the slot with its proxy ranking (counted in both
+``deadline_misses`` and ``degraded``), ``"fail"`` raises
+``DeadlineExceeded``. Expired rows close their frontier in place
+(``repro.core.beam.early_resolve``); co-resident rows are untouched
+bit-for-bit.
+
+**Degraded-result guarantee.** A degraded result is the stage-1 proxy
+ranking under the cheap metric ``d``. The paper's premise (arXiv
+2406.02891) is that ``d`` is a C-approximation of the ground-truth metric
+``D`` — ``D(x,y)/C <= d(x,y) <= C·D(x,y)`` — so proxy-only answers carry
+the same bounded quality loss the bi-metric framework's stage 1 does:
+every returned id is within ``C²`` of optimal under ``D``. Degradation is
+the paper's accuracy/efficiency knob repurposed as an operational
+fallback, and ``degraded=True`` marks exactly which answers took it
+(cover-tree rows have no proxy stage; they degrade to their current
+D-scored pool prefix mid-flight, and shed fast when the breaker is open).
+
+Fault injection for tests/benchmarks is ``repro.serve.faults.FaultPlan``
+(seeded, deterministic, threaded through ``BiMetricEngine(faults=...)``);
+``BiMetricEngine.health()`` snapshots breaker state + counters.
 """
-from repro.serve.engine import (BiMetricEngine,  # noqa: F401
-                                DeadlineExceeded, EmbedTower, EngineCounters,
-                                SearchRequest, SearchResult, ServeFuture,
-                                ServeStats)
+from repro.serve.engine import (AdmissionFailed,  # noqa: F401
+                                BiMetricEngine, DeadlineExceeded, EmbedTower,
+                                EngineCounters, EngineFailure, SearchRequest,
+                                SearchResult, ServeFuture, ServeStats,
+                                TowerFailure, TowerTimeout)
+from repro.serve.faults import (CircuitBreaker,  # noqa: F401
+                                FaultPlan, FaultSpec, InjectedFault)

@@ -68,16 +68,57 @@ from repro.core import beam, covertree, distances, vamana
 from repro.distributed import sharding
 from repro.kernels import ops
 from repro.models import transformer as T
+from repro.serve import faults as serve_faults
 
 Array = jax.Array
 
 
 class DeadlineExceeded(Exception):
-    """A request's ``deadline_ms`` expired while it was still queued.
+    """A request's ``deadline_ms`` expired before it resolved.
 
-    Raised into the request's future by the admission layer; a request that
-    was already admitted to a slot when its deadline passed still resolves
-    normally (and is counted in ``EngineCounters.deadline_misses``)."""
+    Raised into the request's future by the admission layer (expiry while
+    queued) or, under ``on_tower_failure="fail"``, by the drive loop's
+    mid-flight enforcement (expiry while resident in a slot — checked on
+    every step *and* while a tower drain is in flight, so a hung drain
+    cannot stall it). Under ``on_tower_failure="degrade"`` a mid-flight
+    expiry resolves the request with proxy-ranked results
+    (``ServeStats.degraded``) instead. Every expiry is counted in
+    ``EngineCounters.deadline_misses``."""
+
+
+class TowerFailure(RuntimeError):
+    """The expensive-tower lane gave up on a request.
+
+    Raised into affected futures under ``on_tower_failure="fail"`` when
+    the lane's bounded retries are exhausted, a failure is non-retryable,
+    the drain timed out, or the circuit breaker is open. ``__cause__``
+    carries the original tower exception with its traceback. Only the
+    affected requests fail — the engine keeps serving."""
+
+
+class TowerTimeout(TowerFailure):
+    """A tower-lane call exceeded ``drain_timeout_ms`` (hung lane).
+
+    Never retried inline (the lane is serial — a retry would queue behind
+    the hung call); the breaker records the failure and the
+    ``on_tower_failure`` policy resolves the resident requests."""
+
+
+class AdmissionFailed(RuntimeError):
+    """A request's admission group failed before slot residency.
+
+    A cheap-tower embed or stage-1 error fails only that group's futures
+    (``__cause__`` carries the original exception); resident slots and
+    later admissions are untouched."""
+
+
+class EngineFailure(RuntimeError):
+    """Last resort: an unexpected drive-loop error that may have poisoned
+    the resident device state. Every resident/staged future fails with
+    this (``__cause__`` carries the original traceback) and the state is
+    dropped; the engine itself keeps serving — the next admission
+    re-initializes a fresh resident state. Tower failures never take this
+    path (they have isolation paths: retry, breaker, policy)."""
 
 
 # --------------------------------------------------------------------------
@@ -136,6 +177,14 @@ class ServeStats:
     # admission-time snapshots (async slot drive only)
     slot_occupancy: int = 0
     queue_depth: int = 0
+    # True when the graceful-degradation path resolved this request (tower
+    # open-circuit, tower-down policy, or mid-flight deadline expiry under
+    # on_tower_failure="degrade"): ids/dists are the stage-1 proxy ranking
+    # — distances under the cheap metric d, quality bounded by the paper's
+    # C-approximation factor — or, for covertree (no proxy stage), the
+    # already-D-scored pool prefix. D_calls still counts scorings spent
+    # before degradation.
+    degraded: bool = False
 
     @property
     def latency_ms(self) -> float:
@@ -162,6 +211,12 @@ class EngineCounters:
     deadline_misses: int = 0
     queue_depth: int = 0
     slot_occupancy: int = 0
+    # fault-tolerance layer (see repro.serve "Failure semantics")
+    retries: int = 0  # tower-lane retry attempts after transient failures
+    tower_failures: int = 0  # failed tower-lane calls (counted pre-retry)
+    degraded: int = 0  # requests resolved degraded (ServeStats.degraded)
+    shed: int = 0  # requests failed fast by tower-down policy "fail"
+    breaker_opens: int = 0  # breaker closed->open transitions (snapshot)
 
 
 @dataclasses.dataclass
@@ -226,6 +281,11 @@ class _Active:
     tower0: int  # pool drain counter at admission
     occ_snap: int
     depth_snap: int
+    # stage-1 proxy pool row (ids sorted by d-dist; vamana only) — the
+    # degraded-resolution answer when the tower lane is down or the
+    # deadline expires mid-flight
+    proxy_ids: np.ndarray | None = None
+    proxy_dists: np.ndarray | None = None
 
 
 @dataclasses.dataclass
@@ -238,6 +298,10 @@ class _Prepared:
     nseed: np.ndarray  # (S,)
     d_calls: np.ndarray  # (S,)
     q_D: np.ndarray  # (S, dim_D)
+    # full stage-1 pools (vamana; None for covertree) — per-slot degraded
+    # answers keep the whole proxy ranking, not just the seed prefix
+    proxy_ids: np.ndarray | None = None  # (S, P1)
+    proxy_dists: np.ndarray | None = None  # (S, P1)
 
 
 _STOP = object()  # tower-queue sentinel
@@ -347,13 +411,56 @@ class _SlotPool:
         self.ew_cap = 1
         self.tower_total = 0
         self.prepared: _Prepared | None = None
+        # rows whose future already resolved early (mid-flight deadline /
+        # degradation while a wave was in flight): freed only at the next
+        # sweep point so an in-flight commit never races a re-admission
+        self.early = np.zeros(s, bool)
+        self._tower_exc: BaseException | None = None
 
     # ---------------------------------------------------------------- admit
     def prepare(self, group: list[_Pending]) -> _Prepared | None:
         """Stage a group for admission: expensive query embeds through the
         tower lane, cheap embed + stage-1 seed search on the drive thread
         (the two overlap when the tower is already busy draining a step).
-        Malformed requests fail their own future here and are dropped."""
+        Malformed requests fail their own future here and are dropped.
+
+        The group is one isolation domain: a cheap-tower or stage-1 error
+        fails only this group's futures (:class:`AdmissionFailed`, the
+        original exception on ``__cause__``) and the engine keeps serving.
+        An expensive-tower query-embed failure follows the engine's
+        ``on_tower_failure`` policy — ``"degrade"`` resolves the group
+        proxy-only (stage-1 ranking, ``ServeStats.degraded``) since that
+        path needs no expensive embeddings at all. While the tower lane is
+        open-circuit under ``"degrade"``, the group short-circuits to
+        proxy-only serving without ever occupying a slot."""
+        try:
+            return self._prepare_inner(group)
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except BaseException as exc:
+            tower = isinstance(exc, TowerFailure)
+            shed = 0
+            for pend in group:
+                if pend.future.done():
+                    continue  # failed individually (malformed tokens)
+                if tower:
+                    # the lane (not the group) is the failure: keep the
+                    # class so callers can tell outage from bad input
+                    err = TowerFailure(
+                        "expensive-tower lane unavailable at admission "
+                        "(see __cause__)")
+                else:
+                    err = AdmissionFailed(
+                        "admission group failed before slot residency "
+                        "(see __cause__)")
+                err.__cause__ = exc
+                pend.future._fail(err)
+                shed += 1
+            with self.eng._mu:
+                self.eng._counters.shed += shed
+            return None
+
+    def _prepare_inner(self, group: list[_Pending]) -> _Prepared | None:
         eng = self.eng
         seq = eng.corpus_tokens.shape[1]
         slots = np.nonzero(~self.occupied)[0][:len(group)]
@@ -375,9 +482,16 @@ class _SlotPool:
             valid.append((pend, int(slot)))
         if not valid:
             return None
+        blocked = eng._breaker.blocked()
         if eng.index_kind == "covertree":
             # no proxy stage 1: Algorithm 3 descends from the top cover
-            # under D directly — the cheap metric's job ended at build time
+            # under D directly — the cheap metric's job ended at build
+            # time. With the lane open-circuit there is no proxy ranking
+            # to degrade to either, so the group is shed fast.
+            if blocked:
+                raise TowerFailure(
+                    "expensive-tower lane is open-circuit and the "
+                    "covertree index has no proxy stage to degrade to")
             qfut = eng._tower_submit(("embed_queries", tokens))
             root = np.asarray(eng._flat.root_ids, np.int32)
             seeds = np.full((self.S, root.shape[0]), -1, np.int32)
@@ -386,12 +500,21 @@ class _SlotPool:
             return _Prepared(
                 valid=valid, seeds=seeds, quota=quota_g, nseed=nseed_g,
                 d_calls=np.zeros(self.S, np.int32),
-                q_D=np.asarray(qfut.result()))
+                q_D=np.asarray(eng._tower_result(
+                    qfut, ("embed_queries", tokens), pool=self)))
+        if blocked and eng.on_tower_failure == "fail":
+            raise TowerFailure(
+                "expensive-tower lane is open-circuit "
+                f"({eng._breaker.failures} consecutive failures)")
+        degrade_only = blocked  # policy "degrade": proxy-only admission
         # expensive query embed rides the tower lane; the cheap embed and
         # stage-1 proxy search run here meanwhile. Fixed (S, seq) shapes
         # with zero-pad rows keep per-row embeddings bit-exact regardless
         # of group composition (the tower pads to its own batch anyway).
-        qfut = eng._tower_submit(("embed_queries", tokens))
+        qfut = (None if degrade_only
+                else eng._tower_submit(("embed_queries", tokens)))
+        if eng._faults is not None:
+            eng._faults.fire("cheap_embed")
         q_d = jnp.asarray(eng.cheap.embed(tokens))
         width1 = np.where(quota_g > 0, np.maximum(32, nseed_g), 1
                           ).astype(np.int32)
@@ -404,9 +527,54 @@ class _SlotPool:
         seeds = np.asarray(jnp.where(
             jnp.asarray(lane[None, :] < nseed_g[:, None]),
             res1.pool_ids, -1))[:, :seed_cap]
+        proxy_ids = np.asarray(res1.pool_ids)
+        proxy_dists = np.asarray(res1.pool_dists)
+        d_calls = np.asarray(res1.n_calls)
+        if degrade_only:
+            self._finish_degraded_group(valid, proxy_ids, proxy_dists,
+                                        d_calls)
+            return None
+        try:
+            q_D = np.asarray(eng._tower_result(
+                qfut, ("embed_queries", tokens), pool=self))
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except BaseException:
+            if eng.on_tower_failure == "degrade":
+                # the proxy ranking is already in hand — resolve the
+                # group degraded instead of failing it
+                self._finish_degraded_group(valid, proxy_ids, proxy_dists,
+                                            d_calls)
+                return None
+            raise
         return _Prepared(
             valid=valid, seeds=seeds, quota=quota_g, nseed=nseed_g,
-            d_calls=np.asarray(res1.n_calls), q_D=np.asarray(qfut.result()))
+            d_calls=d_calls, q_D=q_D,
+            proxy_ids=proxy_ids, proxy_dists=proxy_dists)
+
+    def _finish_degraded_group(self, valid, proxy_ids, proxy_dists,
+                               d_calls) -> None:
+        """Resolve a staged admission group proxy-only (stage-1 ranking,
+        ``degraded=True``) without it ever occupying a slot — the
+        open-circuit serving mode. quota-0 rows resolve empty, exactly as
+        they would fault-free."""
+        eng = self.eng
+        now = time.monotonic()
+        for pend, s in valid:
+            kk = int(pend.req.k)
+            ids = np.asarray(proxy_ids[s, :kk], np.int64)
+            dd = np.asarray(proxy_dists[s, :kk], np.float64)
+            if int(pend.req.quota) <= 0:
+                ids, dd = ids[:0], dd[:0]
+            ok = (ids >= 0) & np.isfinite(dd)
+            stats = ServeStats(
+                d_calls=int(d_calls[s]), D_calls=0,
+                queue_ms=(now - pend.t_submit) * 1e3, compute_ms=0.0,
+                degraded=True)
+            pend.future._resolve(SearchResult(ids[ok], dd[ok], stats))
+        with eng._mu:
+            eng._counters.degraded += len(valid)
+            eng._counters.completed += len(valid)
 
     def admit(self, prep: _Prepared) -> None:
         """Recycle the group's slots in the resident state and pay the entry
@@ -436,7 +604,11 @@ class _SlotPool:
             self.active_req[s] = _Active(
                 pend=pend, t_admit=now, d_calls=int(prep.d_calls[s]),
                 tower0=self.tower_total,
-                occ_snap=int(self.occupied.sum()), depth_snap=depth)
+                occ_snap=int(self.occupied.sum()), depth_snap=depth,
+                proxy_ids=(None if prep.proxy_ids is None
+                           else prep.proxy_ids[s].copy()),
+                proxy_dists=(None if prep.proxy_dists is None
+                             else prep.proxy_dists[s].copy()))
         if self.q_D is None or self.q_D.shape[1] != prep.q_D.shape[1]:
             self.q_D = np.zeros((self.S, prep.q_D.shape[1]), prep.q_D.dtype)
         for _, s in prep.valid:
@@ -499,11 +671,50 @@ class _SlotPool:
             eng._counters.slot_occupancy = int(self.occupied.sum())
 
     # ----------------------------------------------------------------- step
+    def _overlap_prepare(self) -> None:
+        """Stage the next admission group while the tower drains (the slot
+        pool's compute overlap) — at most once per in-flight drain."""
+        eng = self.eng
+        if self.prepared is None and not eng._closed:
+            free = int((~self.occupied).sum())
+            group = eng._pop_group(free) if free else []
+            if group:
+                self.prepared = self.prepare(group)
+
+    def _drain_wave(self, ids: np.ndarray, *, overlap: bool) -> int | None:
+        """One wave drain through the tower lane with bounded
+        exponential-backoff retries (transient failures) and breaker
+        accounting. Returns the drained batch count, or ``None`` when the
+        lane gave up — breaker open, retries exhausted, non-retryable
+        error, or drain timeout — with the terminal exception stashed for
+        :meth:`tower_down` to chain onto the affected futures."""
+        eng = self.eng
+        if eng._breaker.blocked():
+            self._tower_exc = TowerFailure(
+                "expensive-tower lane is open-circuit "
+                f"({eng._breaker.failures} consecutive failures)")
+            if overlap:
+                self._overlap_prepare()
+            return None
+        fut = eng._tower_submit(("drain", ids))
+        if overlap:
+            self._overlap_prepare()
+        try:
+            return eng._tower_result(fut, ("drain", ids), pool=self)
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except BaseException as exc:
+            self._tower_exc = exc
+            return None
+
     def step(self) -> None:
         """One plan/drain/commit wave over every occupied slot. While the
         tower drains the wave's fresh documents, the drive thread prepares
         the next admission group (cheap embed + stage 1) — the slot pool's
-        compute overlap."""
+        compute overlap. A drain the tower lane gives up on fails only the
+        resident requests (per ``on_tower_failure``) via
+        :meth:`tower_down`; mid-flight deadline expiries resolve during
+        the drain wait and their rows are swept after the commit."""
         eng = self.eng
         if eng.index_kind == "covertree":
             return self.step_ct()
@@ -520,13 +731,10 @@ class _SlotPool:
                 self.state, eng._adjacency, quota_j, L_j, ms_j,
                 jnp.asarray(self.ew), expand_cap=self.ew_cap)
         safe_np = np.asarray(safe)
-        drain_fut = eng._tower_submit(("drain", safe_np[np.asarray(keep)]))
-        if self.prepared is None and not eng._closed:
-            free = int((~self.occupied).sum())
-            group = eng._pop_group(free) if free else []
-            if group:
-                self.prepared = self.prepare(group)
-        self.tower_total += drain_fut.result()
+        batches = self._drain_wave(safe_np[np.asarray(keep)], overlap=True)
+        if batches is None:
+            return self.tower_down()
+        self.tower_total += batches
         doc = jnp.asarray(eng._doc_embs(safe_np, self.q_D.shape[1]))
         dists = _wave_dists_j(doc, jnp.asarray(self.q_D))
         if eng._stepper is not None:
@@ -534,6 +742,7 @@ class _SlotPool:
         else:
             self.state = _commit_j(self.state, safe, keep, dists,
                                    backend=eng.backend)
+        self.sweep_early()
 
     def step_ct(self) -> None:
         """One cover-tree level for every slot still descending.
@@ -587,13 +796,11 @@ class _SlotPool:
             remaining -= ew
         for i, (safe, keep) in enumerate(planned):
             safe_np = np.asarray(safe)
-            drain_fut = eng._tower_submit(("drain", safe_np[np.asarray(keep)]))
-            if i == 0 and self.prepared is None and not eng._closed:
-                free = int((~self.occupied).sum())
-                group = eng._pop_group(free) if free else []
-                if group:
-                    self.prepared = self.prepare(group)
-            self.tower_total += drain_fut.result()
+            batches = self._drain_wave(safe_np[np.asarray(keep)],
+                                       overlap=(i == 0))
+            if batches is None:
+                return self.tower_down()
+            self.tower_total += batches
             doc = jnp.asarray(eng._doc_embs(safe_np, self.q_D.shape[1]))
             dists = _wave_dists_j(doc, jnp.asarray(self.q_D))
             if eng._stepper is not None:
@@ -617,20 +824,28 @@ class _SlotPool:
                 cont[s] = True
         # rows still descending keep an open frontier so active_mask holds
         # them resident even when a level admitted nothing fresh (the next
-        # level's child rows may still reach new points)
+        # level's child rows may still reach new points). Rows resolved
+        # early mid-level (deadline) stay frozen.
+        cont &= ~self.early
         if cont.any():
             if eng._stepper is not None:
                 self.state = eng._stepper.reopen(self.state,
                                                  jnp.asarray(cont))
             else:
                 self.state = _reopen_j(self.state, jnp.asarray(cont))
+        self.sweep_early()
 
-    def _drain_and_commit(self, safe, keep) -> None:
-        """Entry-wave drain + commit (same tower lane as the step drains)."""
+    def _drain_and_commit(self, safe, keep) -> bool:
+        """Entry-wave drain + commit (same tower lane as the step drains).
+        Returns False when the tower lane gave up — the caller's group is
+        already resolved/failed by :meth:`tower_down`."""
         eng = self.eng
         safe_np = np.asarray(safe)
-        fut = eng._tower_submit(("drain", safe_np[np.asarray(keep)]))
-        self.tower_total += fut.result()
+        batches = self._drain_wave(safe_np[np.asarray(keep)], overlap=False)
+        if batches is None:
+            self.tower_down()
+            return False
+        self.tower_total += batches
         doc = jnp.asarray(eng._doc_embs(safe_np, self.q_D.shape[1]))
         dists = _wave_dists_j(doc, jnp.asarray(self.q_D))
         if eng._stepper is not None:
@@ -638,6 +853,149 @@ class _SlotPool:
         else:
             self.state = _commit_j(self.state, safe, keep, dists,
                                    backend=eng.backend)
+        self.sweep_early()
+        return True
+
+    # ------------------------------------------------- degradation/deadlines
+    def has_deadlines(self) -> bool:
+        """Any resident request carrying a ``deadline_ms`` (drives the
+        polling tower wait — fault-free deadline-less serving keeps the
+        cheap blocking wait)."""
+        for s in np.nonzero(self.occupied & ~self.early)[0]:
+            a = self.active_req[s]
+            if a is not None and a.pend.req.deadline_ms is not None:
+                return True
+        return False
+
+    def _degraded_rows(self, a: _Active, s: int, ids_all, dd_all):
+        """Best available ranking for a degraded resolution of slot ``s``:
+        the stage-1 proxy pool when one exists (vamana), else the slot's
+        current D-scored pool prefix (covertree — already ground-truth
+        distances, just short of the full descent)."""
+        if a.proxy_ids is not None:
+            return a.proxy_ids, a.proxy_dists
+        return ids_all[s], dd_all[s]
+
+    def _resolve_degraded(self, s: int, ids_row, dd_row, *, now,
+                          D_calls: int) -> None:
+        """Resolve slot ``s``'s future with ``degraded=True`` stats from the
+        given ranking. Does not free the slot — callers mark ``early`` and
+        sweep at the next safe point."""
+        a = self.active_req[s]
+        r = a.pend.req
+        kk = int(r.k)
+        ids = np.asarray(ids_row[:kk], np.int64)
+        dd = np.asarray(dd_row[:kk], np.float64)
+        ok = (ids >= 0) & np.isfinite(dd)
+        stats = ServeStats(
+            d_calls=a.d_calls, D_calls=D_calls,
+            tower_batches=self.tower_total - a.tower0,
+            queue_ms=(a.t_admit - a.pend.t_submit) * 1e3,
+            compute_ms=(now - a.t_admit) * 1e3,
+            slot_occupancy=a.occ_snap, queue_depth=a.depth_snap,
+            degraded=True)
+        a.pend.future._resolve(SearchResult(ids[ok], dd[ok], stats))
+
+    def expire_inflight(self, *, defer_free: bool = False) -> None:
+        """Mid-flight deadline enforcement: resolve every resident slot
+        whose deadline has passed — degraded (proxy ranking) under
+        ``on_tower_failure="degrade"``, :class:`DeadlineExceeded` under
+        ``"fail"`` — and close its frontier (``beam.early_resolve``) so the
+        row stops consuming waves. With ``defer_free=True`` (called from
+        inside a tower wait, a wave in flight) the rows are only marked
+        ``early``; the commit path sweeps them afterward, so the in-flight
+        wave never races a re-admission into the same row."""
+        eng = self.eng
+        if self.state is None:
+            return
+        now = time.monotonic()
+        rows = np.zeros(self.S, bool)
+        for s in np.nonzero(self.occupied & ~self.early)[0]:
+            a = self.active_req[s]
+            dl = a.pend.req.deadline_ms
+            if dl is None or (now - a.pend.t_submit) * 1e3 <= dl:
+                continue
+            rows[s] = True
+        if not rows.any():
+            return
+        ids_all = np.asarray(self.state.pool_ids)
+        dd_all = np.asarray(self.state.pool_dists)
+        calls = np.asarray(self.state.n_calls)
+        degraded = 0
+        failed = 0
+        for s in np.nonzero(rows)[0]:
+            a = self.active_req[s]
+            if eng.on_tower_failure == "degrade":
+                ids_row, dd_row = self._degraded_rows(a, s, ids_all, dd_all)
+                self._resolve_degraded(s, ids_row, dd_row, now=now,
+                                       D_calls=int(calls[s]))
+                degraded += 1
+            else:
+                a.pend.future._fail(DeadlineExceeded(
+                    f"deadline {a.pend.req.deadline_ms} ms exceeded "
+                    "mid-flight"))
+                failed += 1
+            self.early[s] = True
+        # close the expired rows' frontiers so active_mask drops them; the
+        # other rows' state is untouched bit-for-bit
+        self.state = beam.early_resolve(self.state, jnp.asarray(rows))
+        with eng._mu:
+            eng._counters.deadline_misses += degraded + failed
+            eng._counters.degraded += degraded
+            eng._counters.completed += degraded
+        if not defer_free:
+            self.sweep_early()
+
+    def sweep_early(self) -> None:
+        """Free the rows whose futures resolved early, now that no wave is
+        in flight over them."""
+        if not self.early.any():
+            return
+        for s in np.nonzero(self.early)[0]:
+            self.free_slot(s)
+        self.early[:] = False
+        with self.eng._mu:
+            self.eng._counters.slot_occupancy = int(self.occupied.sum())
+
+    def tower_down(self) -> None:
+        """The tower lane gave up on a drain (retries exhausted, breaker
+        open, timeout, or a non-retryable error): apply the engine's
+        ``on_tower_failure`` policy to every resident request instead of
+        poisoning the engine. ``"degrade"`` resolves each slot proxy-only;
+        ``"fail"`` fails each slot's future with :class:`TowerFailure`
+        chaining the original error. Either way the resident state stays
+        consistent (the failed wave was never committed) and the engine
+        keeps serving."""
+        eng = self.eng
+        exc = self._tower_exc or TowerFailure("expensive-tower lane failed")
+        self._tower_exc = None
+        now = time.monotonic()
+        ids_all = np.asarray(self.state.pool_ids)
+        dd_all = np.asarray(self.state.pool_dists)
+        calls = np.asarray(self.state.n_calls)
+        degraded = 0
+        failed = 0
+        rows = self.occupied & ~self.early
+        for s in np.nonzero(rows)[0]:
+            a = self.active_req[s]
+            if eng.on_tower_failure == "degrade":
+                ids_row, dd_row = self._degraded_rows(a, s, ids_all, dd_all)
+                self._resolve_degraded(s, ids_row, dd_row, now=now,
+                                       D_calls=int(calls[s]))
+                degraded += 1
+            else:
+                err = TowerFailure(
+                    "expensive-tower drain failed; request resolved "
+                    "against policy on_tower_failure='fail' (see __cause__)")
+                err.__cause__ = exc
+                a.pend.future._fail(err)
+                failed += 1
+            self.early[s] = True
+        self.sweep_early()
+        with eng._mu:
+            eng._counters.degraded += degraded
+            eng._counters.completed += degraded
+            eng._counters.shed += failed
 
     # -------------------------------------------------------------- resolve
     def resolve_finished(self) -> None:
@@ -655,7 +1013,7 @@ class _SlotPool:
                 self.state, quota_j, L_j, ms_j))
         else:
             act = np.asarray(_active_j(self.state, quota_j, L_j, ms_j))
-        fin = self.occupied & ~act
+        fin = self.occupied & ~act & ~self.early
         if not fin.any():
             return
         ids_all = np.asarray(self.state.pool_ids)
@@ -700,17 +1058,32 @@ class _SlotPool:
         self.ct_level[s] = 0
 
     def fail_all(self, exc: BaseException) -> None:
-        """Poisoned resident state (e.g. a tower error mid-step): fail every
-        resident + staged future, drop the state. The engine survives — the
-        next admission re-initializes a fresh resident state."""
+        """Genuinely poisoned resident state (an error outside the isolated
+        tower/admission paths): fail every resident + staged future with
+        :class:`EngineFailure` chaining the original traceback, drop the
+        state. The engine survives — the next admission re-initializes a
+        fresh resident state. This is the last resort; tower failures are
+        handled per-slot by :meth:`tower_down` and never land here."""
         eng = self.eng
+
+        def _wrap() -> EngineFailure:
+            err = EngineFailure(
+                "engine drive loop failed; resident state dropped "
+                "(see __cause__)")
+            err.__cause__ = exc
+            return err
+
         if self.prepared is not None:
             for pend, _ in self.prepared.valid:
-                pend.future._fail(exc)
+                if not pend.future.done():
+                    pend.future._fail(_wrap())
             self.prepared = None
         for s in np.nonzero(self.occupied)[0]:
-            self.active_req[s].pend.future._fail(exc)
+            if not self.early[s]:
+                self.active_req[s].pend.future._fail(_wrap())
             self.free_slot(s)
+        self.early[:] = False
+        self._tower_exc = None
         self.state = None
         with eng._mu:
             eng._counters.slot_occupancy = 0
@@ -754,6 +1127,20 @@ class BiMetricEngine:
     compatibility); the slot pool always overlaps the tower drain with the
     next admission group's stage-1 work. All of these are inert for the
     synchronous ``query*`` paths.
+
+    **Fault tolerance** (async path; see ``repro.serve``'s "Failure
+    semantics"): transient expensive-tower failures are retried up to
+    ``tower_retries`` times with exponential backoff starting at
+    ``retry_backoff_ms``; ``breaker_threshold`` consecutive failures open
+    a circuit breaker on the tower lane for ``breaker_cooldown_ms``
+    (half-open probes re-close it). ``on_tower_failure`` picks what a
+    given-up tower call does to the affected requests: ``"fail"``
+    (default) fails their futures with :class:`TowerFailure`,
+    ``"degrade"`` resolves them with stage-1 proxy-ranked results
+    (``ServeStats.degraded``). ``drain_timeout_ms`` bounds any single
+    tower call (a hung drain becomes :class:`TowerTimeout`, never retried
+    inline). ``faults`` accepts a ``repro.serve.faults.FaultPlan``
+    (test/benchmark-only deterministic fault injection).
     """
 
     def __init__(self, cheap: EmbedTower, expensive: EmbedTower,
@@ -764,7 +1151,12 @@ class BiMetricEngine:
                  max_inflight: int = 2, dedup: str = "auto",
                  backend="ref", quantize: str | None = None,
                  slots: int | None = None, index: str = "vamana",
-                 covertree_eps: float = 0.5, covertree_T: float = 2.0):
+                 covertree_eps: float = 0.5, covertree_T: float = 2.0,
+                 on_tower_failure: str = "fail", tower_retries: int = 3,
+                 retry_backoff_ms: float = 25.0, breaker_threshold: int = 5,
+                 breaker_cooldown_ms: float = 2000.0,
+                 drain_timeout_ms: float | None = None,
+                 faults: "serve_faults.FaultPlan | None" = None):
         self.cheap = cheap
         self.expensive = expensive
         self.corpus_tokens = corpus_tokens
@@ -786,6 +1178,18 @@ class BiMetricEngine:
             raise ValueError(f"unknown index kind {index!r}")
         self.index_kind = index
         self.ct_eps = float(covertree_eps)
+        if on_tower_failure not in ("fail", "degrade"):
+            raise ValueError(
+                f"unknown on_tower_failure policy {on_tower_failure!r}")
+        self.on_tower_failure = on_tower_failure
+        self.tower_retries = max(0, int(tower_retries))
+        self.retry_backoff_s = max(0.0, retry_backoff_ms / 1e3)
+        self.drain_timeout_s = (None if drain_timeout_ms is None
+                                else max(0.0, drain_timeout_ms / 1e3))
+        self._breaker = serve_faults.CircuitBreaker(
+            threshold=breaker_threshold,
+            cooldown_s=breaker_cooldown_ms / 1e3)
+        self._faults = faults
         # --- index build: cheap metric ONLY --------------------------------
         self.emb_d = jnp.asarray(cheap.embed(corpus_tokens))
         if index == "covertree":
@@ -851,6 +1255,7 @@ class BiMetricEngine:
         self._counters = EngineCounters()
         self._tower_q: queue.Queue | None = None
         self._pool: _SlotPool | None = None
+        self._tower_thread: threading.Thread | None = None
 
     # ------------------------------------------------------------ internals
     def _stage1(self, q_d: Array, *, width, pool: int,
@@ -1123,6 +1528,11 @@ class BiMetricEngine:
     def _service_tower(self, item):
         """Run one tower-lane work item (the expensive-tower forward passes)."""
         kind, payload = item
+        if self._faults is not None:
+            # injection precedes the real work (and the doc-cache write), so
+            # a retried drain recomputes from the same cache state — retries
+            # stay bit-exact vs a fault-free run
+            self._faults.fire(kind)
         if kind == "embed_queries":
             # query-side embeddings are not charged to the quota: the budget
             # counts *document* scorings (the paper's cost model)
@@ -1243,14 +1653,41 @@ class BiMetricEngine:
         engine construction; ``queue_depth`` / ``slot_occupancy`` are
         instantaneous)."""
         with self._mu:
-            return dataclasses.replace(self._counters)
+            snap = dataclasses.replace(self._counters)
+        snap.breaker_opens = self._breaker.opens
+        return snap
+
+    def health(self) -> dict:
+        """Operational snapshot: breaker state, degradation mode, queue and
+        slot pressure, and the cumulative counters (as a dict). Safe to
+        call from any thread; values are point-in-time reads (the breaker
+        is single-writer — the drive thread — so the reads are coherent
+        enough for monitoring)."""
+        snap = self.counters()
+        state = self._breaker.state
+        return {
+            "breaker_state": state,
+            "consecutive_tower_failures": self._breaker.failures,
+            "breaker_opens": self._breaker.opens,
+            "degraded_mode": (state != "closed"
+                              and self.on_tower_failure == "degrade"),
+            "on_tower_failure": self.on_tower_failure,
+            "queue_depth": snap.queue_depth,
+            "slot_occupancy": snap.slot_occupancy,
+            "started": self._started,
+            "closed": self._closed,
+            "counters": dataclasses.asdict(snap),
+        }
 
     def close(self, timeout: float | None = 60.0) -> None:
         """Stop the slot pool. Requests already admitted to a slot (or
         staged for admission) still resolve; requests **still queued** are
         cancelled immediately — their ``result()`` raises
         ``CancelledError`` — instead of being flushed into a final drain
-        that could outlive the timeout. Idempotent; ``submit`` raises
+        that could outlive the timeout. Raises ``RuntimeError`` if the
+        drive/tower threads fail to join within ``timeout`` (they are
+        daemons, so the process still exits, but silent success would hide
+        unresolved resident requests). Idempotent; ``submit`` raises
         afterwards."""
         with self._lifecycle_lock:
             already = self._closed
@@ -1270,6 +1707,12 @@ class BiMetricEngine:
             pend.future.cancel()
         for t in self._threads:
             t.join(timeout)
+        stuck = [t.name for t in self._threads if t.is_alive()]
+        if stuck:
+            raise RuntimeError(
+                f"engine threads failed to join within timeout={timeout}: "
+                f"{stuck} (daemon threads — they die with the process, but "
+                "resident requests may be unresolved)")
 
     def _ensure_started_locked(self) -> None:
         """Start the drive + tower threads on first use; caller holds
@@ -1284,6 +1727,7 @@ class BiMetricEngine:
             threading.Thread(target=loop, daemon=True, name=name)
             for name, loop in (("serve-drive", self._drive_loop),
                                ("serve-tower", self._tower_loop))]
+        self._tower_thread = self._threads[1]
         for t in self._threads:
             t.start()
         self._started = True
@@ -1337,8 +1781,71 @@ class BiMetricEngine:
 
     def _tower_submit(self, item) -> concurrent.futures.Future:
         fut: concurrent.futures.Future = concurrent.futures.Future()
+        if self._tower_thread is not None and not self._tower_thread.is_alive():
+            # lane thread died (e.g. an injected KeyboardInterrupt escaped):
+            # fail fast instead of waiting forever on a queue nobody reads
+            fut.set_exception(TowerFailure(
+                "expensive-tower lane thread is dead"))
+            return fut
         self._tower_q.put((item, fut))
         return fut
+
+    def _await_tower(self, fut: concurrent.futures.Future, pool):
+        """Wait for one tower-lane future. Fault-free deadline-less serving
+        keeps the cheap fully-blocking wait; with resident deadlines or a
+        ``drain_timeout_ms`` the wait polls every 20 ms so mid-flight
+        expiries resolve *during* the tower call (``defer_free=True`` — the
+        wave in flight still commits before the rows are recycled) and a
+        hung call becomes :class:`TowerTimeout` after the timeout."""
+        if self.drain_timeout_s is None and (
+                pool is None or not pool.has_deadlines()):
+            return fut.result()
+        t0 = time.monotonic()
+        while True:
+            try:
+                return fut.result(timeout=0.02)
+            except concurrent.futures.TimeoutError:
+                if pool is not None:
+                    pool.expire_inflight(defer_free=True)
+                if (self.drain_timeout_s is not None
+                        and time.monotonic() - t0 > self.drain_timeout_s):
+                    raise TowerTimeout(
+                        f"tower call exceeded drain_timeout_ms="
+                        f"{self.drain_timeout_s * 1e3:g}") from None
+
+    def _tower_result(self, fut: concurrent.futures.Future, item,
+                      pool=None):
+        """Await a tower-lane call with bounded exponential-backoff retries
+        and breaker accounting. Retries cover transient failures only (an
+        exception whose ``transient`` attribute is falsy, or a
+        :class:`TowerTimeout`, goes straight to the caller); each failure
+        counts toward the breaker, each success closes it. The terminal
+        exception propagates to the caller — the isolation boundary
+        (:meth:`_SlotPool.tower_down` / admission policy) decides who it
+        fails."""
+        attempts = 0
+        while True:
+            try:
+                out = self._await_tower(fut, pool)
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except BaseException as exc:
+                attempts += 1
+                self._breaker.on_failure()
+                with self._mu:
+                    self._counters.tower_failures += 1
+                retryable = (getattr(exc, "transient", True)
+                             and not isinstance(exc, TowerTimeout))
+                if (not retryable or attempts > self.tower_retries
+                        or self._breaker.blocked()):
+                    raise
+                with self._mu:
+                    self._counters.retries += 1
+                time.sleep(self.retry_backoff_s * (2 ** (attempts - 1)))
+                fut = self._tower_submit(item)
+                continue
+            self._breaker.on_success()
+            return out
 
     # ----------------------------------------------------------- drive loops
     def _drive_loop(self) -> None:
@@ -1347,6 +1854,7 @@ class BiMetricEngine:
             while True:
                 try:
                     self._expire_queued()
+                    pool.expire_inflight()
                     if pool.prepared is not None:
                         prep, pool.prepared = pool.prepared, None
                         pool.admit(prep)
@@ -1362,7 +1870,15 @@ class BiMetricEngine:
                         pool.step()
                         pool.resolve_finished()
                         continue
-                except BaseException as exc:  # deliberately broad — poisoned state
+                except (KeyboardInterrupt, SystemExit) as exc:
+                    # fail the resident futures, then honor the interrupt —
+                    # never swallow it into a served error
+                    pool.fail_all(exc)
+                    raise
+                except BaseException as exc:
+                    # last resort: tower/admission failures are isolated
+                    # upstream (tower_down / prepare); anything landing here
+                    # poisoned the resident state itself
                     pool.fail_all(exc)
                     continue
                 # idle: no occupied slots, nothing admittable right now
@@ -1383,7 +1899,10 @@ class BiMetricEngine:
             item, fut = got
             try:
                 fut.set_result(self._service_tower(item))
-            except BaseException as exc:  # deliberately broad — surfaced on drive
+            except (KeyboardInterrupt, SystemExit) as exc:
+                fut.set_exception(exc)  # surface on drive, then honor it
+                raise
+            except BaseException as exc:  # surfaced on the drive thread
                 fut.set_exception(exc)
 
     # --------------------------------------------------------------- rerank

@@ -1,0 +1,574 @@
+"""Chaos suite: the serving engine's failure-semantics contract.
+
+Deterministic fault injection (``repro.serve.faults.FaultPlan``, seeded
+per-site streams) drives the tower lane through transient faults, hangs,
+persistent outages and interrupts, pinning the contract documented in
+``repro/serve``'s "Failure semantics":
+
+* transient drain faults at 10% -> every request resolves **bit-exact**
+  vs the fault-free run (bounded retry + the doc cache's write-after-
+  success idempotence), at shards {1, 2, 4};
+* a given-up tower call fails only the affected requests
+  (``TowerFailure`` chaining the injected fault) or degrades them to the
+  stage-1 proxy ranking, per ``on_tower_failure`` — the engine is never
+  poisoned and keeps serving afterwards;
+* the circuit breaker opens on consecutive failures, half-open probes
+  re-close it after the tower heals;
+* ``deadline_ms`` fires queued, at admission pop, and **mid-flight**
+  (including inside a hung tower drain), leaving non-expired co-resident
+  slots bit-exact;
+* ``close(timeout=)`` raises on a stuck drive thread instead of
+  returning silently, and a submit-vs-close race never strands a future.
+"""
+import concurrent.futures as cf
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import qwen3_0_6b
+from repro.core import beam, distances
+from repro.models import transformer as T
+from repro.serve import (AdmissionFailed, BiMetricEngine, DeadlineExceeded,
+                         EmbedTower, EngineFailure, FaultPlan, FaultSpec,
+                         InjectedFault, SearchRequest, TowerFailure)
+from repro.serve.faults import CircuitBreaker
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.fixture(scope="module")
+def engine_parts():
+    key = jax.random.PRNGKey(0)
+    cheap_cfg = qwen3_0_6b.smoke()
+    exp_cfg = T.TransformerConfig(
+        name="exp-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        head_dim=16, d_ff=128, vocab=cheap_cfg.vocab, embed_dim=32)
+    cheap = EmbedTower(T.init_params(key, cheap_cfg), cheap_cfg)
+    expensive = EmbedTower(
+        T.init_params(jax.random.fold_in(key, 1), exp_cfg), exp_cfg)
+    corpus = np.random.default_rng(0).integers(
+        0, cheap_cfg.vocab, (96, 10), dtype=np.int32)
+    return cheap, expensive, corpus
+
+
+def _reqs(corpus, rows=(3, 40, 77, 12, 55, 9, 61), quota=15, k=5, **kw):
+    return [SearchRequest(tokens=corpus[r], quota=quota, k=k, **kw)
+            for r in rows]
+
+
+def _wait_for(pred, timeout=60.0, what="condition"):
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < timeout:
+        if pred():
+            return
+        time.sleep(0.005)
+    raise AssertionError(f"timed out waiting for {what}")
+
+
+# ----------------------------------------------------------- fault plan unit
+def test_fault_plan_deterministic_and_healable():
+    a = FaultPlan(seed=7, drain=FaultSpec(rate=0.4))
+    b = FaultPlan(seed=7, drain=FaultSpec(rate=0.4))
+
+    def trace(plan, n=40):
+        out = []
+        for _ in range(n):
+            try:
+                plan.fire("drain")
+                out.append(0)
+            except InjectedFault:
+                out.append(1)
+        return out
+
+    ta, tb = trace(a), trace(b)
+    assert ta == tb and sum(ta) > 0  # seeded: identical across instances
+    # a transient firing is followed by a forced success (retry recovers)
+    for i, hit in enumerate(ta[:-1]):
+        if hit:
+            assert ta[i + 1] == 0
+    # unconfigured sites never fault; unknown sites are rejected up front
+    a.fire("embed_queries")
+    with pytest.raises(ValueError):
+        FaultPlan(drain=FaultSpec(), bogus=FaultSpec())
+    # persistent trips forever until healed
+    p = FaultPlan(seed=1, drain=FaultSpec(rate=1.0, mode="persistent"))
+    for _ in range(3):
+        with pytest.raises(InjectedFault):
+            p.fire("drain")
+    assert p.fired("drain") == 1 and p.calls("drain") == 3
+    p.heal()  # the outage ended: the site is disarmed for good
+    for _ in range(3):
+        p.fire("drain")
+
+
+def test_circuit_breaker_states():
+    t = [0.0]
+    br = CircuitBreaker(threshold=3, cooldown_s=10.0, clock=lambda: t[0])
+    assert br.state == "closed" and not br.blocked()
+    br.on_failure(); br.on_failure()
+    assert br.state == "closed"
+    br.on_failure()
+    assert br.state == "open" and br.blocked() and br.opens == 1
+    t[0] = 11.0
+    assert br.state == "half_open" and not br.blocked()  # probe allowed
+    br.on_failure()  # failed probe re-arms the cooldown, no new "open"
+    assert br.blocked() and br.opens == 1
+    t[0] = 22.0
+    br.on_success()
+    assert br.state == "closed" and br.failures == 0
+
+
+# ------------------------------------------------------- beam.early_resolve
+def test_early_resolve_closes_rows_only():
+    rng = np.random.default_rng(3)
+    corpus = jnp.asarray(rng.normal(size=(64, 8)).astype(np.float32))
+    adj = jnp.asarray(rng.integers(0, 64, (64, 6)), jnp.int32)
+    em = distances.EmbeddingMetric(corpus)
+    q = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))
+    entries = jnp.asarray([[1, 5, 9]] * 4, jnp.int32)
+    quota = jnp.asarray([12, 12, 12, 12], jnp.int32)
+    state, safe, keep = beam.init_state(
+        entries, n_points=64, pool_size=8, quota=quota, dedup="bitmap")
+    state = beam.commit_scores(state, safe, keep, em.dists_batch(q, safe))
+    assert bool(beam.active_mask(state, beam_width=8, quota=quota,
+                                 max_steps=40).all())
+    rows = jnp.asarray([False, True, False, True])
+    closed = beam.early_resolve(state, rows)
+    act = np.asarray(beam.active_mask(closed, beam_width=8, quota=quota,
+                                      max_steps=40))
+    np.testing.assert_array_equal(act, [True, False, True, False])
+    # non-masked rows untouched bit-for-bit, masked rows keep their pools
+    for leaf_new, leaf_old in zip(closed, state):
+        np.testing.assert_array_equal(np.asarray(leaf_new)[[0, 2]],
+                                      np.asarray(leaf_old)[[0, 2]])
+    np.testing.assert_array_equal(np.asarray(closed.pool_ids),
+                                  np.asarray(state.pool_ids))
+
+
+# --------------------------------------------------------- transient chaos
+def test_transient_drain_faults_bit_exact(engine_parts):
+    """10% transient drain faults: every request resolves bit-exact vs the
+    fault-free run, retries are counted, the engine is never poisoned."""
+    cheap, expensive, corpus = engine_parts
+    ref = BiMetricEngine(cheap, expensive, corpus).query_batch(_reqs(corpus))
+    plan = FaultPlan(seed=11, drain=FaultSpec(rate=0.10),
+                     embed_queries=FaultSpec(rate=0.10))
+    eng = BiMetricEngine(cheap, expensive, corpus, slots=3, faults=plan,
+                         retry_backoff_ms=1.0)
+    futs = [eng.submit(r) for r in _reqs(corpus)]
+    for i, f in enumerate(futs):
+        got = f.result(timeout=300)
+        assert np.array_equal(got.ids, ref[i].ids), i
+        np.testing.assert_array_equal(got.dists, ref[i].dists)
+        assert got.stats.D_calls == ref[i].stats.D_calls, i
+        assert not got.stats.degraded
+    c = eng.counters()
+    assert c.completed == len(futs) and c.degraded == 0
+    fired = plan.fired("drain") + plan.fired("embed_queries")
+    assert fired > 0 and c.retries >= fired and c.tower_failures >= fired
+    assert eng.health()["breaker_state"] == "closed"
+    eng.close()
+
+
+def test_persistent_drain_fail_policy_isolates(engine_parts):
+    """Persistent drain outage under on_tower_failure='fail': affected
+    requests fail with TowerFailure chaining the injected fault; after the
+    tower heals (and the cooldown passes) the engine serves bit-exact."""
+    cheap, expensive, corpus = engine_parts
+    plan = FaultPlan(seed=2, drain=FaultSpec(rate=1.0, mode="persistent"))
+    # threshold=1: successful query embeds between failed drains reset the
+    # *consecutive* count, so a drain-only outage opens at the first failure
+    eng = BiMetricEngine(cheap, expensive, corpus, slots=2, faults=plan,
+                         retry_backoff_ms=1.0, breaker_threshold=1,
+                         breaker_cooldown_ms=50.0)
+    futs = [eng.submit(r) for r in _reqs(corpus, rows=(3, 40, 77))]
+    errs = []
+    for f in futs:
+        with pytest.raises(TowerFailure) as ei:
+            f.result(timeout=300)
+        errs.append(ei.value)
+    assert any(isinstance(e.__cause__, InjectedFault)
+               or isinstance(getattr(e.__cause__, "__cause__", None),
+                             InjectedFault) for e in errs)
+    assert eng.counters().breaker_opens >= 1
+    plan.heal()
+    time.sleep(0.1)  # past the cooldown: next tower call is the probe
+    ref = BiMetricEngine(cheap, expensive, corpus).query(
+        SearchRequest(tokens=corpus[12], quota=15, k=5))
+    got = eng.submit(SearchRequest(tokens=corpus[12], quota=15, k=5)
+                     ).result(timeout=300)
+    assert np.array_equal(got.ids, ref.ids) and not got.stats.degraded
+    assert eng.health()["breaker_state"] == "closed"
+    eng.close()
+
+
+def test_persistent_drain_degrade_policy(engine_parts):
+    """Persistent drain outage under on_tower_failure='degrade': every
+    request resolves with stage-1 proxy results marked degraded=True; the
+    breaker opens and open-circuit admissions short-circuit proxy-only;
+    after heal the engine serves full-quality again."""
+    cheap, expensive, corpus = engine_parts
+    plan = FaultPlan(seed=2, drain=FaultSpec(rate=1.0, mode="persistent"),
+                     embed_queries=FaultSpec(rate=1.0, mode="persistent"))
+    eng = BiMetricEngine(cheap, expensive, corpus, slots=2, faults=plan,
+                         on_tower_failure="degrade", retry_backoff_ms=1.0,
+                         breaker_threshold=2, breaker_cooldown_ms=200.0)
+    futs = [eng.submit(r) for r in _reqs(corpus)]
+    for f in futs:
+        got = f.result(timeout=300)
+        assert got.stats.degraded
+        assert got.ids.size > 0 and got.ids.size <= 5
+        assert np.all((got.ids >= 0) & (got.ids < corpus.shape[0]))
+        assert np.all(np.diff(got.dists) >= 0)  # proxy-ranked ascending
+    c = eng.counters()
+    assert c.degraded == len(futs) and c.completed == len(futs)
+    assert c.breaker_opens >= 1
+    h = eng.health()
+    assert h["degraded_mode"] and h["breaker_state"] in ("open", "half_open")
+    plan.heal()
+    time.sleep(0.25)
+    ref = BiMetricEngine(cheap, expensive, corpus).query(
+        SearchRequest(tokens=corpus[12], quota=15, k=5))
+    got = eng.submit(SearchRequest(tokens=corpus[12], quota=15, k=5)
+                     ).result(timeout=300)
+    assert not got.stats.degraded and np.array_equal(got.ids, ref.ids)
+    eng.close()
+
+
+def test_cheap_embed_failure_fails_group_only(engine_parts):
+    """A cheap-tower failure while staging a group fails that group with
+    AdmissionFailed (cause attached) — and the engine keeps serving."""
+    cheap, expensive, corpus = engine_parts
+    plan = FaultPlan(seed=0,
+                     cheap_embed=FaultSpec(rate=1.0, mode="persistent"))
+    eng = BiMetricEngine(cheap, expensive, corpus, slots=2, faults=plan)
+    f = eng.submit(SearchRequest(tokens=corpus[3], quota=12, k=5))
+    with pytest.raises(AdmissionFailed) as ei:
+        f.result(timeout=300)
+    assert isinstance(ei.value.__cause__, InjectedFault)
+    assert eng.counters().shed >= 1
+    plan.heal()
+    got = eng.submit(SearchRequest(tokens=corpus[3], quota=12, k=5)
+                     ).result(timeout=300)
+    ref = BiMetricEngine(cheap, expensive, corpus).query(
+        SearchRequest(tokens=corpus[3], quota=12, k=5))
+    assert np.array_equal(got.ids, ref.ids)
+    eng.close()
+
+
+def test_embed_queries_failure_degrades_group(engine_parts):
+    """An expensive query-embed outage under 'degrade' resolves the staged
+    group proxy-only (no slot residency, D_calls == 0)."""
+    cheap, expensive, corpus = engine_parts
+    plan = FaultPlan(
+        seed=0, embed_queries=FaultSpec(rate=1.0, mode="persistent"))
+    eng = BiMetricEngine(cheap, expensive, corpus, slots=2, faults=plan,
+                         on_tower_failure="degrade", retry_backoff_ms=1.0)
+    got = eng.submit(SearchRequest(tokens=corpus[40], quota=12, k=5)
+                     ).result(timeout=300)
+    assert got.stats.degraded and got.stats.D_calls == 0
+    assert got.ids.size > 0
+    eng.close()
+
+
+# ------------------------------------------------------------------ deadlines
+def test_queued_expiry_stays_deadline_exceeded(engine_parts):
+    """Queued expiry is DeadlineExceeded even under 'degrade' — a request
+    that never ran has no proxy ranking to degrade to."""
+    cheap, expensive, corpus = engine_parts
+    plan = FaultPlan(seed=0, drain=FaultSpec(rate=1.0, mode="hang",
+                                             hang_s=0.4))
+    eng = BiMetricEngine(cheap, expensive, corpus, slots=1, faults=plan,
+                         on_tower_failure="degrade")
+    fa = eng.submit(SearchRequest(tokens=corpus[3], quota=12, k=5))
+    _wait_for(lambda: eng.counters().queue_depth == 0
+              and eng.counters().submitted == 1, what="A popped")
+    fb = eng.submit(SearchRequest(tokens=corpus[40], quota=8, k=5,
+                                  deadline_ms=30.0))
+    with pytest.raises(DeadlineExceeded):
+        fb.result(timeout=300)
+    fa.result(timeout=300)
+    assert eng.counters().deadline_misses == 1
+    eng.close()
+
+
+def test_midflight_deadline_degrades_during_hung_drain(engine_parts):
+    """A deadline that expires while a tower drain hangs resolves the slot
+    mid-flight with its proxy ranking (degraded=True), *before* the drain
+    returns; the co-resident deadline-free slot is bit-exact vs the
+    fault-free run."""
+    cheap, expensive, corpus = engine_parts
+    ref = BiMetricEngine(cheap, expensive, corpus).query(
+        SearchRequest(tokens=corpus[3], quota=24, k=5))
+    # entry drain (call 0) clean; every later drain hangs 0.5 s
+    plan = FaultPlan(seed=0, drain=FaultSpec(rate=1.0, mode="hang",
+                                             hang_s=0.5, after=1))
+    eng = BiMetricEngine(cheap, expensive, corpus, slots=2, faults=plan,
+                         on_tower_failure="degrade")
+    fa = eng.submit(SearchRequest(tokens=corpus[3], quota=24, k=5))
+    fb = eng.submit(SearchRequest(tokens=corpus[40], quota=24, k=5,
+                                  deadline_ms=120.0))
+    t0 = time.monotonic()
+    rb = fb.result(timeout=300)
+    tb = time.monotonic() - t0
+    assert rb.stats.degraded and rb.ids.size > 0
+    ra = fa.result(timeout=300)
+    assert not ra.stats.degraded
+    assert np.array_equal(ra.ids, ref.ids)
+    np.testing.assert_array_equal(ra.dists, ref.dists)
+    assert ra.stats.D_calls == ref.stats.D_calls
+    c = eng.counters()
+    assert c.deadline_misses >= 1 and c.degraded >= 1
+    # B resolved from inside a hung drain, not after the full search
+    assert tb < 60.0
+    eng.close()
+
+
+def test_midflight_deadline_fail_policy(engine_parts):
+    """Same mid-flight expiry under 'fail': DeadlineExceeded, co-resident
+    slot still bit-exact."""
+    cheap, expensive, corpus = engine_parts
+    ref = BiMetricEngine(cheap, expensive, corpus).query(
+        SearchRequest(tokens=corpus[3], quota=24, k=5))
+    plan = FaultPlan(seed=0, drain=FaultSpec(rate=1.0, mode="hang",
+                                             hang_s=0.5, after=1))
+    eng = BiMetricEngine(cheap, expensive, corpus, slots=2, faults=plan,
+                         on_tower_failure="fail")
+    fa = eng.submit(SearchRequest(tokens=corpus[3], quota=24, k=5))
+    fb = eng.submit(SearchRequest(tokens=corpus[40], quota=24, k=5,
+                                  deadline_ms=120.0))
+    with pytest.raises(DeadlineExceeded):
+        fb.result(timeout=300)
+    ra = fa.result(timeout=300)
+    assert np.array_equal(ra.ids, ref.ids)
+    assert eng.counters().deadline_misses >= 1
+    eng.close()
+
+
+def test_deadline_priority_refill_order(engine_parts):
+    """Deadline x priority in the refill heap: at equal priority the
+    sooner deadline admits first into a freed slot; results match the
+    fault-free solo runs and no miss is counted."""
+    cheap, expensive, corpus = engine_parts
+    plan = FaultPlan(seed=0, drain=FaultSpec(rate=1.0, mode="hang",
+                                             hang_s=0.25))
+    eng = BiMetricEngine(cheap, expensive, corpus, slots=1, faults=plan)
+    order: list[str] = []
+    fa = eng.submit(SearchRequest(tokens=corpus[3], quota=12, k=5))
+    _wait_for(lambda: eng.counters().queue_depth == 0
+              and eng.counters().submitted == 1, what="A popped")
+    fb = eng.submit(SearchRequest(tokens=corpus[40], quota=8, k=5,
+                                  deadline_ms=60_000.0))
+    fc = eng.submit(SearchRequest(tokens=corpus[77], quota=8, k=5,
+                                  deadline_ms=30_000.0))
+    fb.add_done_callback(lambda f: order.append("B"))
+    fc.add_done_callback(lambda f: order.append("C"))
+    rb, rc = fb.result(timeout=300), fc.result(timeout=300)
+    fa.result(timeout=300)
+    eng.close()
+    assert order == ["C", "B"]  # sooner deadline refilled the slot first
+    solo = BiMetricEngine(cheap, expensive, corpus)
+    sb = solo.query(SearchRequest(tokens=corpus[40], quota=8, k=5))
+    sc = solo.query(SearchRequest(tokens=corpus[77], quota=8, k=5))
+    assert np.array_equal(rb.ids, sb.ids)
+    assert np.array_equal(rc.ids, sc.ids)
+    assert eng.counters().deadline_misses == 0
+
+
+def test_drain_timeout_gives_up_without_retry(engine_parts):
+    """A drain hung past drain_timeout_ms becomes TowerTimeout -> the
+    resident request fails (policy 'fail') while the lane finishes the
+    hung call in the background; the engine serves afterwards."""
+    cheap, expensive, corpus = engine_parts
+    plan = FaultPlan(seed=0, drain=FaultSpec(rate=1.0, mode="hang",
+                                             hang_s=0.8))
+    eng = BiMetricEngine(cheap, expensive, corpus, slots=1, faults=plan,
+                         drain_timeout_ms=150.0)
+    f = eng.submit(SearchRequest(tokens=corpus[3], quota=12, k=5))
+    with pytest.raises(TowerFailure):  # TowerTimeout is a TowerFailure
+        f.result(timeout=300)
+    assert eng.counters().retries == 0  # timeouts are never retried inline
+    plan.heal()
+    time.sleep(1.0)  # the hung call finishes in the lane's background
+    got = eng.submit(SearchRequest(tokens=corpus[40], quota=12, k=5)
+                     ).result(timeout=300)
+    ref = BiMetricEngine(cheap, expensive, corpus).query(
+        SearchRequest(tokens=corpus[40], quota=12, k=5))
+    assert np.array_equal(got.ids, ref.ids)
+    eng.close()
+
+
+# ------------------------------------------------------- interrupts + close
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_keyboard_interrupt_reraised_not_served(engine_parts):
+    """An injected KeyboardInterrupt in the tower lane fails the resident
+    futures (EngineFailure chaining the interrupt) and kills both loops —
+    it is never swallowed into a served answer."""
+    cheap, expensive, corpus = engine_parts
+    plan = FaultPlan(seed=0, drain=FaultSpec(rate=1.0, mode="persistent",
+                                             exc=KeyboardInterrupt))
+    eng = BiMetricEngine(cheap, expensive, corpus, slots=1, faults=plan)
+    f = eng.submit(SearchRequest(tokens=corpus[3], quota=12, k=5))
+    with pytest.raises(EngineFailure) as ei:
+        f.result(timeout=300)
+    assert isinstance(ei.value.__cause__, KeyboardInterrupt)
+    _wait_for(lambda: all(not t.is_alive() for t in eng._threads),
+              what="loops honored the interrupt")
+    eng.close(timeout=5.0)  # threads already dead: join is immediate
+
+
+class _GatedTower:
+    """Expensive-tower wrapper whose forward passes block on an Event."""
+
+    def __init__(self, inner: EmbedTower):
+        self.inner = inner
+        self.gate = threading.Event()
+        self.gate.set()
+
+    def embed(self, tokens, batch: int = 64):
+        assert self.gate.wait(120), "gate never released"
+        return self.inner.embed(tokens, batch)
+
+
+def test_close_raises_on_stuck_drive(engine_parts):
+    """close(timeout=) with the drive thread wedged inside a tower call
+    raises instead of returning silently with a live thread."""
+    cheap, expensive, corpus = engine_parts
+    gated = _GatedTower(expensive)
+    eng = BiMetricEngine(cheap, gated, corpus, slots=1)
+    gated.gate.clear()
+    f = eng.submit(SearchRequest(tokens=corpus[3], quota=12, k=5))
+    _wait_for(lambda: eng.counters().queue_depth == 0
+              and eng.counters().submitted == 1, what="A popped")
+    with pytest.raises(RuntimeError, match="failed to join"):
+        eng.close(timeout=0.3)
+    gated.gate.set()
+    f.result(timeout=300)
+    _wait_for(lambda: all(not t.is_alive() for t in eng._threads),
+              what="threads drained after release")
+    eng.close()  # idempotent second close: immediate no-op
+
+
+def test_concurrent_submit_close_stress(engine_parts):
+    """Multi-threaded submit racing close(): every future either resolves,
+    is cancelled, or the submit itself raised (pool closed) — nothing
+    hangs, nothing is silently dropped."""
+    cheap, expensive, corpus = engine_parts
+    eng = BiMetricEngine(cheap, expensive, corpus, slots=2)
+    futs: list = []
+    mu = threading.Lock()
+    rejected = [0]
+    stop = threading.Event()
+
+    def pump(seed):
+        rng = np.random.default_rng(seed)
+        while not stop.is_set():
+            try:
+                f = eng.submit(SearchRequest(
+                    tokens=corpus[int(rng.integers(0, corpus.shape[0]))],
+                    quota=6, k=3))
+                with mu:
+                    futs.append(f)
+            except RuntimeError:
+                rejected[0] += 1
+                return
+            time.sleep(0.001)
+
+    threads = [threading.Thread(target=pump, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    _wait_for(lambda: len(futs) >= 8, what="submissions flowing")
+    eng.close()
+    stop.set()
+    for t in threads:
+        t.join(timeout=60)
+        assert not t.is_alive()
+    resolved = cancelled = 0
+    for f in futs:
+        try:
+            r = f.result(timeout=120)
+            assert r.stats.D_calls >= 0
+            resolved += 1
+        except cf.CancelledError:
+            cancelled += 1
+    assert resolved + cancelled == len(futs)
+    c = eng.counters()
+    assert c.completed == resolved and c.cancelled == cancelled
+    with pytest.raises(RuntimeError):
+        eng.submit(SearchRequest(tokens=corpus[0], quota=5))
+
+
+# -------------------------------------------------------------------- sharded
+def _run(body: str) -> str:
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp
+        import numpy as np
+    """) + textwrap.dedent(body)
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=ROOT, timeout=900)
+    assert res.returncode == 0, res.stderr[-3000:]
+    return res.stdout
+
+
+@pytest.mark.slow
+def test_sharded_chaos_parity():
+    """shards in {1, 2, 4} with 10% transient drain faults: every request
+    resolves bit-exact vs the fault-free unsharded reference (retry
+    recovery is invisible at any shard count), and the fault stream
+    actually fired."""
+    out = _run("""
+        from repro.configs import qwen3_0_6b
+        from repro.models import transformer as T
+        from repro.serve import (BiMetricEngine, EmbedTower, FaultPlan,
+                                 FaultSpec, SearchRequest)
+        key = jax.random.PRNGKey(0)
+        cheap_cfg = qwen3_0_6b.smoke()
+        exp_cfg = T.TransformerConfig(
+            name="exp-smoke", n_layers=2, d_model=64, n_heads=4,
+            n_kv_heads=4, head_dim=16, d_ff=128, vocab=cheap_cfg.vocab,
+            embed_dim=32)
+        cheap = EmbedTower(T.init_params(key, cheap_cfg), cheap_cfg)
+        expensive = EmbedTower(
+            T.init_params(jax.random.fold_in(key, 1), exp_cfg), exp_cfg)
+        corpus = np.random.default_rng(0).integers(
+            0, cheap_cfg.vocab, (97, 10), dtype=np.int32)
+        rows = [3, 40, 77, 12, 55]
+        quotas = [6, 15, 9, 11, 15]
+        reqs = [SearchRequest(tokens=corpus[r], quota=q, k=5)
+                for r, q in zip(rows, quotas)]
+        base = BiMetricEngine(cheap, expensive, corpus)
+        ref = base.query_batch(reqs)
+        fired_total = 0
+        for s in (1, 2, 4):
+            plan = FaultPlan(seed=13, drain=FaultSpec(rate=0.10))
+            eng = BiMetricEngine(cheap, expensive, corpus, shards=s,
+                                 slots=2, faults=plan,
+                                 retry_backoff_ms=1.0)
+            futs = [eng.submit(r) for r in reqs]
+            for i, f in enumerate(futs):
+                got = f.result(timeout=600)
+                assert np.array_equal(got.ids, ref[i].ids), (s, i)
+                np.testing.assert_array_equal(got.dists, ref[i].dists)
+                assert got.stats.D_calls == ref[i].stats.D_calls, (s, i)
+                assert not got.stats.degraded
+            c = eng.counters()
+            assert c.completed == len(reqs) and c.slot_occupancy == 0
+            assert c.retries >= plan.fired("drain")
+            fired_total += plan.fired("drain")
+            eng.close()
+        assert fired_total > 0, "fault stream never fired; raise the rate"
+        print("SHARDED_CHAOS_OK", fired_total)
+    """)
+    assert "SHARDED_CHAOS_OK" in out
